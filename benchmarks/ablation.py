@@ -1,0 +1,78 @@
+"""Rank/order ablation — the paper's central quality-vs-compression trade.
+
+Trains the SAME tiny LM (same data, same seed) with embedding+head
+representations across the paper's knobs and reports final loss vs parameter
+count: regular, word2ketXS order 2 at ranks {1, 4, 16}, order 4 rank 1, and
+word2ket order 4 rank 1 (Table-1 style). CPU-sized but real training.
+
+Run directly (``python -m benchmarks.ablation``) or via benchmarks.run
+(`ablation` section is opt-in: it trains 6 models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run_one(embedding_kind, order, rank, head_kind, steps=120, seed=0):
+    from repro.configs import get_smoke
+    from repro.core.embedding import embedding_num_params
+    from repro.configs.base import embedding_for, head_for
+    from repro.core.logits import head_num_params
+    from repro.data.synthetic import DataConfig, batch_at
+    from repro.optim.adamw import AdamWConfig, cosine_schedule
+    from repro.train.step import TrainConfig, init_state, make_train_step
+
+    cfg = get_smoke("glm4-9b", dtype=jnp.float32)
+    cfg = dataclasses.replace(
+        cfg, vocab_size=4096, embedding_kind=embedding_kind,
+        embedding_order=order, embedding_rank=rank,
+        head_kind=head_kind, head_order=order, head_rank=max(rank, 1))
+    tcfg = TrainConfig(optimizer=AdamWConfig(
+        lr=5e-3, schedule=cosine_schedule(5e-3, 10, steps)))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=48, global_batch=8,
+                      kind="markov", seed=7)
+    state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    e_params = embedding_num_params(embedding_for(cfg))
+    h_params = head_num_params(head_for(cfg))
+    return float(np.mean(losses[-10:])), e_params + h_params
+
+
+POINTS = [
+    # (label, embedding_kind, order, rank, head_kind)
+    ("regular+dense", "regular", 2, 1, "dense"),
+    ("w2kXS_o2_r1", "word2ketxs", 2, 1, "kron"),
+    ("w2kXS_o2_r4", "word2ketxs", 2, 4, "kron"),
+    ("w2kXS_o2_r16", "word2ketxs", 2, 16, "kron"),
+    ("w2kXS_o4_r1", "word2ketxs", 4, 1, "kron"),
+    ("word2ket_o4_r1", "word2ket", 4, 1, "kron"),
+]
+
+
+def run(report, steps=120):
+    base_loss = None
+    base_params = None
+    for label, kind, order, rank, head in POINTS:
+        t0 = time.time()
+        loss, params = run_one(kind, order, rank, head, steps=steps)
+        dt = time.time() - t0
+        if base_loss is None:
+            base_loss, base_params = loss, params
+        report(f"ablation.{label},{dt*1e6/steps:.0f},"
+               f"loss={loss:.4f};dloss={loss-base_loss:+.4f};"
+               f"embed+head_params={params};saving={base_params/params:.0f}x")
+
+
+if __name__ == "__main__":
+    run(print)

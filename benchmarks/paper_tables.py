@@ -1,0 +1,118 @@
+"""Exact reproduction of the paper's Tables 1–3 (#Params / space-saving-rate
+columns — these are arithmetic and must match to the digit) + the
+quality-proxy convergence runs recorded in EXPERIMENTS.md.
+
+Vocab sizes are derived from the paper's own "Regular" rows:
+  GIGAWORD: 7,789,568 / 256 = 30,428;  IWSLT14: 8,194,816 / 256 = 32,011;
+  SQuAD/DrQA: 35,596,500 / 300 = 118,655 (stated in §4).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.embedding import EmbeddingConfig, embedding_num_params
+
+
+def _row(name, cfg, regular_params):
+    n = embedding_num_params(cfg)
+    rate = regular_params / n
+    return name, n, rate
+
+
+def table1_gigaword():
+    """Table 1: GIGAWORD summarization embeddings (vocab 30,428)."""
+    d = 30428
+    rows = []
+    reg256 = embedding_num_params(EmbeddingConfig(d, 256, kind="regular"))
+    rows.append(("regular_256", reg256, 1.0, 7_789_568))
+    cfg = EmbeddingConfig(d, 256, kind="word2ket", order=4, rank=1, q_dims=(4,) * 4)
+    rows.append(("word2ket_4-1_256", embedding_num_params(cfg),
+                 reg256 / embedding_num_params(cfg), 486_848))
+    cfg = EmbeddingConfig(d, 400, kind="word2ketxs", order=2, rank=10,
+                          q_dims=(20, 20), t_dims=(175, 175))
+    rows.append(("word2ketxs_2-10_400", embedding_num_params(cfg),
+                 reg256 / embedding_num_params(cfg), 70_000))
+    cfg = EmbeddingConfig(d, 256, kind="word2ketxs", order=4, rank=1,
+                          q_dims=(4,) * 4, t_dims=(14,) * 4)
+    rows.append(("word2ketxs_4-1_256", embedding_num_params(cfg),
+                 reg256 / embedding_num_params(cfg), 224))
+    reg8000 = embedding_num_params(EmbeddingConfig(d, 8000, kind="regular"))
+    rows.append(("regular_8000", reg8000, 1.0, 243_424_000))
+    # Paper row says "2/10" but 19,200 is only achievable at ORDER 3:
+    # 10·3·20·32 = 19,200 with q=20³=8000 (exact) and t=32³=32,768 ≥ 30,428 —
+    # same (q=?,t=32) pattern as Table 2's 3/10 row. We reproduce the paper's
+    # number with order 3 and flag the Table-1 "2/10" as a typo.
+    cfg = EmbeddingConfig(d, 8000, kind="word2ketxs", order=3, rank=10,
+                          q_dims=(20, 20, 20), t_dims=(32, 32, 32))
+    rows.append(("word2ketxs_3-10_8000(paper-typo:2/10)", embedding_num_params(cfg),
+                 reg8000 / embedding_num_params(cfg), 19_200))
+    return rows
+
+
+def table2_iwslt():
+    """Table 2: IWSLT14 DE-EN embeddings (vocab 32,011)."""
+    d = 32011
+    reg = embedding_num_params(EmbeddingConfig(d, 256, kind="regular"))
+    rows = [("regular_256", reg, 1.0, 8_194_816)]
+    for name, order, rank, dim, q, t, paper in [
+        ("word2ketxs_2-30_400", 2, 30, 400, (20, 20), (179, 179), 214_800),
+        ("word2ketxs_2-10_400", 2, 10, 400, (20, 20), (179, 179), 71_600),
+        ("word2ketxs_3-10_1000", 3, 10, 1000, (10, 10, 10), (32, 32, 32), 9_600),
+    ]:
+        cfg = EmbeddingConfig(d, dim, kind="word2ketxs", order=order, rank=rank,
+                              q_dims=q, t_dims=t)
+        rows.append((name, embedding_num_params(cfg),
+                     reg / embedding_num_params(cfg), paper))
+    return rows
+
+
+def table3_squad():
+    """Table 3: SQuAD DrQA embeddings (vocab 118,655, p=300)."""
+    d, p = 118655, 300
+    reg = embedding_num_params(EmbeddingConfig(d, p, kind="regular"))
+    rows = [("regular_300", reg, 1.0, 35_596_500)]
+    for name, order, rank, q, t, paper in [
+        ("word2ketxs_2-2_300", 2, 2, (18, 18), (345, 345), 24_840),
+        ("word2ketxs_4-1_300", 4, 1, (5, 5, 5, 5), (19, 19, 19, 19), 380),
+    ]:
+        cfg = EmbeddingConfig(d, p, kind="word2ketxs", order=order, rank=rank,
+                              q_dims=q, t_dims=t)
+        rows.append((name, embedding_num_params(cfg),
+                     reg / embedding_num_params(cfg), paper))
+    return rows
+
+
+def assigned_arch_compression():
+    """Beyond-paper: embedding+head compression for the 10 assigned archs."""
+    from repro.configs import ARCHS, get_config
+    from repro.configs.base import embedding_for, head_for
+    from repro.core.logits import head_num_params
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ecfg = embedding_for(cfg)
+        regular = cfg.vocab_size * cfg.d_model
+        comp = embedding_num_params(ecfg)
+        hcomp = head_num_params(head_for(cfg))
+        rows.append((arch, regular, comp, regular / comp, hcomp, 2 * regular / (comp + hcomp)))
+    return rows
+
+
+def run(report):
+    for fn, cols in [
+        (table1_gigaword, ("config", "params", "saving_rate", "paper_params")),
+        (table2_iwslt, ("config", "params", "saving_rate", "paper_params")),
+        (table3_squad, ("config", "params", "saving_rate", "paper_params")),
+    ]:
+        t0 = time.perf_counter()
+        rows = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        for r in rows:
+            match = "EXACT" if r[1] == r[3] else f"ours={r[1]}"
+            report(f"{fn.__name__}.{r[0]},{us/len(rows):.1f},"
+                   f"params={r[1]};saving={r[2]:.0f}x;paper={r[3]};{match}")
+    for arch, reg, comp, rate, hcomp, both in assigned_arch_compression():
+        report(f"arch_compression.{arch},0.0,"
+               f"regular={reg};w2kxs={comp};saving={rate:.0f}x;head={hcomp};embed+head={both:.0f}x")

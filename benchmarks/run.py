@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table + framework benchmarks.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract). Sections:
+  * paper_tables — Tables 1–3 #Params/space-saving, exact reproduction
+  * timing — lookup/CE/kernel/train-step microbenches (CPU wall clock)
+  * roofline — three-term roofline per dry-run cell (reads results/dryrun)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    def report(line: str) -> None:
+        print(line, flush=True)
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import paper_tables
+    paper_tables.run(report)
+
+    only = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if only in ("all", "timing"):
+        from benchmarks import timing
+        timing.run(report)
+    if only in ("all", "ablation"):
+        from benchmarks import ablation
+        ablation.run(report)
+    if only in ("all", "roofline"):
+        from benchmarks import roofline
+        roofline.run(report)
+
+
+if __name__ == "__main__":
+    main()

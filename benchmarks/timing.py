@@ -1,0 +1,104 @@
+"""Wall-clock micro-benchmarks (CPU container — relative numbers, not TPU).
+
+One function per measured claim:
+  * embedding lookup: regular vs word2ket vs word2ketXS (the paper's
+    "more complex processing" cost, §4 timing discussion);
+  * fused streamed CE vs naive materialized CE (memory-win compute cost);
+  * per-family smoke train-step and decode-step latency.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, n=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_lookup(report):
+    from repro.core.embedding import EmbeddingConfig, embed_lookup, init_embedding
+    d, p, B = 50_000, 256, 4096
+    ids = jax.random.randint(jax.random.PRNGKey(0), (B,), 0, d)
+    for kind, kw in [
+        ("regular", {}),
+        ("word2ket", dict(order=4, rank=1)),
+        ("word2ketxs", dict(order=2, rank=10)),
+        ("word2ketxs_o4", dict(kind_name="word2ketxs", order=4, rank=1)),
+    ]:
+        kname = kw.pop("kind_name", kind)
+        cfg = EmbeddingConfig(d, p, kind=kname, **kw)
+        params = init_embedding(jax.random.PRNGKey(1), cfg)
+        f = jax.jit(lambda pr, i: embed_lookup(cfg, pr, i))
+        us = _timeit(f, params, ids)
+        from repro.core.embedding import embedding_num_params
+        report(f"lookup.{kind},{us:.1f},params={embedding_num_params(cfg)};batch={B}")
+
+
+def bench_pallas_kernels(report):
+    from repro.kernels.kron_gather.ops import kron_gather
+    from repro.kernels.kron_gather.ref import kron_gather_ref
+    key = jax.random.PRNGKey(2)
+    factors = [jax.random.normal(jax.random.fold_in(key, j), (2, 64, 64)) for j in range(2)]
+    ids = jax.random.randint(key, (1024,), 0, 64 * 64)
+    f_k = jax.jit(lambda fs, i: kron_gather(fs, i, 4096, True, 256))
+    f_r = jax.jit(lambda fs, i: kron_gather_ref(fs, i, embed_dim=4096))
+    report(f"kron_gather.pallas_interpret,{_timeit(f_k, factors, ids, n=5):.1f},interpret-mode")
+    report(f"kron_gather.xla_ref,{_timeit(f_r, factors, ids):.1f},compiled-ref")
+
+
+def bench_fused_ce(report):
+    from repro.core.logits import HeadConfig, head_ce_loss, head_logits, init_head
+    cfg = HeadConfig(vocab_size=50_000, embed_dim=512, kind="kron", order=2, rank=8,
+                     vocab_tile=4)
+    params = init_head(jax.random.PRNGKey(3), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(4), (2048, 512))
+    y = jax.random.randint(jax.random.PRNGKey(5), (2048,), 0, 50_000)
+    fused = jax.jit(lambda p, hh: head_ce_loss(cfg, p, hh, y))
+
+    def naive(p, hh):
+        logits = head_logits(cfg, p, hh)
+        return jnp.mean(jax.nn.logsumexp(logits, -1)
+                        - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+
+    naive_j = jax.jit(naive)
+    report(f"fused_ce.streamed,{_timeit(fused, params, h, n=5):.1f},no-logits-buffer")
+    report(f"fused_ce.naive,{_timeit(naive_j, params, h, n=5):.1f},"
+           f"logits={2048 * 50_000 * 4 / 1e6:.0f}MB")
+
+
+def bench_smoke_steps(report):
+    from repro.configs import ARCHS, get_smoke
+    from repro.data.synthetic import DataConfig, batch_at
+    from repro.models import model as MD
+    from repro.train.step import TrainConfig, init_state, make_train_step
+
+    for arch in ARCHS:
+        cfg = get_smoke(arch, dtype=jnp.float32)
+        tcfg = TrainConfig()
+        state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+        batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros((4, cfg.vision_prefix, cfg.d_model))
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jnp.zeros((4, cfg.enc_seq, cfg.d_model))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        us = _timeit(step, state, batch, n=5, warmup=2)
+        report(f"train_step.{arch},{us:.1f},smoke-config")
+
+
+def run(report):
+    bench_lookup(report)
+    bench_pallas_kernels(report)
+    bench_fused_ce(report)
+    bench_smoke_steps(report)

@@ -1,0 +1,171 @@
+"""Paper-faithful reproduction run: RNN seq2seq with attention (the paper's
+GIGAWORD/IWSLT architecture family, §4) comparing REGULAR vs word2ketXS
+embeddings on a synthetic compressible-summarization task.
+
+The paper's claim being validated: a >100x-compressed embedding matrix
+changes the downstream loss/metric only marginally and leaves training
+dynamics "largely unchanged" (paper Fig. 2). We train the same GRU
+encoder-decoder from the same init with (a) a regular d×p embedding and
+(b) a word2ketXS order-2 rank-10 embedding (the paper's 111x row), on data
+where the target is a deterministic function of the source (keyword
+extraction: emit source tokens above a threshold id, in order).
+
+    PYTHONPATH=src python examples/paper_seq2seq.py [--steps 300]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import (EmbeddingConfig, embed_lookup,
+                                  embedding_num_params, init_embedding)
+from repro.models.common import dense_init
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+VOCAB = 4000
+P_DIM = 64
+HID = 128
+SRC_LEN, TGT_LEN = 24, 8
+KEY_THRESHOLD = VOCAB - 400  # tokens above this are "keywords"
+
+
+def make_batch(rng: np.random.Generator, batch: int):
+    src = rng.integers(1, KEY_THRESHOLD, size=(batch, SRC_LEN))
+    n_keys = rng.integers(1, TGT_LEN, size=batch)
+    for i in range(batch):
+        pos = rng.choice(SRC_LEN, size=n_keys[i], replace=False)
+        src[i, np.sort(pos)] = rng.integers(KEY_THRESHOLD, VOCAB, size=n_keys[i])
+    tgt = np.zeros((batch, TGT_LEN), np.int64)
+    for i in range(batch):
+        keys = src[i][src[i] >= KEY_THRESHOLD][:TGT_LEN]
+        tgt[i, : len(keys)] = keys
+    return jnp.asarray(src, jnp.int32), jnp.asarray(tgt, jnp.int32)
+
+
+def init_model(key, ecfg: EmbeddingConfig):
+    ks = jax.random.split(key, 10)
+    gru = lambda k, din: {
+        "wz": dense_init(jax.random.fold_in(k, 0), (din + HID, HID)),
+        "wr": dense_init(jax.random.fold_in(k, 1), (din + HID, HID)),
+        "wh": dense_init(jax.random.fold_in(k, 2), (din + HID, HID)),
+    }
+    return {
+        "embed": init_embedding(ks[0], ecfg),
+        "enc_fwd": gru(ks[1], P_DIM),
+        "enc_bwd": gru(ks[2], P_DIM),
+        "dec": gru(ks[3], P_DIM + 2 * HID),
+        "attn_w": dense_init(ks[4], (HID, 2 * HID)),
+        "out": dense_init(ks[5], (HID + 2 * HID, VOCAB)),
+    }
+
+
+def gru_step(p, x, h):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"])
+    r = jax.nn.sigmoid(xh @ p["wr"])
+    xh2 = jnp.concatenate([x, r * h], axis=-1)
+    hh = jnp.tanh(xh2 @ p["wh"])
+    return (1 - z) * h + z * hh
+
+
+def run_gru(p, xs, reverse=False):
+    B = xs.shape[0]
+    h0 = jnp.zeros((B, HID))
+
+    def body(h, x):
+        h = gru_step(p, x, h)
+        return h, h
+
+    xs_t = jnp.moveaxis(xs, 0, 1)[::-1] if reverse else jnp.moveaxis(xs, 0, 1)
+    _, hs = jax.lax.scan(body, h0, xs_t)
+    hs = hs[::-1] if reverse else hs
+    return jnp.moveaxis(hs, 0, 1)  # (B, S, HID)
+
+
+def forward_loss(params, ecfg, src, tgt):
+    x = embed_lookup(ecfg, params["embed"], src)  # (B, S, P)
+    enc = jnp.concatenate([run_gru(params["enc_fwd"], x),
+                           run_gru(params["enc_bwd"], x, reverse=True)], axis=-1)
+    B = src.shape[0]
+    y_in = jnp.concatenate([jnp.zeros((B, 1), jnp.int32), tgt[:, :-1]], axis=1)
+    y_emb = embed_lookup(ecfg, params["embed"], y_in)  # (B, T, P)
+    h0 = jnp.zeros((B, HID))
+    ctx0 = jnp.zeros((B, 2 * HID))
+
+    def body(carry, y_t):
+        h, ctx = carry
+        inp = jnp.concatenate([y_t, ctx], axis=-1)
+        h = gru_step(params["dec"], inp, h)
+        scores = jnp.einsum("bh,hk,bsk->bs", h, params["attn_w"], enc)  # Luong general
+        alpha = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bs,bsk->bk", alpha, enc)
+        logits = jnp.concatenate([h, ctx], axis=-1) @ params["out"]
+        return (h, ctx), logits
+
+    _, logits = jax.lax.scan(body, (h0, ctx0), jnp.moveaxis(y_emb, 0, 1))
+    logits = jnp.moveaxis(logits, 0, 1)  # (B, T, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == tgt).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+def train(ecfg: EmbeddingConfig, steps: int, seed: int = 0, label: str = ""):
+    params = init_model(jax.random.PRNGKey(seed), ecfg)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.01)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, src, tgt):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: forward_loss(p, ecfg, src, tgt), has_aux=True)(params)
+        params, opt, _ = adamw_update(ocfg, grads, opt, params)
+        return params, opt, loss, acc
+
+    rng = np.random.default_rng(1234)  # same data for both runs
+    losses, accs = [], []
+    t0 = time.time()
+    for i in range(steps):
+        src, tgt = make_batch(rng, 32)
+        params, opt, loss, acc = step(params, opt, src, tgt)
+        losses.append(float(loss))
+        accs.append(float(acc))
+        if i % 50 == 0:
+            print(f"  [{label}] step {i:4d} loss {loss:.4f} acc {acc:.3f}")
+    dt = time.time() - t0
+    return {"final_loss": float(np.mean(losses[-20:])),
+            "final_acc": float(np.mean(accs[-20:])),
+            "params": embedding_num_params(ecfg), "time_s": dt}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    regular = EmbeddingConfig(VOCAB, P_DIM, kind="regular")
+    w2kxs = EmbeddingConfig(VOCAB, P_DIM, kind="word2ketxs", order=2, rank=10)
+
+    print(f"regular embedding params : {embedding_num_params(regular):,}")
+    print(f"word2ketXS (2/10) params : {embedding_num_params(w2kxs):,} "
+          f"({embedding_num_params(regular)/embedding_num_params(w2kxs):.0f}x)")
+
+    print("\n-- regular --")
+    r1 = train(regular, args.steps, label="regular")
+    print("\n-- word2ketXS --")
+    r2 = train(w2kxs, args.steps, label="w2kXS")
+
+    print("\n== paper-claim check (quality parity under >100x compression) ==")
+    print(f"regular   : loss {r1['final_loss']:.4f}  acc {r1['final_acc']:.3f}  "
+          f"({r1['time_s']:.0f}s)")
+    print(f"word2ketXS: loss {r2['final_loss']:.4f}  acc {r2['final_acc']:.3f}  "
+          f"({r2['time_s']:.0f}s)  [paper: ~0.5-2pt metric drop at 100x+]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: word2ketXS in 60 seconds.
+
+Builds the paper's flagship compression (Table 1's 111x row), shows the lazy
+lookup, trains a tiny LM with a compressed embedding + kron head, and prints
+the parameter ledger.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import (EmbeddingConfig, embed_lookup,
+                                  embedding_num_params, init_embedding)
+
+
+def demo_embedding():
+    print("== word2ketXS embedding (paper Table 1, 2/10 @ dim 400) ==")
+    cfg = EmbeddingConfig(vocab_size=30428, embed_dim=400, kind="word2ketxs",
+                          order=2, rank=10, q_dims=(20, 20), t_dims=(175, 175))
+    params = init_embedding(jax.random.PRNGKey(0), cfg)
+    regular = cfg.vocab_size * cfg.embed_dim
+    print(f"regular params : {regular:>12,}")
+    print(f"word2ketXS     : {embedding_num_params(cfg):>12,} "
+          f"({regular / embedding_num_params(cfg):.0f}x smaller)")
+    ids = jnp.array([0, 1, 42, 30427])
+    vecs = embed_lookup(cfg, params, ids)
+    print(f"lookup({list(map(int, ids))}) -> {vecs.shape}, finite={bool(jnp.all(jnp.isfinite(vecs)))}")
+
+
+def demo_tiny_lm():
+    print("\n== tiny LM with compressed embedding + kron head ==")
+    from repro.configs import get_smoke
+    from repro.data.synthetic import DataConfig
+    from repro.models.transformer import param_count
+    from repro.optim.adamw import AdamWConfig, cosine_schedule
+    from repro.train.loop import LoopConfig, train_loop
+    from repro.train.step import TrainConfig
+
+    cfg = get_smoke("qwen3-1.7b", dtype=jnp.float32)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2, schedule=cosine_schedule(1e-2, 5, 50)))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    out = train_loop(cfg, tcfg, dcfg, LoopConfig(total_steps=50, log_every=10))
+    print(f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} in 50 steps")
+    print(f"total params: {param_count(out['state']['params']):,} "
+          f"(embedding+head are ~KBs, not vocab x d)")
+
+
+if __name__ == "__main__":
+    demo_embedding()
+    demo_tiny_lm()

@@ -1,0 +1,6 @@
+"""repro: word2ket / word2ketXS (ICLR 2020) as a production multi-pod JAX framework.
+
+Subpackages: core (the paper's contribution), kernels (Pallas TPU), models,
+configs (10 assigned architectures), data/optim/train/serve (substrate),
+parallel (sharding/pipeline), launch (mesh/dryrun/train/serve drivers).
+"""

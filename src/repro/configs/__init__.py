@@ -1,0 +1,49 @@
+"""Architecture registry: the 10 assigned (arch × shape) configs.
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+returns the reduced same-family config used by CPU smoke tests. Embedding /
+head representation can be overridden (paper-faithful baseline vs regular).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeSpec  # noqa: F401
+
+_MODULES = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "granite-20b": "granite_20b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "glm4-9b": "glm4_9b",
+    "granite-3-2b": "granite_3_2b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "whisper-base": "whisper_base",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _load(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    cfg = _load(name).CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke(name: str, **overrides) -> ModelConfig:
+    cfg = _load(name).SMOKE
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def paper_baseline(cfg: ModelConfig) -> ModelConfig:
+    """The regular-embedding baseline the paper compares against."""
+    return dataclasses.replace(cfg, embedding_kind="regular", head_kind="dense")

@@ -1,0 +1,163 @@
+"""Config dataclasses for models, embeddings, meshes, and input shapes."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core.embedding import EmbeddingConfig
+from repro.core.logits import HeadConfig
+
+__all__ = ["ModelConfig", "ShapeSpec", "LM_SHAPES", "embedding_for", "head_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config per assigned architecture (exact published dims)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # attention flavor
+    attn_kind: str = "full"  # full | local
+    local_window: int = 2048
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+
+    # MLP flavor
+    mlp_type: str = "swiglu"  # swiglu | gelu | geglu
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: Any = jnp.float32
+
+    # MLA (DeepSeek-style latent attention)
+    mla: bool = False
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+
+    # SSM (mamba-1)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    # hybrid layer pattern, e.g. ("rglru", "rglru", "local_attn"); empty =>
+    # uniform pattern derived from family
+    layer_pattern: tuple[str, ...] = ()
+
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500  # precomputed audio-frame embeddings (conv frontend STUB)
+
+    # VLM (phi-3-vision): precomputed patch embeddings (CLIP frontend STUB)
+    vision_prefix: int = 0
+
+    # embedding & head representation (the paper's technique)
+    embedding_kind: str = "word2ketxs"  # regular | word2ket | word2ketxs
+    embedding_order: int = 2
+    embedding_rank: int = 32
+    embedding_layernorm: bool = True
+    head_kind: str = "kron"  # dense | kron
+    head_order: int = 2
+    head_rank: int = 32
+    head_vocab_tile: int = 4  # CE streaming tile (t1 digits) — perf knob
+    # token sharding for the streamed CE loss: "data" replicates head compute
+    # across the model axis; "data_model" (§Perf winner: −44% flops on the
+    # 256k-vocab cell) splits tokens over it — sequence-parallel CE.
+    ce_token_shard: str = "data_model"
+
+    # numerics / training
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    # §Perf winner: "dots" saves matmul outputs (−22% step FLOPs vs "full");
+    # paired with microbatches=16 it stays under the 16 GB v5e budget.
+    remat: str = "dots"
+    logit_softcap: float = 0.0
+
+    # perf knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    scan_chunk: int = 256     # SSM/RG-LRU time-chunk size
+    attn_chunk: int = 1024    # flash-attention KV-chunk size
+    ssm_fused_chunks: bool = False  # compute decay/drive per chunk (not whole-S)
+
+    def __post_init__(self):
+        if not self.layer_pattern:
+            pattern = {
+                "dense": ("attn",),
+                "moe": ("moe_attn",),
+                "ssm": ("ssm",),
+                "vlm": ("attn",),
+                "encdec": ("attn",),
+                "hybrid": ("rglru", "rglru", "local_attn"),
+            }[self.family]
+            object.__setattr__(self, "layer_pattern", pattern)
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:  # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return math.ceil(self.d_model / 16)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM / hybrid-with-local-attn)."""
+        kinds = set(self.layer_pattern)
+        return kinds <= {"ssm", "rglru", "local_attn"}
+
+
+def embedding_for(cfg: ModelConfig) -> EmbeddingConfig:
+    return EmbeddingConfig(
+        vocab_size=cfg.vocab_size,
+        embed_dim=cfg.d_model,
+        kind=cfg.embedding_kind,
+        order=cfg.embedding_order,
+        rank=cfg.embedding_rank,
+        use_layernorm=cfg.embedding_layernorm,
+        dtype=cfg.param_dtype,
+    )
+
+
+def head_for(cfg: ModelConfig) -> HeadConfig:
+    return HeadConfig(
+        vocab_size=cfg.vocab_size,
+        embed_dim=cfg.d_model,
+        kind=cfg.head_kind,
+        order=cfg.head_order,
+        rank=cfg.head_rank,
+        vocab_tile=cfg.head_vocab_tile,
+        dtype=cfg.param_dtype,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,47 @@
+"""deepseek-v2-lite-16b [moe] — 27L d_model=2048 16H, MLA kv_lora=512,
+d_ff(expert)=1408, vocab=102400, 2 shared + 64 routed experts, top-6.
+
+[arXiv:2405.04434]. The assignment line lists both "64e top-6" and
+"160 routed"; we follow the primary "64 routed + 2 shared, top-6" (matches
+the HF DeepSeek-V2-Lite config). See DESIGN.md §5.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    mla=True,
+    kv_lora_rank=512,
+    rope_head_dim=64,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-lite-16b-smoke",
+    family="moe",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=48,
+    vocab_size=1024,
+    n_experts=4,
+    n_shared_experts=1,
+    top_k=2,
+    mla=True,
+    kv_lora_rank=16,
+    rope_head_dim=8,
+    embedding_rank=2,
+    head_rank=2,
+)

@@ -1,0 +1,42 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 (attention-free) vocab=65024.
+
+Mamba-1 architecture, ssm_state=16, expand=2 (d_inner=8192), conv=4
+[arXiv:2410.05355]. Attention-free: the word2ketXS technique applies
+unchanged to the embedding/head (see DESIGN.md §Arch-applicability).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    num_layers=64,
+    d_model=4096,
+    num_heads=1,
+    num_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    # §Perf cell D: chunk-local decay/drive (−76% op-level memory bound)
+    ssm_fused_chunks=True,
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-7b-smoke",
+    family="ssm",
+    num_layers=4,
+    d_model=64,
+    num_heads=1,
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=0,
+    vocab_size=1024,
+    ssm_state=4,
+    ssm_conv=4,
+    ssm_expand=2,
+    embedding_rank=2,
+    head_rank=2,
+)

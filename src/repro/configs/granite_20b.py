@@ -1,0 +1,37 @@
+"""granite-20b [dense] — 52L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+
+GPT-BigCode lineage (non-gated GELU MLP, MQA) [arXiv:2405.04324; hf].
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_type="gelu",
+    # largest dense model of the pool: remat="dots" overshoots the 16 GB v5e
+    # budget (26.6 GB temp); full remat keeps it at ~8 GB (§Perf notes)
+    remat="full",
+)
+
+SMOKE = ModelConfig(
+    name="granite-20b-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=256,
+    vocab_size=1024,
+    mlp_type="gelu",
+    embedding_rank=2,
+    head_rank=2,
+)

@@ -1,0 +1,33 @@
+"""granite-3-2b [dense] — 40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155.
+
+[hf:ibm-granite/granite-3.0-2b-base]. Note the non-power-of-two vocab 49155
+exercises the prod(t) > d slicing path of word2ketXS.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49155,
+)
+
+SMOKE = ModelConfig(
+    name="granite-3-2b-smoke",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=256,
+    vocab_size=1027,
+    embedding_rank=2,
+    head_rank=2,
+)

@@ -1,0 +1,40 @@
+"""moonshot-v1-16b-a3b [moe] — 48L d_model=2048 16H (GQA kv=16),
+d_ff(expert)=1408, vocab=163840, 2 shared + 64 routed experts, top-6.
+
+Kimi/Moonlight lineage [hf:moonshotai/Moonlight-16B-A3B]. Standard GQA
+attention (no MLA) distinguishes it from deepseek-v2-lite in the grid.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=163840,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+)
+
+SMOKE = ModelConfig(
+    name="moonshot-v1-16b-a3b-smoke",
+    family="moe",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=48,
+    vocab_size=1024,
+    n_experts=4,
+    n_shared_experts=1,
+    top_k=2,
+    embedding_rank=2,
+    head_rank=2,
+)

@@ -1,0 +1,36 @@
+"""phi-3-vision-4.2b [vlm] — 32L d_model=3072 32H (MHA kv=32) d_ff=8192 vocab=32064.
+
+phi3-mini backbone + CLIP frontend [hf:microsoft/Phi-3-vision-128k-instruct].
+The CLIP/conv frontend is a STUB per the assignment: input_specs() provides
+576 precomputed patch embeddings prepended to the token sequence.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    vision_prefix=576,
+)
+
+SMOKE = ModelConfig(
+    name="phi-3-vision-4.2b-smoke",
+    family="vlm",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=1024,
+    vision_prefix=8,
+    embedding_rank=2,
+    head_rank=2,
+)

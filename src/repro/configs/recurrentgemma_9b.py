@@ -1,0 +1,41 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 2:1 pattern.
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000 [arXiv:2402.19427].
+Largest vocab of the pool: the 256000×4096 embedding (1.05 B params) is the
+paper technique's flagship target.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    mlp_type="geglu",
+    attn_kind="local",
+    local_window=2048,
+    layer_pattern=("rglru", "rglru", "local_attn"),
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-9b-smoke",
+    family="hybrid",
+    num_layers=5,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=1024,
+    mlp_type="geglu",
+    local_window=8,
+    layer_pattern=("rglru", "rglru", "local_attn"),
+    embedding_rank=2,
+    head_rank=2,
+)

@@ -1,0 +1,39 @@
+"""whisper-base [audio] — enc-dec, 6L each, d_model=512 8H d_ff=2048 vocab=51865.
+
+[arXiv:2212.04356]. Conv/mel frontend is a STUB: input_specs() provides 1500
+precomputed audio-frame embeddings to the encoder.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,
+    enc_layers=6,
+    enc_seq=1500,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    mlp_type="gelu",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-base-smoke",
+    family="encdec",
+    num_layers=2,
+    enc_layers=2,
+    enc_seq=16,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=1024,
+    mlp_type="gelu",
+    embedding_rank=2,
+    head_rank=2,
+)

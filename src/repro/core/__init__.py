@@ -1,0 +1,15 @@
+"""Core paper contribution: word2ket / word2ketXS tensorized embeddings."""
+
+from repro.core.embedding import (  # noqa: F401
+    EmbeddingConfig,
+    embed_lookup,
+    embedding_num_params,
+    init_embedding,
+)
+from repro.core.logits import (  # noqa: F401
+    HeadConfig,
+    head_ce_loss,
+    head_logits,
+    head_num_params,
+    init_head,
+)

@@ -1,0 +1,99 @@
+"""Embedding factory: regular (paper baseline), word2ket, word2ketXS.
+
+A single config dataclass + functional init/lookup API so models can switch
+the embedding representation with one config field (``--embedding regular``
+vs ``word2ketxs``), exactly mirroring the paper's experimental comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kron as K
+from repro.core import word2ket as W2K
+from repro.core import word2ketxs as W2KXS
+
+__all__ = ["EmbeddingConfig", "init_embedding", "embed_lookup", "embedding_num_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    """Configuration of a token-embedding representation.
+
+    kind: "regular" | "word2ket" | "word2ketxs"
+    order/rank: tensor order n and rank r (paper eq. 3 / eq. 4); ignored for
+        "regular".
+    q_dims/t_dims: optional explicit factorizations of the embedding axis /
+        vocab axis; derived from (vocab_size, embed_dim, order) when None.
+    use_layernorm: LayerNorm at balanced-tree nodes (paper §2.3). The kron
+        *head* requires a pure (LN-free) embedding — see core/logits.py.
+    """
+
+    vocab_size: int
+    embed_dim: int
+    kind: str = "regular"
+    order: int = 2
+    rank: int = 1
+    q_dims: Optional[tuple[int, ...]] = None
+    t_dims: Optional[tuple[int, ...]] = None
+    use_layernorm: bool = True
+    dtype: Any = jnp.float32
+
+    def resolved_q(self) -> tuple[int, ...]:
+        if self.q_dims is not None:
+            return self.q_dims
+        return K.choose_factorization(self.embed_dim, self.order)
+
+    def resolved_t(self) -> tuple[int, ...]:
+        if self.t_dims is not None:
+            return self.t_dims
+        return K.choose_factorization(self.vocab_size, self.order)
+
+    def __post_init__(self):
+        if self.kind not in ("regular", "word2ket", "word2ketxs"):
+            raise ValueError(f"unknown embedding kind {self.kind!r}")
+        if self.kind != "regular":
+            q = self.resolved_q()
+            if len(q) != self.order or math.prod(q) < self.embed_dim:
+                raise ValueError(f"bad q_dims {q} for p={self.embed_dim}")
+            if self.kind == "word2ketxs":
+                t = self.resolved_t()
+                if len(t) != self.order or math.prod(t) < self.vocab_size:
+                    raise ValueError(f"bad t_dims {t} for d={self.vocab_size}")
+
+
+def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
+    if cfg.kind == "regular":
+        scale = 1.0 / math.sqrt(cfg.embed_dim)
+        table = jax.random.normal(key, (cfg.vocab_size, cfg.embed_dim), cfg.dtype) * scale
+        return {"table": table}
+    if cfg.kind == "word2ket":
+        return W2K.init(key, cfg)
+    return W2KXS.init(key, cfg)
+
+
+def embed_lookup(cfg: EmbeddingConfig, params: dict, ids: jax.Array) -> jax.Array:
+    """ids (...,) int32 -> embeddings (..., embed_dim)."""
+    if cfg.kind == "regular":
+        return jnp.take(params["table"], ids, axis=0)
+    if cfg.kind == "word2ket":
+        return W2K.lookup(cfg, params, ids)
+    return W2KXS.lookup(cfg, params, ids)
+
+
+def embedding_num_params(cfg: EmbeddingConfig) -> int:
+    """Trainable parameter count — reproduces the paper's #Params columns."""
+    if cfg.kind == "regular":
+        return cfg.vocab_size * cfg.embed_dim
+    q = cfg.resolved_q()
+    if cfg.kind == "word2ket":
+        # d · r · n · q   (paper §2.3; uniform q required)
+        return cfg.vocab_size * cfg.rank * sum(q)
+    t = cfg.resolved_t()
+    # r · Σ_j q_j·t_j   (paper §3.2: r·n·q·t for uniform factors)
+    return cfg.rank * sum(qj * tj for qj, tj in zip(q, t))

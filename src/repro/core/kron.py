@@ -1,0 +1,192 @@
+"""Kronecker / tensor-product algebra underlying word2ket and word2ketXS.
+
+Implements the math of paper §2.1–§3.1:
+  - mixed-radix index decomposition (lazy row/column indexing of a Kronecker
+    product: ``col_i(⊗_j F_j) = ⊗_j col_{i_j}(F_j)``),
+  - batched Kronecker products of vectors evaluated over a *balanced binary
+    tree* (paper §2.3, Figure 1) with optional non-affine LayerNorm at each
+    tree node (the paper's trainability fix),
+  - factorization helpers that choose per-factor dims ``q_j`` (embedding axis)
+    and ``t_j`` (vocab axis) such that ``prod(q) >= p`` and ``prod(t) >= d``.
+
+Everything here is shape-polymorphic pure JAX, differentiable, and used by
+both the reference implementations and as the oracle for the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "mixed_radix_digits",
+    "mixed_radix_recompose",
+    "layernorm",
+    "kron_vectors",
+    "kron_vectors_tree",
+    "kron_matrix",
+    "factorize_dim",
+    "choose_factorization",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mixed-radix indexing
+# ---------------------------------------------------------------------------
+
+def mixed_radix_digits(ids: jax.Array, radices: Sequence[int]) -> list[jax.Array]:
+    """Decompose integer ids into mixed-radix digits (most-significant first).
+
+    ``ids`` in ``[0, prod(radices))``; returns ``n`` arrays of the same shape
+    as ``ids`` with ``digit_j in [0, radices[j])`` such that
+    ``ids = sum_j digit_j * prod(radices[j+1:])``.
+
+    This is exactly the index map of lazy Kronecker row/column extraction
+    (paper §3.2): entry ``i`` of ``⊗_j F_j`` along an axis touches entry
+    ``i_j`` of factor ``j`` along that axis.
+    """
+    digits = []
+    rem = ids
+    for j in range(len(radices)):
+        base = int(math.prod(radices[j + 1:]))
+        digits.append((rem // base).astype(ids.dtype))
+        rem = rem % base
+    return digits
+
+
+def mixed_radix_recompose(digits: Sequence[jax.Array], radices: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`mixed_radix_digits`."""
+    out = jnp.zeros_like(digits[0])
+    for j, d in enumerate(digits):
+        base = int(math.prod(radices[j + 1:]))
+        out = out + d * base
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (non-affine — paper's #Params tables imply no LN parameters)
+# ---------------------------------------------------------------------------
+
+def layernorm(x: jax.Array, axis: int = -1, eps: float = 1e-5) -> jax.Array:
+    """Non-affine LayerNorm used at the balanced-tree nodes (paper §2.3)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    var = jnp.var(x, axis=axis, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+# ---------------------------------------------------------------------------
+# Balanced-tree Kronecker products of (batched) vectors
+# ---------------------------------------------------------------------------
+
+def _pairwise_kron(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Kron of the trailing axes: (..., m), (..., n) -> (..., m*n)."""
+    out = a[..., :, None] * b[..., None, :]
+    return out.reshape(*out.shape[:-2], a.shape[-1] * b.shape[-1])
+
+
+def kron_vectors(vs: Sequence[jax.Array]) -> jax.Array:
+    """Plain left-to-right Kronecker product of batched vectors (no LN)."""
+    out = vs[0]
+    for v in vs[1:]:
+        out = _pairwise_kron(out, v)
+    return out
+
+
+def kron_vectors_tree(
+    vs: Sequence[jax.Array],
+    *,
+    use_layernorm: bool = True,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Balanced-binary-tree Kronecker product with LayerNorm at each node.
+
+    Paper §2.3 / Figure 1: leaves are the ``v_jk``; each internal node is the
+    Kronecker product of its children followed by (non-affine) LayerNorm.
+    Sequential depth is O(log n) instead of O(n).
+
+    With ``use_layernorm=False`` this equals :func:`kron_vectors` exactly
+    (kron is associative) — that identity is property-tested.
+    """
+    level = list(vs)
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            node = _pairwise_kron(level[i], level[i + 1])
+            if use_layernorm:
+                node = layernorm(node, eps=eps)
+            nxt.append(node)
+        if len(level) % 2 == 1:  # odd leaf carries to the next level
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]
+
+
+# ---------------------------------------------------------------------------
+# Dense Kronecker product of matrices (test oracle; never used at scale)
+# ---------------------------------------------------------------------------
+
+def kron_matrix(ms: Sequence[jax.Array]) -> jax.Array:
+    """Dense ⊗_j M_j for small test shapes. (q_j, t_j) -> (prod q, prod t)."""
+    out = ms[0]
+    for m in ms[1:]:
+        out = jnp.einsum("ab,cd->acbd", out, m).reshape(
+            out.shape[0] * m.shape[0], out.shape[1] * m.shape[1]
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Factorization helpers
+# ---------------------------------------------------------------------------
+
+def factorize_dim(dim: int, order: int) -> tuple[int, ...]:
+    """Balanced exact factorization of ``dim`` into ``order`` integer factors.
+
+    Used for the embedding axis ``p`` where configs pick dims that factor
+    exactly (e.g. 4096 = 64·64). Raises if no exact factorization exists —
+    callers should then use :func:`choose_factorization` (covering ``>= dim``
+    with slicing, as the paper does for p=300 -> 18·18=324).
+    """
+    factors: list[int] = []
+    rem = dim
+    for j in range(order, 0, -1):
+        f = round(rem ** (1.0 / j))
+        # search near the balanced root for an exact divisor
+        best = None
+        for cand in range(max(2, f - 64), f + 65):
+            if rem % cand == 0:
+                if best is None or abs(cand - f) < abs(best - f):
+                    best = cand
+        if best is None:
+            raise ValueError(f"no exact order-{order} factorization of {dim}")
+        factors.append(best)
+        rem //= best
+    if math.prod(factors) != dim:
+        raise ValueError(f"no exact order-{order} factorization of {dim}")
+    return tuple(sorted(factors, reverse=True))
+
+
+def choose_factorization(dim: int, order: int) -> tuple[int, ...]:
+    """Smallest balanced factors with ``prod >= dim`` (ceil of the n-th root).
+
+    Matches the paper's vocab-axis choice, e.g. d=30,428, n=2 -> t=175
+    (175² = 30,625 ≥ 30,428) and d=118,655, n=4 -> t=19 (19⁴ = 130,321).
+    """
+    try:
+        return factorize_dim(dim, order)
+    except ValueError:
+        pass
+    base = int(math.ceil(dim ** (1.0 / order)))
+    # allow mixed radices: greedily shrink trailing factors while prod >= dim
+    factors = [base] * order
+    for j in range(order - 1, -1, -1):
+        while factors[j] > 2:
+            factors[j] -= 1
+            if math.prod(factors) < dim:
+                factors[j] += 1
+                break
+    return tuple(factors)

@@ -1,0 +1,50 @@
+"""word2ket (paper §2.3): per-word entangled-tensor embeddings.
+
+Each word i has rank-r order-n representation
+    v_i = Σ_{k=1..r} ⊗_{j=1..n} v_ijk ,   v_ijk ∈ R^{q_j},
+stored as ``order`` leaf tables of shape (vocab, rank, q_j). A lookup gathers
+one leaf row per factor and evaluates the balanced tensor-product tree with
+LayerNorm at the internal nodes, then sums over rank.
+
+Storage: d·r·Σq_j  (= d·r·n·q for uniform q), vs d·p regular.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kron as K
+
+__all__ = ["init", "lookup", "materialize"]
+
+
+def init(key: jax.Array, cfg) -> dict:
+    q = cfg.resolved_q()
+    p = math.prod(q)
+    keys = jax.random.split(key, cfg.order)
+    # Per-leaf scale so the rank-summed reconstructed vector has O(1/sqrt(p))
+    # entries like a regular embedding: each entry of ⊗v_j is a product of n
+    # leaf entries; with leaf std s, entry std ≈ s^n; want s^n·sqrt(r) = 1/sqrt(p).
+    s = (1.0 / (math.sqrt(cfg.rank) * math.sqrt(p))) ** (1.0 / cfg.order)
+    leaves = [
+        jax.random.normal(k, (cfg.vocab_size, cfg.rank, qj), cfg.dtype) * s
+        for k, qj in zip(keys, q)
+    ]
+    return {"leaves": leaves}
+
+
+def lookup(cfg, params: dict, ids: jax.Array) -> jax.Array:
+    """ids (...,) -> (..., embed_dim)."""
+    vs = [jnp.take(leaf, ids, axis=0) for leaf in params["leaves"]]  # (..., r, q_j)
+    v = K.kron_vectors_tree(vs, use_layernorm=cfg.use_layernorm)  # (..., r, prod q)
+    v = jnp.sum(v, axis=-2)
+    return v[..., : cfg.embed_dim]
+
+
+def materialize(cfg, params: dict) -> jax.Array:
+    """Full (vocab, p) matrix — test oracle, small shapes only."""
+    ids = jnp.arange(cfg.vocab_size)
+    return lookup(cfg, params, ids)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+kron_gather  — fused word2ketXS lookup (one-hot-matmul gather + kron tree)
+kron_logits  — fused Kronecker vocab head + online-softmax cross-entropy
+flash_attn   — GQA-aware flash attention (causal / local window / bidir)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+custom-VJP wrapper choosing interpret mode off-TPU) and ref.py (pure-jnp
+oracle used for validation and as the analytic backward).
+"""

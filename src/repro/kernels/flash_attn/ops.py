@@ -1,0 +1,35 @@
+"""Jit'd flash-attention op: Pallas forward, analytic backward via the oracle."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=not _on_tpu())
+
+
+def _fwd(q, k, v, causal, window, block_q, block_k):
+    return flash_attention(q, k, v, causal, window, block_q, block_k), (q, k, v)
+
+
+def _bwd(causal, window, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: attention_ref(a, b, c, causal=causal,
+                                                   window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive masked softmax."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B,Sq,H,Dh); k,v (B,Skv,KVH,Dh) -> (B,Sq,H,Dv). Full materialization."""
+    B, Sq, H, Dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qf = q.astype(jnp.float32).reshape(B, Sq, KVH, G, Dh) * (Dh ** -0.5)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    valid = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window > 0:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Jit'd public op for the fused word2ketXS lookup.
+
+Forward = Pallas kernel (interpret mode on CPU, compiled on TPU). Backward =
+analytic VJP obtained from the pure-jnp oracle (the factor gradients are
+one-hot scatter-adds — cheap XLA scatters; a dedicated backward kernel is a
+documented optimization for real-TPU runs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kron_gather.kron_gather import kron_gather_pallas
+from repro.kernels.kron_gather.ref import kron_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def kron_gather(
+    factors: Sequence[jax.Array],
+    ids: jax.Array,
+    embed_dim: int,
+    use_layernorm: bool = True,
+    block_b: int = 256,
+) -> jax.Array:
+    out = kron_gather_pallas(
+        list(factors),
+        ids,
+        use_layernorm=use_layernorm,
+        block_b=block_b,
+        interpret=not _on_tpu(),
+    )
+    return out[:, :embed_dim]
+
+
+def _fwd(factors, ids, embed_dim, use_layernorm, block_b):
+    out = kron_gather(factors, ids, embed_dim, use_layernorm, block_b)
+    return out, (tuple(factors), ids)
+
+
+def _bwd(embed_dim, use_layernorm, block_b, res, g):
+    factors, ids = res
+    _, vjp = jax.vjp(
+        lambda fs: kron_gather_ref(fs, ids, embed_dim=embed_dim, use_layernorm=use_layernorm),
+        list(factors),
+    )
+    (dfactors,) = vjp(g)
+    return (dfactors, None)
+
+
+kron_gather.defvjp(_fwd, _bwd)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused word2ketXS lookup kernel.
+
+Standalone (takes the factor list + static dims directly) so kernel tests do
+not depend on the module-level config plumbing.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kron as K
+
+
+def kron_gather_ref(
+    factors: Sequence[jax.Array],  # [(rank, q_j, t_j)] * order
+    ids: jax.Array,  # (B,) int32
+    *,
+    embed_dim: int,
+    use_layernorm: bool = True,
+) -> jax.Array:
+    """ids -> (B, embed_dim); lazy column extraction + balanced LN tree."""
+    t = [f.shape[2] for f in factors]
+    digits = K.mixed_radix_digits(ids, t)
+    vs = [jnp.take(f, d, axis=2) for f, d in zip(factors, digits)]  # (r, q_j, B)
+    vs = [jnp.moveaxis(v, (0, 1), (-2, -1)) for v in vs]  # (B, r, q_j)
+    v = K.kron_vectors_tree(vs, use_layernorm=use_layernorm)  # (B, r, prod q)
+    return jnp.sum(v, axis=-2)[..., :embed_dim]

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused Kronecker vocab head + online-softmax cross-entropy.
+
+The memory-critical op of large-vocab LMs is ``loss = CE(h @ W_unembed)``:
+the (tokens × vocab) logits tensor (e.g. 1M × 256k) dwarfs every other
+activation. With a word2ketXS (pure Kronecker) head the logits tile for a
+block of first-digit columns is two small matmuls per rank, so we stream
+vocabulary tiles through VMEM and keep only the running (max, sumexp,
+label-logit) statistics — logits never reach HBM.
+
+Grid: (token_blocks, t1_blocks); the t1 axis is the innermost (sequential on
+TPU) dimension and accumulates into revisited (Bblk,) output blocks, exactly
+the flash-attention pattern applied to the vocabulary axis.
+
+Per grid step:   z = x·F1[:, :, tile]  (MXU)   →  z·F2, … (MXU)
+                 online (m, l, ylogit) update  (VPU)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    x_ref, y_ref, *refs, q_dims, t_dims, rank, t1_block, vocab_size
+):
+    *factor_refs, m_ref, l_ref, ylog_ref = refs
+    j = pl.program_id(1)
+    n = len(q_dims)
+    bblk = x_ref.shape[0]
+    t_rest = int(math.prod(t_dims[1:]))
+    tile_cols = t1_block * t_rest
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((bblk,), -1e30, jnp.float32)
+        l_ref[...] = jnp.zeros((bblk,), jnp.float32)
+        ylog_ref[...] = jnp.zeros((bblk,), jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)  # (Bblk, P)
+    z = x.reshape((bblk, 1) + tuple(q_dims))
+    for fi, f_ref in enumerate(factor_refs):
+        f = f_ref[...].astype(jnp.float32)  # (r, q_fi, t_fi or t1_block)
+        z = jnp.einsum("brq...,rqt->brt...", z, f, preferred_element_type=jnp.float32)
+        z = jnp.moveaxis(z, 2, 2 + (n - 1))
+    logits = jnp.sum(z, axis=1).reshape(bblk, tile_cols)
+
+    col0 = j * tile_cols
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_cols), 1)
+    logits = jnp.where(cols < vocab_size, logits, -1e30)
+
+    y = y_ref[...]  # (Bblk,) int32
+    m_old, l_old, ylog = m_ref[...], l_ref[...], ylog_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(logits, axis=-1))
+    l_new = l_old * jnp.exp(m_old - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=-1
+    )
+    in_tile = (y >= col0) & (y < col0 + tile_cols)
+    # gather the label logit with a one-hot dot (MXU-friendly, no vmem gather)
+    local = jnp.clip(y - col0, 0, tile_cols - 1)
+    oh = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tile_cols), 1)).astype(
+        jnp.float32
+    )
+    picked = jnp.sum(oh * logits, axis=-1)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    ylog_ref[...] = jnp.where(in_tile, picked, ylog)
+
+
+def kron_ce_pallas(
+    factors: Sequence[jax.Array],
+    h: jax.Array,  # (B, p)
+    labels: jax.Array,  # (B,) int32
+    vocab_size: int,
+    *,
+    t1_block: int = 16,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns per-token CE losses (B,) without materializing logits."""
+    rank = factors[0].shape[0]
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    P = int(math.prod(q_dims))
+
+    x = h.astype(jnp.float32)
+    if P > x.shape[-1]:
+        x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
+    B = x.shape[0]
+    bpad = -B % block_b
+    if bpad:
+        x = jnp.pad(x, ((0, bpad), (0, 0)))
+        labels = jnp.pad(labels, (0, bpad))
+    nb = x.shape[0] // block_b
+
+    t1 = t_dims[0]
+    blk = min(t1_block, t1)
+    while t1 % blk != 0:
+        blk -= 1
+    nt = t1 // blk
+
+    kernel = functools.partial(
+        _kernel, q_dims=q_dims, t_dims=t_dims, rank=rank, t1_block=blk,
+        vocab_size=vocab_size,
+    )
+    out_shape = [jax.ShapeDtypeStruct((x.shape[0],), jnp.float32)] * 3
+    f0 = factors[0]
+    m, l, ylog = pl.pallas_call(
+        kernel,
+        grid=(nb, nt),
+        in_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((rank, q_dims[0], blk), lambda i, j: (0, 0, j)),
+            *[
+                pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0))
+                for f in factors[1:]
+            ],
+        ],
+        out_specs=[pl.BlockSpec((block_b,), lambda i, j: (i,))] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, labels, f0, *factors[1:])
+    return (m + jnp.log(l) - ylog)[:B]

@@ -1,0 +1,54 @@
+"""Jit'd public op: fused Kronecker-head CE with analytic backward.
+
+Forward = Pallas streaming kernel. Backward = VJP of the rematerializing
+vocab-tiled reference (same tiling, O(B·tile) memory) — tile logits are
+recomputed, softmax−onehot cotangents scatter into the small factors.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kron_logits.kron_logits import kron_ce_pallas
+from repro.kernels.kron_logits.ref import kron_ce_tiled
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_kron_ce(
+    factors: Sequence[jax.Array],
+    h: jax.Array,
+    labels: jax.Array,
+    vocab_size: int,
+    t1_block: int = 16,
+    block_b: int = 256,
+) -> jax.Array:
+    return kron_ce_pallas(
+        list(factors), h, labels, vocab_size,
+        t1_block=t1_block, block_b=block_b, interpret=not _on_tpu(),
+    )
+
+
+def _fwd(factors, h, labels, vocab_size, t1_block, block_b):
+    out = fused_kron_ce(factors, h, labels, vocab_size, t1_block, block_b)
+    return out, (tuple(factors), h, labels)
+
+
+def _bwd(vocab_size, t1_block, block_b, res, g):
+    factors, h, labels = res
+    _, vjp = jax.vjp(
+        lambda fs, hh: kron_ce_tiled(fs, hh, labels, vocab_size, t1_block=t1_block),
+        list(factors), h,
+    )
+    dfactors, dh = vjp(g)
+    return (dfactors, dh, None)
+
+
+fused_kron_ce.defvjp(_fwd, _bwd)

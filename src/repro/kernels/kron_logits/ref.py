@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the fused Kronecker-head cross-entropy kernel."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def kron_chain_logits(factors: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """x (B, P) fp32 (P = prod q) -> logits (B, prod t) via the factor chain."""
+    q = [f.shape[1] for f in factors]
+    t = [f.shape[2] for f in factors]
+    z = x.reshape((-1, 1) + tuple(q))
+    for f in factors:
+        z = jnp.einsum("brq...,rqt->brt...", z, f.astype(jnp.float32))
+        z = jnp.moveaxis(z, 2, 2 + (len(q) - 1))
+    z = jnp.sum(z, axis=1)
+    return z.reshape(x.shape[0], math.prod(t))
+
+
+def _pad_x(factors, h):
+    P = int(math.prod(f.shape[1] for f in factors))
+    x = h.astype(jnp.float32)
+    if P > x.shape[-1]:
+        x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
+    return x
+
+
+def kron_ce_naive(
+    factors: Sequence[jax.Array], h: jax.Array, labels: jax.Array, vocab_size: int
+) -> jax.Array:
+    """Materializes full logits — small-shape test oracle. Returns (B,) losses."""
+    x = _pad_x(factors, h)
+    logits = kron_chain_logits(factors, x)[:, :vocab_size]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ylogit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - ylogit
+
+
+def kron_ce_tiled(
+    factors: Sequence[jax.Array],
+    h: jax.Array,
+    labels: jax.Array,
+    vocab_size: int,
+    t1_block: int = 16,
+) -> jax.Array:
+    """Vocab-tiled online-logsumexp CE; O(B·tile) memory. Returns (B,) losses.
+
+    Scan body is rematerialized — used as the analytic backward for the
+    Pallas forward kernel.
+    """
+    x = _pad_x(factors, h)
+    t = [f.shape[2] for f in factors]
+    t1 = t[0]
+    blk = min(t1_block, t1)
+    while t1 % blk != 0:
+        blk -= 1
+    n_tiles = t1 // blk
+    t_rest = int(math.prod(t[1:]))
+    B = x.shape[0]
+    neg = jnp.float32(-1e30)
+    # first factor threaded as scan xs (stacked grads, no scatter — see
+    # core/logits.py for the GSPMD rationale)
+    f0_full = factors[0]
+    f0_tiles = jnp.moveaxis(
+        f0_full.reshape(f0_full.shape[0], f0_full.shape[1], n_tiles, blk), 2, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        i, f0 = xs
+        m, l, ylogit = carry
+        logits = kron_chain_logits([f0] + list(factors[1:]), x)  # (B, blk*t_rest)
+        col0 = i * blk * t_rest
+        cols = col0 + jnp.arange(blk * t_rest)
+        logits = jnp.where((cols < vocab_size)[None, :], logits, neg)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1)
+        in_tile = (labels >= col0) & (labels < col0 + blk * t_rest)
+        local = jnp.clip(labels - col0, 0, blk * t_rest - 1)
+        picked = jnp.take_along_axis(logits, local[:, None], axis=-1)[:, 0]
+        ylogit = jnp.where(in_tile, picked, ylogit)
+        return (m_new, l, ylogit), None
+
+    init = (jnp.full((B,), neg), jnp.zeros((B,)), jnp.zeros((B,)))
+    (m, l, ylogit), _ = jax.lax.scan(body, init, (jnp.arange(n_tiles), f0_tiles))
+    return m + jnp.log(l) - ylogit

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and this process needs 512 host devices for the production meshes.
+(Unit tests / benches never import this module — they see 1 device.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single_pod|multi_pod|both] [--out results/dryrun]
+        [--set key=value ...]     # ModelConfig overrides (perf experiments)
+"""
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    from repro.configs import ARCHS, LM_SHAPES
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all", help="arch id or 'all'")
+    p.add_argument("--shape", default="all", help="shape name or 'all'")
+    p.add_argument("--mesh", default="both", choices=["single_pod", "multi_pod", "both"])
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--tag", default="", help="suffix for result filenames")
+    p.add_argument("--set", action="append", default=[], metavar="K=V",
+                   help="ModelConfig override, e.g. --set remat=dots")
+    args = p.parse_args(argv)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(LM_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single_pod": [False], "multi_pod": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = ("multi_pod" if multi_pod else "single_pod") + args.tag
+        for arch in archs:
+            for shape in shapes:
+                res = run_cell(arch, shape, mesh, mesh_name, args.out,
+                               overrides=overrides or None, force=args.force)
+                failures += res["status"] == "error"
+    print(f"[dryrun] done; {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,306 @@
+"""Dry-run engine: lower + compile every (arch × shape × mesh) cell and
+extract memory / cost / collective statistics for the roofline analysis.
+
+Does NOT set XLA flags — launch/dryrun.py does that before any import.
+Results are written incrementally as JSON (one file per cell) so a long
+sweep is resumable and benchmarks/roofline.py can consume partial results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs import LM_SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.hlo_stats import analyze_hlo
+from repro.models import model as MD
+from repro.parallel import meshctx
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     state_specs, to_shardings)
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+__all__ = ["run_cell", "cell_path", "model_flops_estimate"]
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (6·N_active·D for train, 2·N_active per decode token)
+# ---------------------------------------------------------------------------
+
+def _active_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total body params, active body params per token) — excludes embed/head."""
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    per_attn = d * cfg.num_heads * cfg.head_dim + 2 * d * cfg.num_kv_heads * cfg.head_dim \
+        + cfg.num_heads * cfg.head_dim * d
+    if cfg.mla:
+        per_attn = (d * cfg.num_heads * (cfg.head_dim + cfg.rope_head_dim)
+                    + d * (cfg.kv_lora_rank + cfg.rope_head_dim)
+                    + 2 * cfg.kv_lora_rank * cfg.num_heads * cfg.head_dim
+                    + cfg.num_heads * cfg.head_dim * d)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    per_ffn = (3 if gated else 2) * d * ff
+    per_moe_expert = 3 * d * ff
+    di = cfg.d_inner
+    per_ssm = d * 2 * di + di * (cfg.dt_rank + 2 * cfg.ssm_state) + cfg.dt_rank * di + di * d
+    w = d // max(cfg.num_heads, 1)
+    per_rglru = 3 * d * d + 2 * cfg.num_heads * w * w + (3 if True else 2) * d * ff  # rec + geglu ffn
+
+    total = active = 0
+    pattern = cfg.layer_pattern
+    for i in range(L):
+        kind = pattern[i % len(pattern)]
+        if kind in ("attn", "local_attn"):
+            total += per_attn + per_ffn
+            active += per_attn + per_ffn
+        elif kind == "moe_attn":
+            shared = cfg.n_shared_experts * per_moe_expert
+            total += per_attn + cfg.n_experts * per_moe_expert + shared + d * cfg.n_experts
+            active += per_attn + cfg.top_k * per_moe_expert + shared + d * cfg.n_experts
+        elif kind == "ssm":
+            total += per_ssm
+            active += per_ssm
+        elif kind == "rglru":
+            total += per_rglru
+            active += per_rglru
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (per_attn + per_ffn)
+        cross = cfg.num_layers * per_attn
+        total += enc + cross
+        active += enc + cross
+    return total, active
+
+
+def _head_flops_per_token(cfg: ModelConfig) -> tuple[int, int]:
+    """(regular head flops, this config's head flops) per token (fwd)."""
+    dense = 2 * cfg.d_model * cfg.vocab_size
+    if cfg.head_kind == "dense":
+        return dense, dense
+    from repro.configs.base import head_for
+    ecfg = head_for(cfg).as_embedding_config()
+    q, t = ecfg.resolved_q(), ecfg.resolved_t()
+    r = cfg.head_rank
+    # order-2 chain: (q1,q2)->(t1,q2)->(t1,t2) per rank
+    f = 0
+    qs = list(q)
+    ts = list(t)
+    cur = list(qs)
+    for j in range(len(qs)):
+        out = cur.copy()
+        out[j] = ts[j]
+        f += 2 * int(np.prod(out)) * qs[j]
+        cur = out
+    return dense, r * f
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: ShapeSpec, mesh=None,
+                         microbatches: int = 8) -> dict:
+    total, active = _active_params(cfg)
+    dense_head, head = _head_flops_per_token(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.mode == "train" else
+                                   (shape.seq_len if shape.mode == "prefill" else 1))
+    if cfg.family == "encdec" and shape.mode == "prefill":
+        # enc-dec prefill = encode + cross-KV fill only
+        d, ff = cfg.d_model, cfg.d_ff
+        enc_p = cfg.enc_layers * (4 * d * cfg.num_heads * cfg.head_dim + 2 * d * ff)
+        tokens = shape.global_batch * cfg.enc_seq
+        body = 2 * enc_p * tokens
+        headf = 0.0
+    elif shape.mode == "train":
+        body = 6 * active * tokens
+        headf = 3 * head * tokens  # fwd + bwd(2x) on the head chain
+    else:
+        body = 2 * active * tokens
+        headf = head * tokens
+
+    # analytic HBM floor (per device): certainly-required traffic
+    floor = None
+    if mesh is not None:
+        tp = mesh.shape.get("model", 1)
+        dp = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
+        p_local = total / tp + 2e6  # body sharded + replicated embed/head factors
+        if shape.mode == "train":
+            reads = p_local * 2 * 3 * microbatches          # bf16 x (fwd+remat+bwd) x mb
+            grads = p_local * 4 * (2 * microbatches + 1)     # f32 accum r/w
+            opt = (total / tp / dp) * 4 * 8                  # ZeRO-1 moments+master r/w
+            pattern = max(len(cfg.layer_pattern), 1)
+            carries = (cfg.num_layers / pattern) * (tokens / dp) * cfg.d_model * 2 * 2
+            floor = reads + grads + opt + carries
+        elif shape.mode == "prefill":
+            cache = (cfg.num_layers * (tokens / dp) *
+                     2 * cfg.num_kv_heads * cfg.head_dim * 2)
+            floor = p_local * 2 + (tokens / dp) * cfg.d_model * 2 * 2 + cache
+        else:  # decode: read active params + read/write the KV/state cache
+            act_local = active / tp + 2e6
+            kv = (cfg.num_layers * shape.global_batch / dp *
+                  min(shape.seq_len, cfg.local_window if "local_attn" in cfg.layer_pattern
+                      and len(set(cfg.layer_pattern)) > 1 else shape.seq_len) *
+                  2 * cfg.num_kv_heads * cfg.head_dim * 2) / tp
+            floor = act_local * 2 + kv
+
+    return {
+        "body_params": total,
+        "active_params": active,
+        "tokens": tokens,
+        "model_flops": float(body + headf),
+        "head_flops": float(headf),
+        "dense_head_flops_equiv": float((3 if shape.mode == "train" else 1) * dense_head * tokens),
+        "hbm_floor_bytes_per_device": float(floor) if floor is not None else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh_name: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def clamp_microbatches(micro: int, shape: ShapeSpec, mesh) -> int:
+    """Each microbatch must still split across the full DP width (on the
+    512-chip mesh dp=32: mb>8 would under-shard tokens per device)."""
+    if shape.mode != "train":
+        return micro
+    from repro.parallel.sharding import batch_axes_for
+    dp = 1
+    for a in batch_axes_for(mesh, shape.global_batch):
+        dp *= mesh.shape[a]
+    micro = min(micro, max(1, shape.global_batch // dp))
+    while shape.global_batch % micro:
+        micro -= 1
+    return micro
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, microbatches: int = 8):
+    """Returns (lowered, compiled)."""
+    key = jax.random.PRNGKey(0)
+    specs_in = MD.input_specs(cfg, shape)
+
+    if shape.mode == "train":
+        # 1M-token global batches train with gradient accumulation in practice
+        # (one DP all-reduce per step regardless); also bounds activation
+        # memory. The count arrives pre-clamped from clamp_microbatches().
+        tcfg = TrainConfig(microbatches=microbatches)
+        state_shape = jax.eval_shape(lambda: init_state(key, cfg, tcfg))
+        sspec = state_specs(cfg, mesh, state_shape)
+        bspec = batch_specs(cfg, mesh, shape, specs_in)
+        step = make_train_step(cfg, tcfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(to_shardings(mesh, sspec), to_shardings(mesh, bspec)),
+            donate_argnums=(0,),
+        )
+        return jitted.lower(state_shape, specs_in)
+
+    params_shape = jax.eval_shape(lambda: MD.init_params(key, cfg))
+    pspec = param_specs(cfg, mesh, params_shape)
+
+    if shape.mode == "prefill":
+        bspec = batch_specs(cfg, mesh, shape, specs_in)
+        fn = lambda params, batch: MD.prefill_fn(params, cfg, batch)
+        jitted = jax.jit(
+            fn, in_shardings=(to_shardings(mesh, pspec), to_shardings(mesh, bspec)))
+        return jitted.lower(params_shape, specs_in)
+
+    # decode
+    cache_shape = specs_in["cache"]
+    cspec = cache_specs(cfg, mesh, shape, cache_shape)
+    tok_spec = batch_specs(cfg, mesh, shape, {"tokens": specs_in["tokens"]})["tokens"]
+    fn = lambda params, cache, tokens: MD.serve_step_fn(params, cfg, cache, tokens)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(to_shardings(mesh, pspec), to_shardings(mesh, cspec),
+                      to_shardings(mesh, {"t": tok_spec})["t"]),
+        donate_argnums=(1,),
+    )
+    return jitted.lower(params_shape, cache_shape, specs_in["tokens"])
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, out_dir: str,
+             overrides: Optional[dict] = None, force: bool = False) -> dict:
+    path = cell_path(out_dir, arch, shape_name, mesh_name)
+    tag = f" [{','.join(sorted((overrides or {}).keys()))}]" if overrides else ""
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("status") in ("ok", "skipped"):  # retry errored cells
+            return cached
+
+    overrides = dict(overrides or {})
+    micro = int(overrides.pop("microbatches", 16))  # §Perf: 16 w/ remat=dots
+    cfg = get_config(arch, **overrides)
+    shape = LM_SHAPES[shape_name]
+    micro = clamp_microbatches(micro, shape, mesh)
+    ok, why = MD.shape_is_applicable(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "microbatches": micro,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+    if not ok:
+        result.update(status="skipped", reason=why)
+        _write(path, result)
+        return result
+
+    t0 = time.time()
+    try:
+        with meshctx.use_mesh(mesh):
+            lowered = _lower_cell(cfg, shape, mesh, microbatches=micro)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else (ca or {})
+        hlo = analyze_hlo(compiled.as_text())
+        est = model_flops_estimate(cfg, shape, mesh=mesh, microbatches=micro)
+
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            },
+            cost_analysis={
+                "flops": float(ca.get("flops", -1.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+            },
+            hlo={
+                "flops_per_device": hlo.flops,
+                "hbm_bytes_per_device": hlo.hbm_bytes,
+                "collective_bytes": hlo.collective_bytes,
+                "collective_counts": hlo.collective_counts,
+                "n_while": hlo.n_while,
+                "unknown_trip": hlo.unknown_trip,
+            },
+            model_estimate=est,
+        )
+        print(f"[dryrun] OK {arch} × {shape_name} × {mesh_name}{tag} "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)", flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] FAIL {arch} × {shape_name} × {mesh_name}{tag}: {e}", flush=True)
+    _write(path, result)
+    return result
+
+
+def _write(path: str, obj: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1)
+    os.replace(tmp, path)

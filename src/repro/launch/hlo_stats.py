@@ -1,0 +1,212 @@
+"""Trip-count-weighted HLO analysis: FLOPs, HBM-traffic and collective bytes.
+
+``compiled.cost_analysis()`` counts each computation ONCE (a lax.scan layer
+stack reports 1 layer of FLOPs) and per device. For honest roofline terms we
+re-walk the optimized HLO text ourselves:
+
+  * build the call graph (ENTRY -> fusions/calls/while bodies),
+  * weight every computation by the product of enclosing while trip counts
+    (XLA records ``known_trip_count`` in backend_config),
+  * FLOPs from dot instructions (2 · |result| · |contracted dims|),
+  * HBM traffic ≈ Σ (operand + result bytes) over non-fusion-internal
+    instructions (fusion bodies stay in registers/VMEM),
+  * collective bytes = operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (+ their async -start
+    forms), bucketed by collective type.
+
+All numbers are PER DEVICE (the SPMD module is per-device); multiply by chip
+count for cluster totals. Known approximations are documented in
+EXPERIMENTS.md §Roofline (methodology).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_TYPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|c64|c128|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|f8e4m3fn|f8e5m2|token)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*[:=]\s*\{\s*"?n"?\s*[:=]\s*"?(\d+)')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_COLLECTIVES = {
+    "all-reduce": "all_reduce", "all-reduce-start": "all_reduce",
+    "all-gather": "all_gather", "all-gather-start": "all_gather",
+    "reduce-scatter": "reduce_scatter",
+    "all-to-all": "all_to_all",
+    "collective-permute": "collective_permute",
+    "collective-permute-start": "collective_permute",
+}
+
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+             "after-all", "iota", "get-dimension-size"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # everything after "opcode("
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    unweighted_flops: float = 0.0
+    n_while: int = 0
+    unknown_trip: int = 0
+    details: list = dataclasses.field(default_factory=list)  # debug: per-collective
+
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def _parse_computations(hlo_text: str):
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            cur = hdr.group(2)
+            comps[cur] = []
+            if hdr.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, rtype, opcode = m.group(1), m.group(2), m.group(3)
+            rest = line.split(f"{opcode}(", 1)[1] if f"{opcode}(" in line else ""
+            comps[cur].append(_Instr(name, rtype, opcode, rest))
+        if line.strip() == "}":
+            cur = None
+    return comps, entry
+
+
+def _args_section(rest: str) -> str:
+    """Text of the operand list (up to the matching close paren)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i]
+    return rest
+
+
+def analyze_hlo(hlo_text: str, debug: bool = False) -> HloStats:
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    stats = HloStats(collective_bytes=defaultdict(float), collective_counts=defaultdict(int))
+    if entry is None:
+        return stats
+
+    # computations called by fusion instructions never touch HBM themselves
+    fusion_bodies: set[str] = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.opcode == "fusion":
+                for c in _CALLED_RE.findall(ins.rest):
+                    fusion_bodies.add(c)
+
+    def comp_visit(name: str, weight: float, in_fusion: bool, seen: tuple):
+        if name not in comps or name in seen:
+            return
+        table = {ins.name: ins.result_type for ins in comps[name]}
+        for ins in comps[name]:
+            args = _args_section(ins.rest)
+            operand_bytes = sum(
+                _shape_bytes(table.get(op, "")) for op in _OPERAND_RE.findall(args))
+            result_bytes = _shape_bytes(ins.result_type)
+
+            if ins.opcode == "dot":
+                res_elems = max(1, math.prod(_shape_dims(ins.result_type) or [1]))
+                lhs_ops = _OPERAND_RE.findall(args)
+                lhs_dims = _shape_dims(table.get(lhs_ops[0], "")) if lhs_ops else []
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+                contracted = 1
+                if cdims and cdims.group(1):
+                    for d in cdims.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs_dims):
+                            contracted *= lhs_dims[di]
+                f = 2.0 * res_elems * contracted
+                stats.flops += weight * f
+                stats.unweighted_flops += f
+                if debug:
+                    stats.details.append(
+                        ("dot", name, ins.name, weight, ins.result_type[:48],
+                         weight * f))
+
+            if ins.opcode in _COLLECTIVES:
+                cat = _COLLECTIVES[ins.opcode]
+                stats.collective_bytes[cat] += weight * operand_bytes
+                stats.collective_counts[cat] += 1
+                if debug:
+                    stats.details.append(
+                        (cat, name, ins.name, weight, operand_bytes,
+                         weight * operand_bytes))
+
+            if not in_fusion and ins.opcode not in _FREE_OPS:
+                stats.hbm_bytes += weight * (operand_bytes + result_bytes)
+
+            if ins.opcode == "while":
+                stats.n_while += 1
+                trip = _TRIP_RE.search(ins.rest)
+                n = int(trip.group(1)) if trip else 1
+                if not trip:
+                    stats.unknown_trip += 1
+                called = _CALLED_RE.findall(ins.rest)
+                for c in called:
+                    comp_visit(c, weight * n, in_fusion, seen + (name,))
+            elif ins.opcode in ("fusion", "call", "conditional", "async-start"):
+                for c in _CALLED_RE.findall(ins.rest):
+                    comp_visit(c, weight, in_fusion or ins.opcode == "fusion",
+                               seen + (name,))
+            # reduce/map/sort to_apply bodies: per-element scalar ops — skip
+
+    comp_visit(entry, 1.0, False, ())
+    stats.collective_bytes = dict(stats.collective_bytes)
+    stats.collective_counts = dict(stats.collective_counts)
+    return stats

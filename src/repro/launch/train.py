@@ -1,0 +1,93 @@
+"""Meshed training launcher.
+
+On a real TPU cluster this process runs once per host (jax.distributed
+initialization via the standard TPU environment); on this container it drives
+the same code on whatever devices exist. Mesh axes map (data, model) — or
+(pod, data, model) with --multi-pod — onto jax.devices().
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 100 --batch 8 --seq 256 --mesh 1x1 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    from repro.configs import get_config, get_smoke
+    from repro.data.synthetic import DataConfig
+    from repro.launch.mesh import make_mesh
+    from repro.optim.adamw import AdamWConfig, cosine_schedule
+    from repro.optim.compression import CompressionConfig
+    from repro.parallel import meshctx
+    from repro.parallel.sharding import batch_specs, state_specs, to_shardings
+    from repro.train.loop import LoopConfig, train_loop
+    from repro.train.step import TrainConfig, init_state
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true", help="use the reduced config")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--warmup", type=int, default=20)
+    p.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 4x2")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--compress-grads", action="store_true")
+    p.add_argument("--embedding", default=None, choices=[None, "regular", "word2ket", "word2ketxs"])
+    p.add_argument("--head", default=None, choices=[None, "dense", "kron"])
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    overrides = {}
+    if args.embedding:
+        overrides["embedding_kind"] = args.embedding
+    if args.head:
+        overrides["head_kind"] = args.head
+    cfg = (get_smoke if args.smoke else get_config)(args.arch, **overrides)
+
+    dshape = tuple(int(x) for x in args.mesh.split("x"))
+    axis_names = {1: ("data",), 2: ("data", "model"),
+                  3: ("pod", "data", "model")}[len(dshape)]
+    mesh = make_mesh(dshape, axis_names)
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr,
+                              schedule=cosine_schedule(args.lr, args.warmup, args.steps)),
+        compression=CompressionConfig(enabled=args.compress_grads),
+        microbatches=args.microbatches,
+    )
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, seed=args.seed)
+
+    with meshctx.use_mesh(mesh):
+        # shardings for jit: derived from shapes only
+        state_shape = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(args.seed), cfg, tcfg))
+        sspec = state_specs(cfg, mesh, state_shape)
+        from repro.configs.base import ShapeSpec
+        shape = ShapeSpec("cli", args.seq, args.batch, "train")
+        from repro.models import model as MD
+        bshape = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in MD.input_specs(cfg, shape).items()}
+        bspec = batch_specs(cfg, mesh, shape, bshape)
+        jit_kwargs = dict(
+            in_shardings=(to_shardings(mesh, sspec), to_shardings(mesh, bspec)))
+        out = train_loop(cfg, tcfg, dcfg, lcfg, jit_kwargs=jit_kwargs)
+    print(f"[train] final step {out['final_step']} loss {out['final_loss']:.4f} "
+          f"(first {out['first_loss']:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,52 @@
+"""Shared building blocks: norms, rotary embeddings, initializers."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "init_rmsnorm", "dense_init", "apply_rope", "rope_angles", "softcap"]
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def dense_init(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    """Truncated-normal-ish init scaled by 1/sqrt(fan_in)."""
+    fi = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fi))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, Dh); cos/sin (..., S, Dh//2). Rotate-half convention."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[..., None, :], sin[..., None, :]  # broadcast over heads
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

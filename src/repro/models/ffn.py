@@ -1,0 +1,35 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU) MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_ffn(key, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], (d_model, d_ff), dtype, fan_in=d_model),
+            "wg": dense_init(ks[1], (d_model, d_ff), dtype, fan_in=d_model),
+            "wo": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype, fan_in=d_model),
+        "wo": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def ffn(params: dict, x: jax.Array, mlp_type: str, dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dtype))
+    if mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dtype))
+        h = jax.nn.silu(g) * h
+    elif mlp_type == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dtype))
+        h = jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dtype))

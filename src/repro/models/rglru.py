@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Temporal-mix block: x -> [linear -> causal conv -> RG-LRU] ⊙ [linear -> gelu]
+-> linear out. The RG-LRU recurrence
+    r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+    a_t = exp(-c · softplus(Λ) · r_t),      c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+uses block-diagonal gate projections (num_heads blocks) as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.scan_ops import causal_depthwise_conv, chunked_linear_scan
+
+C_RGLRU = 8.0
+
+
+def init_rglru(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    dr = d  # lru_width = d_model for recurrentgemma
+    H = cfg.num_heads
+    w = dr // H
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": dense_init(ks[0], (d, dr), dtype, fan_in=d),
+        "wy": dense_init(ks[1], (d, dr), dtype, fan_in=d),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, dr), dtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_i": dense_init(ks[3], (H, w, w), dtype, fan_in=w),
+        "w_r": dense_init(ks[4], (H, w, w), dtype, fan_in=w),
+        "lambda": jnp.full((dr,), 0.7, jnp.float32),  # softplus(Λ) init ≈ 1.1
+        "wo": dense_init(ks[5], (dr, d), dtype, fan_in=dr),
+    }
+
+
+def _gates(params, cfg, u):
+    """u (B,S,dr) -> (a (B,S,dr) fp32 decay, gated input (B,S,dr) fp32)."""
+    H = cfg.num_heads
+    B, S, dr = u.shape
+    uh = u.reshape(B, S, H, dr // H)
+    r = jax.nn.sigmoid(jnp.einsum("bshw,hwv->bshv", uh, params["w_r"].astype(cfg.dtype))
+                       .astype(jnp.float32).reshape(B, S, dr))
+    i = jax.nn.sigmoid(jnp.einsum("bshw,hwv->bshv", uh, params["w_i"].astype(cfg.dtype))
+                       .astype(jnp.float32).reshape(B, S, dr))
+    log_a = -C_RGLRU * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    drive = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, drive
+
+
+def rglru_block(params, cfg, x, *, scan_chunk: int = 256):
+    """x (B,S,d) -> (B,S,d). Full-sequence recurrent branch ⊙ gelu gate branch."""
+    u = jnp.einsum("bsd,de->bse", x, params["wx"].astype(cfg.dtype))
+    u, _ = causal_depthwise_conv(u, params["conv_w"].astype(cfg.dtype),
+                                 params["conv_b"].astype(cfg.dtype))
+    a, drive = _gates(params, cfg, u)
+    h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    h, _ = chunked_linear_scan(a, drive, h0, chunk=scan_chunk)  # (B,S,dr)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["wy"].astype(cfg.dtype)))
+    y = h.astype(cfg.dtype) * gate
+    return jnp.einsum("bse,ed->bsd", y, params["wo"].astype(cfg.dtype))
+
+
+def rglru_init_cache(cfg, batch: int, dtype) -> dict:
+    dr = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def rglru_decode_step(params, cfg, x_tok, cache):
+    """x_tok (B,d) -> (out (B,d), cache). O(1) per token."""
+    u = jnp.einsum("bd,de->be", x_tok, params["wx"].astype(cfg.dtype))
+    u2, new_conv = causal_depthwise_conv(
+        u[:, None], params["conv_w"].astype(cfg.dtype),
+        params["conv_b"].astype(cfg.dtype), state=cache["conv"],
+    )
+    a, drive = _gates(params, cfg, u2)
+    h = a[:, 0] * cache["h"] + drive[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bd,de->be", x_tok, params["wy"].astype(cfg.dtype)))
+    y = h.astype(cfg.dtype) * gate
+    out = jnp.einsum("be,ed->bd", y, params["wo"].astype(cfg.dtype))
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,69 @@
+"""Chunked first-order linear recurrences (shared by Mamba and RG-LRU).
+
+h_t = a_t ⊙ h_{t-1} + b_t  evaluated as: sequential ``lax.scan`` over time
+chunks (bounds peak memory to O(B·chunk·state)) with a log-depth
+``associative_scan`` inside each chunk (keeps the MXU/VPU busy). The chunk
+size is a tunable knob surfaced to the perf pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int = 256):
+    """a, b: (B, S, ...state); h0: (B, ...state). Returns (h_all, h_last).
+
+    h_all[:, t] = a[:, t] * h_all[:, t-1] + b[:, t], with h_all[:, -1] := h0.
+    """
+    B, S = a.shape[0], a.shape[1]
+    C = min(chunk, S)
+    pad = -S % C
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2), constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    n = (S + pad) // C
+    a = a.reshape((B, n, C) + a.shape[2:])
+    b = b.reshape((B, n, C) + b.shape[2:])
+
+    # checkpoint: the associative_scan's log-depth intermediates are
+    # recomputed in backward rather than saved per chunk.
+    @jax.checkpoint
+    def body(h, inputs):
+        ac, bc = inputs  # (B, C, ...)
+        A, Bv = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        h_chunk = A * h[:, None] + Bv
+        return h_chunk[:, -1], h_chunk
+
+    (a_sw, b_sw) = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0))
+    h_last, h_chunks = jax.lax.scan(body, h0, (a_sw, b_sw))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape((B, S + pad) + a.shape[3:])
+    return h_all[:, :S], h_last
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                          state: jax.Array | None = None):
+    """Causal depthwise 1-D conv. x (B, S, D); w (K, D). Cheap shift-add form.
+
+    state: optional (B, K-1, D) left-context (for decode continuity);
+    returns (y (B,S,D), new_state (B, K-1, D)).
+    """
+    K = w.shape[0]
+    B, S, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, K-1+S, D)
+    y = jnp.zeros((B, S, D), x.dtype)
+    for i in range(K):
+        y = y + xp[:, i : i + S] * w[i]
+    if b is not None:
+        y = y + b
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, D), x.dtype)
+    return y, new_state

@@ -1,0 +1,119 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b architecture).
+
+Train/prefill uses the chunked associative scan; decode is an O(1) state
+update. State per layer: conv (B, K-1, d_inner) + ssm (B, d_inner, N).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.scan_ops import causal_depthwise_conv, chunked_linear_scan
+
+
+def init_ssm(key, cfg, dtype=None) -> dict:
+    dtype = dtype or cfg.param_dtype
+    d, di, N, K, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype, fan_in=d),
+        "conv_w": dense_init(ks[1], (K, di), dtype, fan_in=K),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype, fan_in=di),
+        "dt_proj": dense_init(ks[3], (R, di), dtype, fan_in=R),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1) * 0.1, dtype),  # softplus≈0.1
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype, fan_in=di),
+    }
+
+
+def _ssm_inputs(params, cfg, x_conv):
+    """x_conv (B,S,di) -> decay a (B,S,di,N), drive b (B,S,di,N), C (B,S,N)."""
+    R, N = cfg.dt_rank, cfg.ssm_state
+    dbl = jnp.einsum("bsd,dr->bsr", x_conv, params["x_proj"].astype(cfg.dtype))
+    dt_r, Bm, Cm = dbl[..., :R], dbl[..., R : R + N], dbl[..., R + N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, params["dt_proj"].astype(cfg.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,di) fp32
+    A = -jnp.exp(params["A_log"])  # (di, N) fp32
+    a = jnp.exp(dt[..., None] * A)  # (B,S,di,N)
+    b = (dt * x_conv.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    return a, b, Cm
+
+
+def ssm_block(params, cfg, x, *, scan_chunk: int = 256):
+    """x (B, S, d) -> (B, S, d). Full-sequence selective scan.
+
+    With cfg.ssm_fused_chunks the decay/drive tensors (B,S,d_inner,N) are
+    never materialized for the whole sequence: each time-chunk computes its
+    own (B,C,d_inner,N) slice inside the scan body — the §Perf memory-term
+    optimization for the mamba cells.
+    """
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(cfg.dtype))
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_conv, _ = causal_depthwise_conv(x_in, params["conv_w"].astype(cfg.dtype),
+                                      params["conv_b"].astype(cfg.dtype))
+    x_conv = jax.nn.silu(x_conv)
+    B_, S = x.shape[0], x.shape[1]
+    h0 = jnp.zeros((B_, di, cfg.ssm_state), jnp.float32)
+
+    if getattr(cfg, "ssm_fused_chunks", False):
+        C = min(scan_chunk, S)
+        pad = -S % C
+        xc = jnp.pad(x_conv, ((0, 0), (0, pad), (0, 0))) if pad else x_conv
+        n = xc.shape[1] // C
+        xc_chunks = jnp.moveaxis(xc.reshape(B_, n, C, di), 1, 0)  # (n,B,C,di)
+
+        @jax.checkpoint
+        def body(h, xck):
+            a, b, Cm = _ssm_inputs(params, cfg, xck)  # chunk-local (B,C,di,N)
+            from repro.models.scan_ops import _combine
+            A, Bv = jax.lax.associative_scan(_combine, (a, b), axis=1)
+            h_chunk = A * h[:, None] + Bv
+            y = jnp.einsum("bsdn,bsn->bsd", h_chunk, Cm.astype(jnp.float32))
+            return h_chunk[:, -1], y
+
+        _, ys = jax.lax.scan(body, h0, xc_chunks)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B_, S + pad, di)[:, :S]
+    else:
+        a, b, Cm = _ssm_inputs(params, cfg, x_conv)
+        h, _ = chunked_linear_scan(a, b, h0, chunk=scan_chunk)  # (B,S,di,N)
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cm.astype(jnp.float32))
+
+    y = y + params["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = (y.astype(cfg.dtype)) * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(cfg.dtype))
+
+
+def ssm_init_cache(cfg, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, cfg, x_tok, cache):
+    """x_tok (B, d), cache {conv, h} -> (out (B, d), new cache). O(1) per token."""
+    di = cfg.d_inner
+    xz = jnp.einsum("bd,de->be", x_tok, params["in_proj"].astype(cfg.dtype))
+    x_in, z = xz[..., :di], xz[..., di:]
+    y_conv, new_conv = causal_depthwise_conv(
+        x_in[:, None], params["conv_w"].astype(cfg.dtype),
+        params["conv_b"].astype(cfg.dtype), state=cache["conv"],
+    )
+    x_conv = jax.nn.silu(y_conv)  # (B,1,di)
+    a, b, Cm = _ssm_inputs(params, cfg, x_conv)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * x_conv[:, 0].astype(jnp.float32)
+    y = y.astype(cfg.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"].astype(cfg.dtype))
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,89 @@
+"""AdamW + gradient clipping + LR schedules, pure JAX (no optax offline).
+
+Optimizer state is a pytree mirroring the params (fp32 master copy + first
+and second moments), so sharding rules written for params apply verbatim —
+including the optional ZeRO-1 data-axis sharding of the moments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_init(params) -> dict:
+    # copy=True: the fp32 master must never alias the param buffer (donation)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree_util.tree_map(f32, params),
+        "m": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics). Params keep their dtype."""
+    step = opt_state["step"] + 1
+    lr = cfg.schedule(step) if cfg.schedule is not None else jnp.float32(cfg.lr)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * update
+        return m, v, master
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_ma = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, ma) for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [ma.astype(p.dtype) for ma, p in zip([o[2] for o in out], flat_p)])
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

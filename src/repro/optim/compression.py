@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce (int8 + error feedback).
+
+At 1000+ nodes the DP gradient all-reduce is the largest recurring collective.
+We provide an error-feedback int8 scheme (1-bit-Adam family, arXiv:2102.02888):
+
+    send    = quantize_int8(g + residual)         (per-tensor-block scales)
+    residual' = (g + residual) - dequant(send)
+    g_sync  = all_reduce(dequant(send))           (4x fewer bytes on the wire)
+
+The quantize/dequantize math is exact framework code; on this CPU container
+the collective itself is simulated by psum of the dequantized tensor (XLA has
+no int8 all-reduce on host), but the *bytes-on-wire* accounting used in
+§Roofline applies the 4x factor only when compression is enabled. Convergence
+preservation is tested in tests/test_compression.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "init_residuals", "compress_decompress", "compressed_mean"]
+
+BLOCK = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    bits: int = 8  # int8 per-block quantization
+
+
+def init_residuals(grads):
+    return jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant_dequant(x: jax.Array) -> jax.Array:
+    """Per-block symmetric int8 quantize->dequantize (the wire format)."""
+    flat = x.reshape(-1)
+    pad = -flat.size % BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(fp / jnp.maximum(scale, 1e-12)), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.reshape(-1)[: flat.size].reshape(x.shape)
+
+
+def compress_decompress(grads, residuals):
+    """Error-feedback compression. Returns (wire_grads, new_residuals)."""
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        wire = _quant_dequant(acc)
+        return wire, acc - wire
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return treedef.unflatten([o[0] for o in outs]), treedef.unflatten([o[1] for o in outs])
+
+
+def compressed_mean(grads, residuals, axis_names: tuple[str, ...]):
+    """Compress, (simulated) all-reduce-mean over axis_names, return new residuals."""
+    wire, new_res = compress_decompress(grads, residuals)
+    if axis_names:
+        wire = jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis_names), wire)
+    return wire, new_res

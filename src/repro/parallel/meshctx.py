@@ -1,0 +1,48 @@
+"""Ambient-mesh context used by layers that need explicit collectives.
+
+Launchers (train/serve/dryrun) install the active :class:`jax.sharding.Mesh`
+here; layers that have an explicitly-scheduled distributed form (MoE
+expert-parallel all_to_all, flash-decoding partial-softmax combine) consult it
+via :func:`get_mesh` / :func:`axis_size` and fall back to their single-device
+form when no mesh (or no "model" axis) is active — which is what CPU unit
+tests see.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: Optional[Mesh] = None
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT
+
+
+def axis_size(name: str) -> int:
+    if _CURRENT is None or name not in _CURRENT.axis_names:
+        return 1
+    return _CURRENT.shape[name]
+
+
+def has_axis(name: str) -> bool:
+    return axis_size(name) > 1
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the ambient mesh (and as jax's resource env)."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _CURRENT = prev

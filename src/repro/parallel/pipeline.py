@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over a mesh axis (the multi-pod "pod"
+axis by default): microbatch ticks with ``ppermute`` hand-offs.
+
+At 1000+ nodes the pod axis crosses DCN where all-reduce bandwidth is the
+scarcest resource; pipelining layer groups across pods replaces the
+per-step gradient all-reduce over DCN with point-to-point activation
+hand-offs (deeper integration — pipelined backward with 1F1B scheduling —
+is configuration-compatible with this building block).
+
+``gpipe_apply`` runs a stage function over ``n_stages`` stacked parameter
+groups for ``n_micro`` microbatches with the classic (n_micro + n_stages - 1)
+tick schedule. Stage in/out activation shapes must match (residual-stream
+blocks). Bubble fraction = (S-1)/(M+S-1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import meshctx
+
+__all__ = ["gpipe_apply"]
+
+
+def gpipe_apply(stage_fn, stage_params, xs, *, axis: str = "pod"):
+    """stage_fn(params, x) -> y with y.shape == x.shape.
+
+    stage_params: pytree with leading dim n_stages (sharded over ``axis``).
+    xs: (n_micro, ...) microbatched input (replicated over ``axis``).
+    Returns (n_micro, ...) outputs of the last stage (replicated).
+    """
+    mesh = meshctx.get_mesh()
+    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        # degenerate: run stages sequentially on one device
+        n_stages = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+
+        def run_all(x):
+            for s in range(n_stages):
+                p = jax.tree_util.tree_map(lambda a: a[s], stage_params)
+                x = stage_fn(p, x)
+            return x
+
+        return jax.vmap(run_all)(xs) if xs.ndim else run_all(xs)
+
+    S = mesh.shape[axis]
+    M = xs.shape[0]
+    T = M + S - 1
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def inner(params_local, xs_rep):
+        s = jax.lax.axis_index(axis)
+        p = jax.tree_util.tree_map(lambda a: a[0], params_local)
+
+        def tick(carry, t):
+            inbuf, outs = carry
+            m = t - s
+            active = (m >= 0) & (m < M)
+            mc = jnp.clip(m, 0, M - 1)
+            x_first = jax.lax.dynamic_index_in_dim(xs_rep, mc, axis=0, keepdims=False)
+            x_in = jnp.where(s == 0, x_first, inbuf)
+            y = stage_fn(p, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage records its finished microbatch
+            rec = jnp.where(active & (s == S - 1), y,
+                            jax.lax.dynamic_index_in_dim(outs, mc, 0, keepdims=False))
+            outs = jax.lax.dynamic_update_index_in_dim(outs, rec, mc, 0)
+            sent = jax.lax.ppermute(y, axis, perm)
+            return (sent, outs), None
+
+        inbuf0 = jnp.zeros_like(xs_rep[0])
+        outs0 = jnp.zeros_like(xs_rep)
+        (_, outs), _ = jax.lax.scan(tick, (inbuf0, outs0), jnp.arange(T))
+        # replicate the last stage's outputs to every pipeline rank
+        outs = jax.lax.psum(jnp.where(s == S - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    in_specs = (jax.tree_util.tree_map(lambda _: P(axis), stage_params), P())
+    return jax.shard_map(inner, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                         check_vma=False)(stage_params, xs)

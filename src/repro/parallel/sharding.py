@@ -1,0 +1,237 @@
+"""Sharding rules: parameter-path regex -> PartitionSpec (DP/TP/EP/SP + ZeRO-1).
+
+Policy (model axis = tensor/expert parallel, (pod, data) = data parallel):
+  * attention: heads over "model" (column-parallel qkv, row-parallel out);
+    KV projections replicated when kv_heads doesn't divide (MQA duplicates KV
+    across TP ranks anyway — Megatron convention);
+  * FFN: hidden dim over "model";
+  * MoE: experts over "model" (matches the shard_map all_to_all layer);
+  * Mamba/RG-LRU: inner/recurrent width over "model";
+  * regular embedding/head: vocab over "model" (classic Megatron);
+  * word2ket(XS) factors: REPLICATED — they are KBs; this deletes the
+    embedding all-reduce/all-gather from the collective schedule entirely
+    (visible in §Roofline);
+  * ZeRO-1 (optional): optimizer moments & fp32 master additionally sharded
+    over "data" on the first replicated-and-divisible dim.
+
+Stacked layer groups ("groups/[i]/...") get a leading None for the stack dim.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+__all__ = ["param_specs", "state_specs", "batch_specs", "cache_specs",
+           "batch_axes_for", "to_shardings"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"[{p.idx}]")
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _rules(cfg: ModelConfig, mesh: Mesh):
+    tp = mesh.shape.get("model", 1)
+    heads_ok = cfg.num_heads % tp == 0
+    kv_ok = cfg.num_kv_heads % tp == 0
+    ff_ok = cfg.d_ff % tp == 0 if cfg.d_ff else False
+    ffs_ok = (cfg.n_shared_experts * cfg.d_ff) % tp == 0 if cfg.n_shared_experts else False
+    di_ok = cfg.d_inner % tp == 0
+    exp_ok = cfg.n_experts % tp == 0 if cfg.n_experts else False
+    vocab_ok = cfg.vocab_size % tp == 0
+
+    H = P(None, "model", None) if heads_ok else P()
+    KV = P(None, "model", None) if kv_ok else P()
+    WO = P("model", None, None) if heads_ok else P()
+    FF_IN = P(None, "model") if ff_ok else P()
+    FF_OUT = P("model", None) if ff_ok else P()
+
+    return [
+        # embeddings / heads (the paper's technique: factors replicated)
+        (r"embed/table$", P("model", None) if vocab_ok else P()),
+        (r"embed/(factors|leaves)/.*", P()),
+        (r"head/unembed$", P("model", None) if vocab_ok else P()),
+        (r"head/factors/.*", P()),
+        # attention
+        (r".*attn/wq$", H),
+        (r".*attn/w[kv]$", KV),
+        (r".*attn/wo$", WO),
+        (r".*attn/[qk]_norm/scale$", P()),
+        # MLA
+        (r".*attn/w_dkv$", P()),
+        (r".*attn/w_krope$", P()),
+        (r".*attn/kv_norm/scale$", P()),
+        (r".*attn/w_u[kv]$", P(None, "model", None) if heads_ok else P()),
+        # FFN (dense + shared experts)
+        (r".*ffn/w[ig]$", FF_IN),
+        (r".*ffn/wo$", FF_OUT),
+        (r".*moe/shared/w[ig]$", P(None, "model") if ffs_ok else P()),
+        (r".*moe/shared/wo$", P("model", None) if ffs_ok else P()),
+        # MoE experts (EP)
+        (r".*moe/router$", P()),
+        (r".*moe/w[ig]$", P("model", None, None) if exp_ok else P()),
+        (r".*moe/wo$", P("model", None, None) if exp_ok else P()),
+        # Mamba
+        (r".*ssm/in_proj$", P(None, "model") if di_ok else P()),
+        (r".*ssm/conv_w$", P(None, "model") if di_ok else P()),
+        (r".*ssm/conv_b$", P("model") if di_ok else P()),
+        (r".*ssm/x_proj$", P("model", None) if di_ok else P()),
+        (r".*ssm/dt_proj$", P(None, "model") if di_ok else P()),
+        (r".*ssm/dt_bias$", P("model") if di_ok else P()),
+        (r".*ssm/A_log$", P("model", None) if di_ok else P()),
+        (r".*ssm/D$", P("model") if di_ok else P()),
+        (r".*ssm/out_proj$", P("model", None) if di_ok else P()),
+        # RG-LRU (d_rnn == d_model)
+        (r".*rec/w[xy]$", P(None, "model") if cfg.d_model % tp == 0 else P()),
+        (r".*rec/conv_w$", P(None, "model") if cfg.d_model % tp == 0 else P()),
+        (r".*rec/conv_b$", P("model") if cfg.d_model % tp == 0 else P()),
+        (r".*rec/w_[ir]$", P("model", None, None) if heads_ok else P()),
+        (r".*rec/lambda$", P("model") if cfg.d_model % tp == 0 else P()),
+        (r".*rec/wo$", P("model", None) if cfg.d_model % tp == 0 else P()),
+        # norms and anything else small
+        (r".*", P()),
+    ]
+
+
+_STACKED_PREFIXES = ("groups/", "enc_layers/", "dec_layers/")
+
+
+def _spec_for(path: str, leaf, rules) -> P:
+    stacked = path.startswith(_STACKED_PREFIXES)
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if stacked and spec != P():
+                spec = P(*((None,) + tuple(spec)))
+            # sanity: spec rank must not exceed leaf rank
+            if len(spec) > leaf.ndim:
+                spec = P()
+            return spec
+    return P()
+
+
+def _sanitize(spec: P, leaf, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes don't divide evenly."""
+    dims = list(spec)
+    out = []
+    for i, d in enumerate(dims):
+        if d is None:
+            out.append(None)
+            continue
+        names = d if isinstance(d, tuple) else (d,)
+        size = 1
+        for n in names:
+            size *= mesh.shape.get(n, 1)
+        out.append(d if (i < leaf.ndim and leaf.shape[i] % size == 0) else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> dict:
+    rules = _rules(cfg, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitize(_spec_for(_path_str(path), leaf, rules), leaf, mesh),
+        params_shape)
+
+
+def _zero1(spec: P, leaf, mesh: Mesh, min_size: int = 1 << 16) -> P:
+    """Additionally shard the first replicated, divisible dim over "data"."""
+    if "data" not in mesh.axis_names or np.prod(leaf.shape, dtype=np.int64) < min_size:
+        return spec
+    dp = mesh.shape["data"]
+    dims = list(spec) + [None] * (leaf.ndim - len(spec))
+    for i, d in enumerate(dims):
+        if d is None and leaf.shape[i] % dp == 0 and leaf.shape[i] >= dp:
+            dims[i] = "data"
+            return P(*dims)
+    return spec
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, state_shape, *, zero1: bool = True) -> dict:
+    """Sharding specs for the full train state {params, opt{master,m,v,step}}."""
+    pspecs = param_specs(cfg, mesh, state_shape["params"])
+    if zero1:
+        zspecs = jax.tree_util.tree_map(
+            lambda spec, leaf: _zero1(spec, leaf, mesh), pspecs, state_shape["params"])
+    else:
+        zspecs = pspecs
+    out = {
+        "params": pspecs,
+        "opt": {"master": zspecs, "m": zspecs, "v": zspecs, "step": P()},
+    }
+    if "residuals" in state_shape:
+        out["residuals"] = zspecs
+    return out
+
+
+def batch_axes_for(mesh: Mesh, batch: int) -> tuple[str, ...]:
+    """Maximal prefix of ("pod", "data") whose product divides `batch`."""
+    axes: list[str] = []
+    prod = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            if batch % (prod * mesh.shape[name]) == 0:
+                axes.append(name)
+                prod *= mesh.shape[name]
+    return tuple(axes)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, batch_shape) -> dict:
+    dp = batch_axes_for(mesh, shape.global_batch)
+
+    def spec(path, leaf):
+        # dp is ONE (possibly multi-axis) dim entry on the batch dimension
+        return P(dp if dp else None, *((None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, cache_shape) -> dict:
+    """Decode caches: batch over DP axes; KV/latent *sequence* over "model"
+    (flash-decoding layout); SSM/RG-LRU state width over "model"."""
+    dp = batch_axes_for(mesh, shape.global_batch)
+    tp = "model" if mesh.shape.get("model", 1) > 1 else None
+    bdim = dp if dp else None
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        # leading non-batch stack dim: layer-group stacks and whisper's (L, ...)
+        lead: tuple = (None,) if (p.startswith("groups/") or
+                                  re.search(r"(self|cross)_[kv]$", p)) else ()
+        base = p.rsplit("/", 1)[-1]
+        if base in ("k", "v", "c", "krope", "self_k", "self_v", "cross_k", "cross_v"):
+            # (..., B, S, [KVH, Dh]) — sequence axis over model
+            rest = (tp,) + (None,) * (leaf.ndim - len(lead) - 2)
+            return P(*lead, bdim, *rest)
+        if base == "conv":  # (..., B, K-1, width)
+            return P(*lead, bdim, None, tp)
+        if base == "h":  # (..., B, width[, N])
+            rest = (tp,) + (None,) * (leaf.ndim - len(lead) - 2)
+            return P(*lead, bdim, *rest)
+        if base == "step" and leaf.ndim == 1:  # per-slot positions (B,)
+            return P(bdim)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitize(spec(path, leaf), leaf, mesh), cache_shape)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,318 @@
+"""Single-token decode with KV caches, including distributed flash-decoding.
+
+Decode-time attention at 32k+ context is memory-bandwidth-bound on the KV
+cache. Most assigned archs have too few KV heads to shard across a 16-way
+model axis (MQA/GQA-2/8), so the cache is sharded along the *sequence* axis
+instead and attention uses the flash-decoding combine: each model shard
+computes partial softmax statistics (m, l, o) over its KV slice, then a
+3-scalar-per-head ``pmax``/``psum`` combine replaces any KV all-gather.
+
+Cache layout mirrors the parameter layout: {"groups": [stacked per pattern
+position], "rem": [...]} so the decode step scans over layer groups exactly
+like the forward pass.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, embedding_for
+from repro.core.embedding import embed_lookup
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.common import rmsnorm, rope_angles
+from repro.models.transformer import _head_params, lm_logits_last
+from repro.parallel import meshctx
+
+NEG = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _kv_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind == "local_attn":
+        return min(cfg.local_window, max_len)
+    return max_len
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> dict:
+    dt = cfg.dtype
+    S_ = _kv_len(cfg, kind, max_len)
+    if kind in ("attn", "local_attn"):
+        shp = (batch, S_, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "moe_attn":
+        if cfg.mla:
+            return {
+                "c": jnp.zeros((batch, S_, cfg.kv_lora_rank), dt),
+                "krope": jnp.zeros((batch, S_, cfg.rope_head_dim), dt),
+            }
+        shp = (batch, S_, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "ssm":
+        return S.ssm_init_cache(cfg, batch, dt)
+    if kind == "rglru":
+        return R.rglru_init_cache(cfg, batch, dt)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    pattern = cfg.layer_pattern
+    n_groups = cfg.num_layers // len(pattern)
+    rem = cfg.num_layers % len(pattern)
+
+    def stacked(kind):
+        one = init_layer_cache(cfg, kind, batch, max_len)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+
+    return {
+        "groups": [stacked(kind) for kind in pattern] if n_groups else [],
+        "rem": [init_layer_cache(cfg, pattern[i % len(pattern)], batch, max_len)
+                for i in range(rem)],
+        # PER-SLOT positions: each batch slot decodes at its own offset, so a
+        # continuous-batching engine can admit a new request into a recycled
+        # slot without disturbing its neighbours (serve/engine.py).
+        "step": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharded KV write + flash-decoding attention
+# ---------------------------------------------------------------------------
+
+def _model_axis_active(cfg: ModelConfig) -> bool:
+    mesh = meshctx.get_mesh()
+    return mesh is not None and "model" in mesh.axis_names and mesh.shape["model"] > 1
+
+
+def _batch_axes(batch: int):
+    """Maximal DP prefix whose product divides the (global) decode batch."""
+    mesh = meshctx.get_mesh()
+    axes: tuple[str, ...] = ()
+    prod = 1
+    for name in ("pod", "data"):
+        if mesh is not None and name in mesh.axis_names and batch % (prod * mesh.shape[name]) == 0:
+            axes += (name,)
+            prod *= mesh.shape[name]
+    return axes
+
+
+def _scatter_kv(cache, new, slot):
+    """cache (B,S,KVH,Dh) <- new (B,KVH,Dh) at per-slot positions slot (B,)."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), slot].set(new.astype(cache.dtype))
+
+
+def kv_decode_attention(cfg, q, k_new, v_new, cache_k, cache_v, slot, valid_len, window=0):
+    """Write (k_new, v_new) at per-slot `slot` (B,) and attend; seq-sharded
+    under a mesh (flash-decoding combine).
+
+    q (B,H,Dh); k_new/v_new (B,KVH,Dh); cache (B,S,KVH,Dh); slot/valid_len (B,).
+    Returns (out (B,H,Dh), cache_k, cache_v).
+    """
+    if not _model_axis_active(cfg):
+        cache_k = _scatter_kv(cache_k, k_new, slot)
+        cache_v = _scatter_kv(cache_v, v_new, slot)
+        out = A.decode_attention(q, cache_k, cache_v, valid_len, window=window)
+        return out, cache_k, cache_v
+
+    mesh = meshctx.get_mesh()
+    baxes = _batch_axes(q.shape[0])
+
+    def inner(q, k_new, v_new, ck, cv, slot, valid_len):
+        S_loc = ck.shape[1]
+        idx = jax.lax.axis_index("model")
+        local_slot = jnp.clip(slot - idx * S_loc, 0, S_loc - 1)
+        owns = (slot >= idx * S_loc) & (slot < (idx + 1) * S_loc)  # (B,)
+        ck = jnp.where(owns[:, None, None, None], _scatter_kv(ck, k_new, local_slot), ck)
+        cv = jnp.where(owns[:, None, None, None], _scatter_kv(cv, v_new, local_slot), cv)
+        m, l, o = A.decode_attention_partial(
+            q, ck, cv, valid_len, window=window, pos_offset=idx * S_loc)
+        gm = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - gm)
+        gl = jax.lax.psum(l * corr, "model")
+        go = jax.lax.psum(o * corr[..., None], "model")
+        out = (go / jnp.maximum(gl, 1e-30)[..., None])
+        B, KVH, G, Dh = out.shape[0], out.shape[1], out.shape[2], out.shape[3]
+        return out.reshape(B, KVH * G, Dh).astype(q.dtype), ck, cv
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(baxes), P(baxes), P(baxes),
+                  P(baxes, "model"), P(baxes, "model"), P(baxes), P(baxes)),
+        out_specs=(P(baxes), P(baxes, "model"), P(baxes, "model")),
+        check_vma=False,
+    )(q, k_new, v_new, cache_k, cache_v, slot, valid_len)
+
+
+def mla_decode_attention(cfg, p_attn, x_tok, cache_c, cache_krope, slot, valid_len, cos, sin):
+    """Absorbed MLA decode with a seq-sharded latent cache. slot/valid (B,)."""
+    dt = cfg.dtype
+    c_new, kr_new = A.mla_cache_step(p_attn, cfg, x_tok, cos, sin)
+    H, Dh, R_ = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q = jnp.einsum("bd,dhk->bhk", x_tok, p_attn["wq"].astype(dt))
+    q_nope, q_rope = q[..., :Dh], q[..., Dh:]
+    q_rope = A.apply_rope(q_rope[:, None], cos, sin)[:, 0]
+    q_abs = jnp.einsum("bhk,lhk->bhl", q_nope, p_attn["w_uk"].astype(dt))
+    scale = (Dh + R_) ** -0.5
+
+    def partial_attn(qa, qr, cc, ckr, vlen, pos_offset):
+        s = jnp.einsum("bhl,bsl->bhs", qa, cc, preferred_element_type=jnp.float32)
+        s += jnp.einsum("bhr,bsr->bhs", qr, ckr, preferred_element_type=jnp.float32)
+        s *= scale
+        pos = pos_offset + jnp.arange(cc.shape[1])
+        s = jnp.where((pos[None, :] < vlen[:, None])[:, None], s, NEG)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhs,bsl->bhl", p.astype(cc.dtype), cc,
+                       preferred_element_type=jnp.float32)
+        return m, l, o
+
+    def _scatter(cache, new, sl):
+        B = cache.shape[0]
+        return cache.at[jnp.arange(B), sl].set(new.astype(cache.dtype))
+
+    if not _model_axis_active(cfg):
+        cache_c = _scatter(cache_c, c_new, slot)
+        cache_krope = _scatter(cache_krope, kr_new, slot)
+        m, l, o = partial_attn(q_abs, q_rope, cache_c, cache_krope, valid_len, 0)
+        ctx_l = (o / jnp.maximum(l, 1e-30)[..., None]).astype(dt)
+    else:
+        mesh = meshctx.get_mesh()
+        baxes = _batch_axes(x_tok.shape[0])
+
+        # q_abs/q_rope/slot/valid are explicit shard_map args (batch-sharded);
+        # closure capture would replicate them at global batch against local
+        # caches.
+        def inner(qa, qr, cc, ckr, cn, krn, sl, vlen):
+            S_loc = cc.shape[1]
+            idx = jax.lax.axis_index("model")
+            local_slot = jnp.clip(sl - idx * S_loc, 0, S_loc - 1)
+            owns = (sl >= idx * S_loc) & (sl < (idx + 1) * S_loc)
+            cc = jnp.where(owns[:, None, None], _scatter(cc, cn, local_slot), cc)
+            ckr = jnp.where(owns[:, None, None], _scatter(ckr, krn, local_slot), ckr)
+            m, l, o = partial_attn(qa, qr, cc, ckr, vlen, idx * S_loc)
+            gm = jax.lax.pmax(m, "model")
+            corr = jnp.exp(m - gm)
+            gl = jax.lax.psum(l * corr, "model")
+            go = jax.lax.psum(o * corr[..., None], "model")
+            return (go / jnp.maximum(gl, 1e-30)[..., None]).astype(dt), cc, ckr
+
+        ctx_l, cache_c, cache_krope = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(baxes), P(baxes), P(baxes, "model"), P(baxes, "model"),
+                      P(baxes), P(baxes), P(baxes), P(baxes)),
+            out_specs=(P(baxes), P(baxes, "model"), P(baxes, "model")),
+            check_vma=False,
+        )(q_abs, q_rope, cache_c, cache_krope, c_new, kr_new, slot, valid_len)
+
+    ctx = jnp.einsum("bhl,lhk->bhk", ctx_l, p_attn["w_uv"].astype(dt))
+    out = jnp.einsum("bhk,hkd->bd", ctx, p_attn["wo"].astype(dt))
+    return out, cache_c, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# Per-block decode step
+# ---------------------------------------------------------------------------
+
+def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r=None, sin_r=None):
+    """x (B, d) one token at per-slot positions step (B,); returns (x, cache)."""
+    dt = cfg.dtype
+    h = rmsnorm(p["ln1"], x)
+    if kind in ("attn", "local_attn"):
+        q = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wq"].astype(dt))
+        k = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wk"].astype(dt))
+        v = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wv"].astype(dt))
+        if cfg.qk_norm:
+            q = rmsnorm(p["attn"]["q_norm"], q)
+            k = rmsnorm(p["attn"]["k_norm"], k)
+        q = A.apply_rope(q[:, None], cos, sin)[:, 0]
+        k = A.apply_rope(k[:, None], cos, sin)[:, 0]
+        W = cache["k"].shape[1]
+        if kind == "local_attn":
+            slot = step % W  # per-slot ring buffer
+            valid = jnp.minimum(step + 1, W)
+        else:
+            slot = step
+            valid = step + 1
+        o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"], slot, valid)
+        x = x + jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"].astype(dt))
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], cfg.mlp_type, dt)[:, 0]
+        return x, {"k": ck, "v": cv}
+    if kind == "moe_attn":
+        if cfg.mla:
+            o, cc, ckr = mla_decode_attention(
+                cfg, p["attn"], h, cache["c"], cache["krope"], step, step + 1, cos_r, sin_r)
+            new_cache = {"c": cc, "krope": ckr}
+        else:
+            q = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wq"].astype(dt))
+            k = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wk"].astype(dt))
+            v = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wv"].astype(dt))
+            q = A.apply_rope(q[:, None], cos, sin)[:, 0]
+            k = A.apply_rope(k[:, None], cos, sin)[:, 0]
+            o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"], step, step + 1)
+            o = jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"].astype(dt))
+            new_cache = {"k": ck, "v": cv}
+        x = x + o
+        moe_out, _ = M.moe_block(p["moe"], cfg, rmsnorm(p["ln2"], x)[:, None])
+        return x + moe_out[:, 0], new_cache
+    if kind == "ssm":
+        out, new_cache = S.ssm_decode_step(p["ssm"], cfg, h, cache)
+        return x + out, new_cache
+    if kind == "rglru":
+        out, new_cache = R.rglru_decode_step(p["rec"], cfg, h, cache)
+        x = x + out
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "geglu", dt)[:, 0]
+        return x, new_cache
+    raise ValueError(kind)
+
+
+def serve_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
+    """tokens (B,) -> (logits (B, vocab), new cache). One decode step at
+    per-slot positions cache["step"] (B,)."""
+    step = cache["step"]  # (B,)
+    ecfg = embedding_for(cfg)
+    x = embed_lookup(ecfg, params["embed"], tokens).astype(cfg.dtype)
+    cos, sin = rope_angles(step[:, None], cfg.head_dim, cfg.rope_theta)  # (B,1,half)
+    cos_r, sin_r = rope_angles(step[:, None], cfg.rope_head_dim, cfg.rope_theta)
+    pattern = cfg.layer_pattern
+
+    new_groups = []
+    if params["groups"]:
+        def scan_body(x, xs):
+            per_group_params, per_group_cache = xs
+            new_caches = []
+            for pos_i, kind in enumerate(pattern):
+                x, nc = decode_block(per_group_params[pos_i], cfg, kind, x,
+                                     per_group_cache[pos_i], step, cos, sin, cos_r, sin_r)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, stacked_new = jax.lax.scan(
+            scan_body, x, (tuple(params["groups"]), tuple(cache["groups"])))
+        new_groups = list(stacked_new)
+
+    new_rem = []
+    for i, p_layer in enumerate(params["rem"]):
+        kind = pattern[i % len(pattern)]
+        x, nc = decode_block(p_layer, cfg, kind, x, cache["rem"][i], step, cos, sin,
+                             cos_r, sin_r)
+        new_rem.append(nc)
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = lm_logits_last(params, cfg, x)
+    new_cache = {"groups": new_groups, "rem": new_rem, "step": step + 1}
+    return logits, new_cache

@@ -1,0 +1,90 @@
+"""Training loop: jit'd step + checkpoint/restore + preemption + watchdog.
+
+Device-count-agnostic: the same loop drives the 1-CPU examples and the
+meshed launcher (repro/launch/train.py passes in_shardings via jit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, batch_at
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import PreemptionHandler, StragglerWatchdog
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+__all__ = ["LoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+def train_loop(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    dcfg: DataConfig,
+    lcfg: LoopConfig,
+    *,
+    jit_kwargs: Optional[dict] = None,
+    log_fn: Callable[[str], None] = print,
+) -> dict:
+    """Runs (or resumes) training; returns final metrics summary."""
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,), **(jit_kwargs or {}))
+    state = init_state(jax.random.PRNGKey(lcfg.seed), cfg, tcfg)
+
+    start = 0
+    mgr = None
+    if lcfg.ckpt_dir:
+        mgr = CheckpointManager(lcfg.ckpt_dir, every=lcfg.ckpt_every, keep=lcfg.ckpt_keep)
+        restored, manifest = mgr.restore_latest(state)
+        if restored is not None:
+            state = restored
+            start = manifest["step"]
+            log_fn(f"[loop] resumed from step {start}")
+
+    pre = PreemptionHandler()
+    dog = StragglerWatchdog()
+    losses = []
+    t_end = None
+    for step in range(start, lcfg.total_steps):
+        t0 = time.monotonic()
+        batch = {k: jax.numpy.asarray(v) for k, v in batch_at(dcfg, step).items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.monotonic() - t0
+        slow = dog.observe(step, dt)
+        if step % lcfg.log_every == 0 or slow:
+            tag = " [STRAGGLER]" if slow else ""
+            log_fn(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms){tag}")
+        if mgr and (mgr.should_save(step + 1, force=pre.preempted)):
+            mgr.save(step + 1, state, extra={"loss": loss})
+        if pre.preempted:
+            log_fn(f"[loop] preemption requested; checkpointed at step {step + 1}")
+            break
+        t_end = step + 1
+    pre.restore()
+
+    out = {
+        "final_step": t_end or start,
+        "first_loss": losses[0] if losses else float("nan"),
+        "final_loss": float(np.mean(losses[-5:])) if losses else float("nan"),
+        **dog.stats(),
+    }
+    if mgr and losses:
+        mgr.save(out["final_step"], state, extra={"loss": out["final_loss"]})
+    out["state"] = state
+    return out

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-step on CPU, asserting output shapes and finiteness; plus a decode
+step for every arch (all 10 are decoder-bearing)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import LM_SHAPES
+from repro.models import model as MD
+
+
+def _smoke_batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(ks[2], (B, cfg.vision_prefix, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.random.normal(ks[2], (B, cfg.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch, dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    params = MD.init_params(key, cfg)
+    batch = _smoke_batch(cfg, key)
+
+    def loss(p):
+        l, _ = MD.loss_fn(p, cfg, batch)
+        return l
+
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l0))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree_util.tree_leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    # one SGD step reduces nothing structurally — just check it applies cleanly
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    l1 = loss(params2)
+    assert np.isfinite(float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke(arch, dtype=jnp.float32)
+    key = jax.random.PRNGKey(1)
+    params = MD.init_params(key, cfg)
+    cache = MD.init_cache(cfg, 2, 24)
+    toks = jnp.array([3, 5])
+    for _ in range(3):
+        logits, cache = MD.serve_step_fn(params, cfg, cache, toks)
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def test_full_configs_exact_dims():
+    """The FULL configs carry the exact published dims (never instantiated here)."""
+    expect = {
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    }
+    for arch, (L, d, H, KVH, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, KVH, ff, V), arch
+
+
+def test_long_500k_applicability_policy():
+    shape = LM_SHAPES["long_500k"]
+    runnable = {a for a in ARCHS if MD.shape_is_applicable(get_config(a), shape)[0]}
+    assert runnable == {"recurrentgemma-9b", "falcon-mamba-7b"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_exist_for_all_cells(arch):
+    cfg = get_config(arch)
+    for shape in LM_SHAPES.values():
+        ok, why = MD.shape_is_applicable(cfg, shape)
+        if not ok:
+            continue
+        specs = MD.input_specs(cfg, shape)
+        assert specs, (arch, shape.name)
+        leaves = jax.tree_util.tree_leaves(specs)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)

@@ -1,0 +1,170 @@
+"""Unit tests for the core word2ket / word2ketXS library."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kron as K
+from repro.core import word2ketxs as W2KXS
+from repro.core.embedding import EmbeddingConfig, embed_lookup, embedding_num_params, init_embedding
+from repro.core.logits import HeadConfig, head_ce_loss, head_logits, head_num_params, init_head
+
+
+def test_mixed_radix_roundtrip():
+    radices = (7, 5, 3)
+    ids = jnp.arange(7 * 5 * 3)
+    digits = K.mixed_radix_digits(ids, radices)
+    back = K.mixed_radix_recompose(digits, radices)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(ids))
+    for d, r in zip(digits, radices):
+        assert int(jnp.max(d)) == r - 1 and int(jnp.min(d)) == 0
+
+
+def test_kron_tree_equals_flat_without_ln():
+    key = jax.random.PRNGKey(0)
+    vs = [jax.random.normal(jax.random.fold_in(key, j), (3, 2, q)) for j, q in enumerate([4, 5, 3, 2])]
+    flat = K.kron_vectors(vs)
+    tree = K.kron_vectors_tree(vs, use_layernorm=False)
+    np.testing.assert_allclose(np.asarray(flat), np.asarray(tree), rtol=1e-6)
+
+
+def test_kron_inner_product_identity():
+    """Paper eq. 2: <v⊗w, v'⊗w'> = <v,v'><w,w'>."""
+    key = jax.random.PRNGKey(1)
+    v, w, v2, w2 = (jax.random.normal(jax.random.fold_in(key, i), (6,)) for i in range(4))
+    lhs = jnp.dot(K.kron_vectors([v, w]), K.kron_vectors([v2, w2]))
+    rhs = jnp.dot(v, v2) * jnp.dot(w, w2)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-5)
+
+
+@pytest.mark.parametrize("order,rank", [(2, 1), (2, 4), (3, 2), (4, 1)])
+def test_word2ketxs_lazy_equals_dense_oracle(order, rank):
+    """Lazy per-token reconstruction == dense Σ_k ⊗_j F_jk (LN off)."""
+    cfg = EmbeddingConfig(
+        vocab_size=50, embed_dim=16, kind="word2ketxs", order=order, rank=rank,
+        use_layernorm=False,
+    )
+    params = init_embedding(jax.random.PRNGKey(2), cfg)
+    lazy = W2KXS.materialize(cfg, params)
+    dense = W2KXS.materialize_dense_oracle(cfg, params)
+    np.testing.assert_allclose(np.asarray(lazy), np.asarray(dense), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["regular", "word2ket", "word2ketxs"])
+def test_lookup_shapes_and_finite(kind):
+    cfg = EmbeddingConfig(vocab_size=97, embed_dim=24, kind=kind, order=2, rank=3)
+    params = init_embedding(jax.random.PRNGKey(3), cfg)
+    ids = jnp.array([[0, 1, 96], [5, 5, 7]])
+    out = embed_lookup(cfg, params, ids)
+    assert out.shape == (2, 3, 24)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_paper_param_counts_table1():
+    """Exact #Params reproduction for GIGAWORD (Table 1), vocab 30,428."""
+    d = 30428
+    assert embedding_num_params(EmbeddingConfig(d, 256, kind="regular")) == 7_789_568
+    assert embedding_num_params(
+        EmbeddingConfig(d, 256, kind="word2ket", order=4, rank=1, q_dims=(4, 4, 4, 4))
+    ) == 486_848
+    assert embedding_num_params(
+        EmbeddingConfig(d, 400, kind="word2ketxs", order=2, rank=10,
+                        q_dims=(20, 20), t_dims=(175, 175))
+    ) == 70_000
+    assert embedding_num_params(
+        EmbeddingConfig(d, 256, kind="word2ketxs", order=4, rank=1,
+                        q_dims=(4, 4, 4, 4), t_dims=(14, 14, 14, 14))
+    ) == 224
+
+
+def test_paper_param_counts_table3():
+    """SQuAD/DrQA (Table 3), vocab 118,655, p=300."""
+    d = 118655
+    assert embedding_num_params(
+        EmbeddingConfig(d, 300, kind="word2ketxs", order=2, rank=2,
+                        q_dims=(18, 18), t_dims=(345, 345))
+    ) == 24_840
+    assert embedding_num_params(
+        EmbeddingConfig(d, 300, kind="word2ketxs", order=4, rank=1,
+                        q_dims=(5, 5, 5, 5), t_dims=(19, 19, 19, 19))
+    ) == 380
+
+
+def test_gradients_flow():
+    cfg = EmbeddingConfig(vocab_size=40, embed_dim=16, kind="word2ketxs", order=2, rank=2)
+    params = init_embedding(jax.random.PRNGKey(4), cfg)
+    ids = jnp.arange(8)
+
+    def loss(p):
+        return jnp.sum(embed_lookup(cfg, p, ids) ** 2)
+
+    g = jax.grad(loss)(params)
+    for f in g["factors"]:
+        assert bool(jnp.all(jnp.isfinite(f)))
+        assert float(jnp.sum(jnp.abs(f))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Kron head + fused CE
+# ---------------------------------------------------------------------------
+
+def test_kron_head_matches_dense_materialization():
+    cfg = HeadConfig(vocab_size=60, embed_dim=16, kind="kron", order=2, rank=3)
+    params = init_head(jax.random.PRNGKey(5), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(6), (7, 16))
+    logits = head_logits(cfg, params, h)
+    table = W2KXS.materialize_dense_oracle(cfg.as_embedding_config(), params)  # (vocab, p)
+    ref = h @ table.T
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["dense", "kron"])
+def test_fused_ce_matches_naive(kind):
+    cfg = HeadConfig(vocab_size=130, embed_dim=16, kind=kind, order=2, rank=2, vocab_tile=3)
+    params = init_head(jax.random.PRNGKey(7), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(8), (9, 16))
+    y = jax.random.randint(jax.random.PRNGKey(9), (9,), 0, 130)
+    loss = head_ce_loss(cfg, params, h, y)
+    logits = head_logits(cfg, params, h)
+    ref = jnp.mean(jax.nn.logsumexp(logits, axis=-1) - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+    np.testing.assert_allclose(float(loss), float(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["dense", "kron"])
+def test_fused_ce_grads_match_naive(kind):
+    cfg = HeadConfig(vocab_size=50, embed_dim=16, kind=kind, order=2, rank=2, vocab_tile=2)
+    params = init_head(jax.random.PRNGKey(10), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(11), (5, 16))
+    y = jax.random.randint(jax.random.PRNGKey(12), (5,), 0, 50)
+
+    def fused(p, hh):
+        return head_ce_loss(cfg, p, hh, y)
+
+    def naive(p, hh):
+        logits = head_logits(cfg, p, hh)
+        return jnp.mean(
+            jax.nn.logsumexp(logits, axis=-1) - jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+        )
+
+    g1p, g1h = jax.grad(fused, argnums=(0, 1))(params, h)
+    g2p, g2h = jax.grad(naive, argnums=(0, 1))(params, h)
+    np.testing.assert_allclose(np.asarray(g1h), np.asarray(g2h), rtol=1e-4, atol=1e-5)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5),
+        g1p, g2p,
+    )
+
+
+def test_head_num_params():
+    cfg = HeadConfig(vocab_size=256000, embed_dim=4096, kind="kron", order=2, rank=32)
+    ecfg = cfg.as_embedding_config()
+    q, t = ecfg.resolved_q(), ecfg.resolved_t()
+    assert math.prod(q) >= 4096 and math.prod(t) >= 256000
+    assert head_num_params(cfg) == 32 * sum(a * b for a, b in zip(q, t))
+    dense = HeadConfig(vocab_size=256000, embed_dim=4096, kind="dense")
+    assert head_num_params(dense) == 256000 * 4096
+    # >100x compression like the paper's headline claim
+    assert head_num_params(dense) / head_num_params(cfg) > 100

@@ -1,0 +1,66 @@
+"""Dry-run engine regression tests (tiny mesh in a subprocess; the full
+512-device sweep lives in repro/launch/dryrun.py)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.configs.base import LM_SHAPES, ShapeSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_clamp_microbatches():
+    from repro.launch.dryrun_lib import clamp_microbatches
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    train = LM_SHAPES["train_4k"]  # global_batch 256
+    assert clamp_microbatches(16, train, mesh) == 16
+    assert clamp_microbatches(3, train, mesh) == 2  # 256 % 3 != 0 -> 2
+    decode = LM_SHAPES["decode_32k"]
+    assert clamp_microbatches(16, decode, mesh) == 16  # non-train untouched
+
+
+def test_run_cell_smoke_mesh(tmp_path):
+    """run_cell end-to-end on a 2x2 mesh for the smallest arch/shape combo
+    (subprocess so the 4-device world never leaks into this process)."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json
+        from repro.launch.mesh import make_mesh
+        from repro.launch.dryrun_lib import run_cell
+        mesh = make_mesh((2, 2), ("data", "model"))
+        res = run_cell("whisper-base", "train_4k", mesh, "test_2x2",
+                       r"{tmp_path}", force=True)
+        assert res["status"] == "ok", res.get("error")
+        assert res["hlo"]["flops_per_device"] > 0
+        assert res["hlo"]["unknown_trip"] == 0
+        assert res["model_estimate"]["hbm_floor_bytes_per_device"] > 0
+        print("CELL-OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "CELL-OK" in out.stdout
+    # artifact written and loadable
+    path = os.path.join(str(tmp_path), "whisper-base__train_4k__test_2x2.json")
+    with open(path) as f:
+        cell = json.load(f)
+    assert cell["status"] == "ok"
+
+
+def test_skip_policy_records_reason(tmp_path):
+    """long_500k on a full-attention arch records the skip without compiling."""
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    res = run_cell("glm4-9b", "long_500k", mesh, "test_1x1", str(tmp_path),
+                   force=True)
+    assert res["status"] == "skipped"
+    assert "quadratic" in res["reason"]

@@ -1,0 +1,57 @@
+"""Validates the trip-count-weighted HLO analyzer on known workloads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_stats import analyze_hlo
+
+
+def test_weighted_flops_exact_on_matmul_scan():
+    N, T = 128, 12
+
+    def f(w, x):
+        def body(x, wi):
+            return x @ wi, None
+        x, _ = jax.lax.scan(body, x, w)
+        return jnp.sum(x)
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((T, N, N), jnp.float32),
+        jax.ShapeDtypeStruct((N, N), jnp.float32)).compile()
+    st = analyze_hlo(compiled.as_text())
+    expected = T * 2 * N ** 3
+    np.testing.assert_allclose(st.flops, expected, rtol=1e-6)
+    assert st.unknown_trip == 0
+    assert st.n_while == 1
+    # unweighted (cost_analysis-like) counts the body once
+    np.testing.assert_allclose(st.unweighted_flops, expected / T, rtol=1e-6)
+
+
+def test_nested_scan_weights_multiply():
+    N, T1, T2 = 64, 3, 5
+
+    def f(w, x):
+        def outer(x, _):
+            def inner(x, wi):
+                return x @ wi, None
+            x, _ = jax.lax.scan(inner, x, w)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, None, length=T1)
+        return jnp.sum(x)
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((T2, N, N), jnp.float32),
+        jax.ShapeDtypeStruct((N, N), jnp.float32)).compile()
+    st = analyze_hlo(compiled.as_text())
+    np.testing.assert_allclose(st.flops, T1 * T2 * 2 * N ** 3, rtol=1e-6)
+
+
+def test_collective_bytes_zero_on_single_device():
+    def f(x):
+        return jnp.sum(x * 2)
+
+    compiled = jax.jit(f).lower(jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
+    st = analyze_hlo(compiled.as_text())
+    assert st.total_collective_bytes() == 0.0
+    assert st.flops == 0.0  # no dots

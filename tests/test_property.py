@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) for the tensor-product algebra invariants
+the paper relies on (eq. 1, eq. 2, §3.2 lazy indexing) and system invariants
+(CE streaming == naive CE for arbitrary shapes/tilings)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kron as K
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=2, max_value=6)
+small_float = st.floats(min_value=-2.0, max_value=2.0, allow_nan=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims, dims, st.integers(0, 2 ** 31 - 1))
+def test_bilinearity(m, n, seed):
+    """Paper eq. 1: (cv)⊗w == c(v⊗w) == v⊗(cw); (v+v')⊗w == v⊗w + v'⊗w."""
+    key = jax.random.PRNGKey(seed)
+    v, v2 = jax.random.normal(key, (2, m))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    c = 1.7
+    lhs = K.kron_vectors([c * v, w])
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(c * K.kron_vectors([v, w])),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(K.kron_vectors([v, c * w])),
+                               rtol=1e-5, atol=1e-6)
+    add = K.kron_vectors([v + v2, w])
+    np.testing.assert_allclose(
+        np.asarray(add),
+        np.asarray(K.kron_vectors([v, w]) + K.kron_vectors([v2, w])),
+        rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims, dims, st.integers(0, 2 ** 31 - 1))
+def test_inner_product_factorizes(m, n, seed):
+    """Paper eq. 2: <v⊗w, v'⊗w'> = <v,v'>·<w,w'>."""
+    key = jax.random.PRNGKey(seed)
+    v, v2 = jax.random.normal(key, (2, m))
+    w, w2 = jax.random.normal(jax.random.fold_in(key, 1), (2, n))
+    lhs = float(jnp.dot(K.kron_vectors([v, w]), K.kron_vectors([v2, w2])))
+    rhs = float(jnp.dot(v, v2) * jnp.dot(w, w2))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(dims, min_size=2, max_size=4), st.integers(0, 2 ** 31 - 1))
+def test_norm_multiplicativity(qs, seed):
+    """||⊗v_j|| = Π||v_j|| — tensor products of unit vectors stay unit norm."""
+    key = jax.random.PRNGKey(seed)
+    vs = [jax.random.normal(jax.random.fold_in(key, j), (q,)) for j, q in enumerate(qs)]
+    lhs = float(jnp.linalg.norm(K.kron_vectors(vs)))
+    rhs = float(np.prod([jnp.linalg.norm(v) for v in vs]))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(dims, dims), min_size=2, max_size=3),
+       st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_lazy_column_extraction(qts, rank, seed):
+    """§3.2: col_i(Σ_k ⊗_j F_jk) == Σ_k ⊗_j col_{i_j}(F_jk) for every i."""
+    key = jax.random.PRNGKey(seed)
+    factors = [jax.random.normal(jax.random.fold_in(key, j), (rank, q, t))
+               for j, (q, t) in enumerate(qts)]
+    D = int(np.prod([t for _, t in qts]))
+    dense = sum(K.kron_matrix([f[k] for f in factors])
+                for k in range(rank))  # (prod q, prod t)
+    ids = jnp.arange(D)
+    digits = K.mixed_radix_digits(ids, [t for _, t in qts])
+    cols = [jnp.take(f, d, axis=2) for f, d in zip(factors, digits)]
+    cols = [jnp.moveaxis(c, (0, 1), (-2, -1)) for c in cols]
+    lazy = jnp.sum(K.kron_vectors(cols), axis=-2)  # (D, prod q)
+    np.testing.assert_allclose(np.asarray(lazy), np.asarray(dense.T),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 300), st.integers(1, 16), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_streamed_ce_equals_naive_any_tiling(vocab, batch, tile, seed):
+    """The online-logsumexp streamed CE is exact for any vocab/tile/batch."""
+    from repro.core.logits import HeadConfig, head_ce_loss, head_logits, init_head
+    key = jax.random.PRNGKey(seed)
+    cfg = HeadConfig(vocab_size=vocab, embed_dim=8, kind="kron", order=2, rank=2,
+                     vocab_tile=tile)
+    params = init_head(key, cfg)
+    h = jax.random.normal(jax.random.fold_in(key, 1), (batch, 8))
+    y = jax.random.randint(jax.random.fold_in(key, 2), (batch,), 0, vocab)
+    fused = float(head_ce_loss(cfg, params, h, y))
+    logits = head_logits(cfg, params, h)
+    naive = float(jnp.mean(jax.nn.logsumexp(logits, -1)
+                           - jnp.take_along_axis(logits, y[:, None], 1)[:, 0]))
+    np.testing.assert_allclose(fused, naive, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 64), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_mixed_radix_roundtrip_random_radices(hi, order, seed):
+    rng = np.random.default_rng(seed)
+    radices = [int(r) for r in rng.integers(2, hi + 1, size=order)]
+    total = int(np.prod(radices))
+    ids = jnp.asarray(rng.integers(0, total, size=32))
+    digits = K.mixed_radix_digits(ids, radices)
+    back = K.mixed_radix_recompose(digits, radices)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(ids))

@@ -1,0 +1,74 @@
+"""Continuous-batching engine: correctness vs direct decode + scheduling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import model as MD
+from repro.serve.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("granite-3-2b", dtype=jnp.float32)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _direct_greedy(cfg, params, prompt, n_new):
+    cache = MD.init_cache(cfg, 1, 64)
+    toks = None
+    for t in prompt:
+        logits, cache = MD.serve_step_fn(params, cfg, cache,
+                                         jnp.array([t], jnp.int32))
+    out = []
+    tok = int(jnp.argmax(logits[0]))
+    out.append(tok)
+    for _ in range(n_new - 1):
+        logits, cache = MD.serve_step_fn(params, cfg, cache,
+                                         jnp.array([tok], jnp.int32))
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+    return out
+
+
+def test_engine_matches_direct_decode(setup):
+    cfg, params = setup
+    prompt = [5, 17, 333, 42]
+    ref = _direct_greedy(cfg, params, prompt, 6)
+
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64)
+    req = Request(uid=1, prompt=prompt, max_new_tokens=6)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.output == ref
+
+
+def test_engine_batches_multiple_requests(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64)
+    reqs = [Request(uid=i, prompt=[i + 1, i + 2], max_new_tokens=4)
+            for i in range(5)]  # 5 requests through 2 slots
+    for r in reqs:
+        eng.submit(r)
+    ticks = eng.run_until_drained()
+    st = eng.stats()
+    assert st["completed"] == 5
+    assert st["generated_tokens"] == 20
+    assert ticks < 40
+    # batched outputs equal isolated single-request outputs
+    for r in reqs:
+        assert r.output == _direct_greedy(cfg, params, r.prompt, 4), r.uid
+
+
+def test_engine_eos_early_stop(setup):
+    cfg, params = setup
+    ref = _direct_greedy(cfg, params, [9, 9], 8)
+    eos = ref[2]  # stop at the 3rd generated token
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    req = Request(uid=1, prompt=[9, 9], max_new_tokens=8, eos_id=eos)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.output == ref[:3]

@@ -1,0 +1,157 @@
+"""Substrate tests: optimizer, data pipeline, compression, fault handling."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synthetic import DataConfig, batch_at
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import (CompressionConfig, compress_decompress,
+                                     init_residuals)
+from repro.train.fault import PreemptionHandler, StragglerWatchdog
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt, m = adamw_update(cfg, grads, opt, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+    assert int(opt["step"]) == 200
+
+
+def test_grad_clip_caps_update_norm():
+    params = {"w": jnp.zeros((4,))}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw_update(cfg, huge, opt, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(f(jnp.array(0))) == 0.0
+    assert float(f(jnp.array(10))) == pytest.approx(1.0)
+    assert float(f(jnp.array(110))) == pytest.approx(0.1, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_shardable():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8, seed=3)
+    b1, b2 = batch_at(cfg, 5), batch_at(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # sharded batches tile the global batch deterministically per shard
+    s0 = batch_at(DataConfig(100, 8, 8, seed=3, n_shards=2, shard=0), 5)
+    s1 = batch_at(DataConfig(100, 8, 8, seed=3, n_shards=2, shard=1), 5)
+    assert s0["tokens"].shape == (4, 8)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=6, global_batch=2, seed=0)
+    b = batch_at(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_is_unbiased_over_time():
+    """Error feedback: accumulated wire values converge to accumulated grads."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(4096,)) * 1e-3)
+    grads = {"w": g_true}
+    res = init_residuals(grads)
+    total_wire = jnp.zeros_like(g_true)
+    n = 50
+    for _ in range(n):
+        wire, res = compress_decompress(grads, res)
+        total_wire = total_wire + wire["w"]
+    # total transmitted ≈ n * g (residual bounded), elementwise
+    np.testing.assert_allclose(np.asarray(total_wire / n), np.asarray(g_true),
+                               atol=2e-6)
+
+
+def test_compression_quantization_error_bounded():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(3000,)))}
+    res = init_residuals(g)
+    wire, res2 = compress_decompress(g, res)
+    err = np.abs(np.asarray(wire["w"] - g["w"]))
+    scale = np.abs(np.asarray(g["w"])).max() / 127
+    assert err.max() <= scale * 1.01
+    np.testing.assert_allclose(np.asarray(res2["w"]), np.asarray(g["w"] - wire["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_training_with_compression_still_learns():
+    from repro.configs import get_smoke
+    from repro.train.loop import LoopConfig, train_loop
+    from repro.train.step import TrainConfig
+
+    cfg = get_smoke("granite-20b", dtype=jnp.float32)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2),
+                       compression=CompressionConfig(enabled=True))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    out = train_loop(cfg, tcfg, dcfg, LoopConfig(total_steps=40, log_every=100))
+    assert out["final_loss"] < out["first_loss"] - 0.3
+
+
+# ---------------------------------------------------------------------------
+# microbatch accumulation
+# ---------------------------------------------------------------------------
+
+def test_microbatch_grads_match_full_batch():
+    from repro.configs import get_smoke
+    from repro.data.synthetic import batch_at
+    from repro.train.step import TrainConfig, init_state, make_train_step
+
+    cfg = get_smoke("glm4-9b", dtype=jnp.float32)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=8, global_batch=4)
+    batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
+
+    outs = {}
+    for mb in (1, 2):
+        tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), microbatches=mb)
+        state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        new_state, metrics = step(state, batch)
+        outs[mb] = new_state["params"]
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=2e-4, atol=2e-5),
+        outs[1], outs[2])
+
+
+# ---------------------------------------------------------------------------
+# fault handling
+# ---------------------------------------------------------------------------
+
+def test_straggler_watchdog_flags_slow_steps():
+    dog = StragglerWatchdog(factor=3.0)
+    for i in range(10):
+        assert not dog.observe(i, 0.1)
+    assert dog.observe(10, 1.0)  # 10x median
+    assert dog.stats()["stragglers"] == 1
+
+
+def test_preemption_handler_flag():
+    import os
+    import signal
+    h = PreemptionHandler(signals=(signal.SIGUSR1,))
+    assert not h.preempted
+    os.kill(os.getpid(), signal.SIGUSR1)
+    assert h.preempted
+    h.restore()
