@@ -3,15 +3,32 @@
 Prints ``name,us_per_call,derived`` CSV lines (harness contract). Sections:
   * paper_tables — Tables 1–3 #Params/space-saving, exact reproduction
   * timing — lookup/CE/kernel/train-step microbenches (CPU wall clock)
+  * kernels — fwd/bwd split for the fused kron kernels (BENCH_kernels.json)
   * roofline — three-term roofline per dry-run cell (reads results/dryrun)
+
+``--quick`` runs the CI smoke: paper tables + a small-shape kernel fwd/bwd
+pass (no JSON rewrite) — fast enough for every pull request.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("section", nargs="?", default="all",
+                    choices=["all", "timing", "kernels", "ablation", "roofline"])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: paper tables + small-shape kernel fwd/bwd")
+    args = ap.parse_args()
+    if args.quick and args.section != "all":
+        ap.error("--quick replaces the section sweep; drop one of the two")
+
     def report(line: str) -> None:
         print(line, flush=True)
 
@@ -20,10 +37,18 @@ def main() -> None:
     from benchmarks import paper_tables
     paper_tables.run(report)
 
-    only = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if args.quick:
+        from benchmarks import timing
+        timing.bench_kernel_fwd_bwd(report, quick=True)
+        return
+
+    only = args.section
     if only in ("all", "timing"):
         from benchmarks import timing
         timing.run(report)
+    if only == "kernels":
+        from benchmarks import timing
+        timing.bench_kernel_fwd_bwd(report, out_path=timing.BENCH_JSON)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run(report)

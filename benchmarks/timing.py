@@ -4,11 +4,19 @@ One function per measured claim:
   * embedding lookup: regular vs word2ket vs word2ketXS (the paper's
     "more complex processing" cost, §4 timing discussion);
   * fused streamed CE vs naive materialized CE (memory-win compute cost);
+  * fwd / bwd split timings for both fused kron kernels vs the reference-VJP
+    backward, at the paper's GLoVe scale and an LM scale — persisted to
+    ``BENCH_kernels.json`` so the perf trajectory is tracked across PRs
+    (regenerate with ``PYTHONPATH=src python benchmarks/run.py kernels``;
+    add ``REPRO_RETUNE=1`` to re-measure the autotune table first);
   * per-family smoke train-step and decode-step latency.
 """
 
 from __future__ import annotations
 
+import json
+import math
+import os
 import time
 
 import jax
@@ -76,6 +84,184 @@ def bench_fused_ce(report):
            f"logits={2048 * 50_000 * 4 / 1e6:.0f}MB")
 
 
+# ---------------------------------------------------------------------------
+# fwd/bwd kernel benchmark (BENCH_kernels.json)
+# ---------------------------------------------------------------------------
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
+
+# (name, vocab, p, order, rank, gather_tokens, ce_tokens, reps)
+_BENCH_SHAPES = [
+    ("glove_30k_p300", 30_000, 300, 2, 8, 4096, 2048, 5),  # paper Table 1 scale
+    ("lm_256k_p4096", 262_144, 4096, 2, 8, 2048, 256, 3),  # production LM scale
+]
+_QUICK_SHAPE = ("quick_2k_p64", 2_000, 64, 2, 4, 256, 128, 1)
+
+
+def _interleaved_us(fns, reps: int):
+    """Median wall-clock (µs) per pre-compiled zero-arg fn, with the fns
+    interleaved round-robin — cancels the container's thermal / noisy-
+    neighbor throughput drift that back-to-back timing bakes into ratios."""
+    import statistics
+    times = [[] for _ in fns]
+    for _ in range(reps):
+        for slot, fn in zip(times, fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            slot.append(time.perf_counter() - t0)
+    return [statistics.median(ts) * 1e6 for ts in times]
+
+
+def _xs_factors(key, rank, order, q, t):
+    s = (1.0 / (math.sqrt(rank) * math.sqrt(math.prod(q)))) ** (1.0 / order)
+    return [
+        jax.random.normal(jax.random.fold_in(key, j), (rank, qj, tj)) * s
+        for j, (qj, tj) in enumerate(zip(q, t))
+    ]
+
+
+def _retune(op, rank, q, t, grad_builder, save_path):
+    """Measure block candidates for one op/shape and persist the winner."""
+    from repro.kernels import autotune
+    backend = jax.default_backend()
+    if op == "kron_gather":
+        cands = [autotune.BlockConfig(bb) for bb in (64, 128, 256, 512)]
+    else:
+        t1 = t[0]
+        divs = [d for d in (2, 4, 8, 16, 25, 32, 64) if t1 % d == 0][:4]
+        cands = [autotune.BlockConfig(bb, t1b)
+                 for bb in (128, 256) for t1b in (divs or [1])]
+    best, timings = autotune.measure(cands, grad_builder, n=1, warmup=1)
+    autotune.update_table(autotune.table_key(op, backend, rank, q, t), best,
+                          us=timings[best], save_path=save_path)
+    return best
+
+
+def bench_kernel_fwd_bwd(report, quick: bool = False, out_path=None):
+    """fwd / bwd(kernel) / bwd(ref-VJP) split for both fused ops."""
+    from repro.core.kron import choose_factorization
+    from repro.kernels import autotune
+    from repro.kernels.kron_gather import ops as gops
+    from repro.kernels.kron_logits import ops as lops
+
+    backend = jax.default_backend()
+    retune = os.environ.get("REPRO_RETUNE") and not quick
+    # persist retuned winners wherever the resolver will reload them from
+    table_path = os.environ.get(
+        "REPRO_AUTOTUNE_TABLE",
+        os.path.join(_REPO_ROOT, "src", "repro", "kernels",
+                     "autotune_table.json"))
+    shapes = [_QUICK_SHAPE] if quick else _BENCH_SHAPES
+    entries = []
+    for name, vocab, p, order, rank, g_tok, ce_tok, reps in shapes:
+        q, t = choose_factorization(p, order), choose_factorization(vocab, order)
+        key = jax.random.PRNGKey(0)
+        factors = _xs_factors(key, rank, order, q, t)
+        ids = jax.random.randint(jax.random.fold_in(key, 9), (g_tok,), 0, vocab)
+        h = jax.random.normal(jax.random.fold_in(key, 10), (ce_tok, p))
+        y = jax.random.randint(jax.random.fold_in(key, 11), (ce_tok,), 0, vocab)
+
+        # ---- kron_gather: fwd, fwd+bwd(kernel), fwd+bwd(ref) --------------
+        def g_fwd(fs, i):
+            return gops.kron_gather(fs, i, p, True, None)
+
+        def g_loss(fs, i):
+            return jnp.sum(gops.kron_gather(fs, i, p, True, None))
+
+        # value_and_grad keeps the loss live — grad-only lets XLA dead-code
+        # the forward (the cotangent of a linear loss is input-independent)
+        # and the "step − fwd" split would undercount
+        if retune:
+            _retune("kron_gather", rank, q, t,
+                    lambda bc: (lambda f=jax.jit(jax.value_and_grad(
+                        lambda fs: jnp.sum(gops.kron_gather(
+                            fs, ids, p, True, bc.block_b)))): f(factors)),
+                    table_path)
+        # trace each closure under its backward impl BEFORE switching it —
+        # jit traces at first call, not at wrap time
+        fwd_j = jax.jit(g_fwd)
+        jax.block_until_ready(fwd_j(factors, ids))
+        gops.set_backward_impl("kernel")
+        gk = jax.jit(jax.value_and_grad(g_loss))
+        jax.block_until_ready(gk(factors, ids))
+        gops.set_backward_impl("ref")
+        gr = jax.jit(jax.value_and_grad(g_loss))
+        jax.block_until_ready(gr(factors, ids))
+        gops.set_backward_impl("kernel")
+        fwd_us, tot_k, tot_r = _interleaved_us(
+            [lambda: fwd_j(factors, ids), lambda: gk(factors, ids),
+             lambda: gr(factors, ids)], reps)
+        bc = autotune.get_block_config("kron_gather", rank, q, t, backend)
+        entries.append({
+            "op": "kron_gather", "scale": name, "backend": backend,
+            "shape": {"vocab": vocab, "p": p, "order": order, "rank": rank,
+                      "q_dims": list(q), "t_dims": list(t), "tokens": g_tok},
+            "blocks": {"block_b": bc.block_b},
+            "fwd_us": round(fwd_us, 1),
+            "fwd_bwd_us": round(tot_k, 1),
+            "bwd_kernel_us": round(tot_k - fwd_us, 1),
+            "bwd_ref_us": round(tot_r - fwd_us, 1),
+            "bwd_speedup_vs_ref": round((tot_r - fwd_us) / max(tot_k - fwd_us, 1e-9), 2),
+        })
+        report(f"kernels.{name}.kron_gather,{tot_k:.1f},"
+               f"fwd={fwd_us:.0f};bwd_kernel={tot_k - fwd_us:.0f};"
+               f"bwd_ref={tot_r - fwd_us:.0f}")
+
+        # ---- fused_kron_ce: fwd, fwd+bwd(kernel), fwd+bwd(ref) ------------
+        def fused_sum(fs, hh):
+            return jnp.sum(lops.fused_kron_ce(fs, hh, y, vocab, None, None))
+
+        ce_fwd = fused_sum
+
+        if retune:
+            _retune("kron_logits", rank, q, t,
+                    lambda bc: (lambda f=jax.jit(jax.value_and_grad(
+                        lambda fs, hh: jnp.sum(lops.fused_kron_ce(
+                            fs, hh, y, vocab, bc.t1_block, bc.block_b)),
+                        argnums=(0, 1))): f(factors, h)),
+                    table_path)
+            autotune.load_table(refresh=True)
+        fwd_j = jax.jit(ce_fwd)
+        jax.block_until_ready(fwd_j(factors, h))
+        lops.set_backward_impl("kernel")
+        gk = jax.jit(jax.value_and_grad(fused_sum, argnums=(0, 1)))
+        jax.block_until_ready(gk(factors, h))
+        lops.set_backward_impl("ref")
+        gr = jax.jit(jax.value_and_grad(fused_sum, argnums=(0, 1)))
+        jax.block_until_ready(gr(factors, h))
+        lops.set_backward_impl("kernel")
+        fwd_us, tot_k, tot_r = _interleaved_us(
+            [lambda: fwd_j(factors, h), lambda: gk(factors, h),
+             lambda: gr(factors, h)], reps)
+        bc = autotune.get_block_config("kron_logits", rank, q, t, backend)
+        entries.append({
+            "op": "fused_kron_ce", "scale": name, "backend": backend,
+            "shape": {"vocab": vocab, "p": p, "order": order, "rank": rank,
+                      "q_dims": list(q), "t_dims": list(t), "tokens": ce_tok},
+            "blocks": {"block_b": bc.block_b, "t1_block": bc.t1_block},
+            "fwd_us": round(fwd_us, 1),
+            "fwd_bwd_us": round(tot_k, 1),
+            "bwd_kernel_us": round(tot_k - fwd_us, 1),
+            "bwd_ref_us": round(tot_r - fwd_us, 1),
+            "bwd_speedup_vs_ref": round((tot_r - fwd_us) / max(tot_k - fwd_us, 1e-9), 2),
+        })
+        report(f"kernels.{name}.fused_kron_ce,{tot_k:.1f},"
+               f"fwd={fwd_us:.0f};bwd_kernel={tot_k - fwd_us:.0f};"
+               f"bwd_ref={tot_r - fwd_us:.0f}")
+
+    # only an explicit out_path rewrites the tracked JSON (run.py `kernels`
+    # section); quick mode and the general timing sweep just report lines
+    if out_path and not quick:
+        doc = {"generated": time.strftime("%Y-%m-%d %H:%M:%S"),
+               "backend": backend, "entries": entries}
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        report(f"kernels.json,0.0,written={os.path.relpath(out_path, _REPO_ROOT)}")
+    return entries
+
+
 def bench_smoke_steps(report):
     from repro.configs import ARCHS, get_smoke
     from repro.data.synthetic import DataConfig, batch_at
@@ -101,4 +287,7 @@ def run(report):
     bench_lookup(report)
     bench_pallas_kernels(report)
     bench_fused_ce(report)
+    # small-shape smoke only — the full fwd/bwd sweep (and the tracked
+    # BENCH_kernels.json rewrite) is the dedicated `run.py kernels` section
+    bench_kernel_fwd_bwd(report, quick=True)
     bench_smoke_steps(report)

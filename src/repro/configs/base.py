@@ -73,7 +73,13 @@ class ModelConfig:
     head_kind: str = "kron"  # dense | kron
     head_order: int = 2
     head_rank: int = 32
-    head_vocab_tile: int = 4  # CE streaming tile (t1 digits) — perf knob
+    # CE streaming tile (t1 digits) — perf knob; None = autotuned
+    head_vocab_tile: Optional[int] = 4
+    # fused Pallas kernels for lookup/CE (fwd + dedicated bwd): None = auto
+    # (TPU only); token-block sizes: None = autotuned per shape/backend
+    use_kernels: Optional[bool] = None
+    embedding_block_b: Optional[int] = None
+    head_block_b: Optional[int] = None
     # token sharding for the streamed CE loss: "data" replicates head compute
     # across the model axis; "data_model" (§Perf winner: −44% flops on the
     # 256k-vocab cell) splits tokens over it — sequence-parallel CE.
@@ -132,6 +138,8 @@ def embedding_for(cfg: ModelConfig) -> EmbeddingConfig:
         rank=cfg.embedding_rank,
         use_layernorm=cfg.embedding_layernorm,
         dtype=cfg.param_dtype,
+        use_kernel=cfg.use_kernels,
+        block_b=cfg.embedding_block_b,
     )
 
 
@@ -144,6 +152,8 @@ def head_for(cfg: ModelConfig) -> HeadConfig:
         rank=cfg.head_rank,
         vocab_tile=cfg.head_vocab_tile,
         dtype=cfg.param_dtype,
+        use_kernel=cfg.use_kernels,
+        block_b=cfg.head_block_b,
     )
 
 

@@ -32,6 +32,11 @@ class EmbeddingConfig:
         vocab axis; derived from (vocab_size, embed_dim, order) when None.
     use_layernorm: LayerNorm at balanced-tree nodes (paper §2.3). The kron
         *head* requires a pure (LN-free) embedding — see core/logits.py.
+    use_kernel: route word2ketXS lookups through the fused Pallas kernel
+        (fwd + dedicated bwd). None = auto: kernel on TPU, pure-jnp
+        reference elsewhere.
+    block_b: token-block size for the kernel grid; None = autotuned per
+        (rank, q_dims, t_dims, backend) — see repro/kernels/autotune.py.
     """
 
     vocab_size: int
@@ -43,6 +48,8 @@ class EmbeddingConfig:
     t_dims: Optional[tuple[int, ...]] = None
     use_layernorm: bool = True
     dtype: Any = jnp.float32
+    use_kernel: Optional[bool] = None
+    block_b: Optional[int] = None
 
     def resolved_q(self) -> tuple[int, ...]:
         if self.q_dims is not None:
@@ -83,6 +90,12 @@ def embed_lookup(cfg: EmbeddingConfig, params: dict, ids: jax.Array) -> jax.Arra
         return jnp.take(params["table"], ids, axis=0)
     if cfg.kind == "word2ket":
         return W2K.lookup(cfg, params, ids)
+    from repro.kernels import kernels_enabled
+    if kernels_enabled(cfg.use_kernel):
+        from repro.kernels.kron_gather.ops import kron_gather
+        flat = kron_gather(params["factors"], ids.reshape(-1), cfg.embed_dim,
+                           cfg.use_layernorm, cfg.block_b)
+        return flat.reshape(*ids.shape, cfg.embed_dim).astype(cfg.dtype)
     return W2KXS.lookup(cfg, params, ids)
 
 

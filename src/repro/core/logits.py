@@ -47,8 +47,13 @@ class HeadConfig:
     # t1 digits per CE tile (kron) / 8192 columns (dense). The tile's rank-
     # carrying intermediate is (tokens, rank, vocab_tile, q2) fp32 — keep the
     # tile small so that stays ~GB at production token counts (perf knob).
-    vocab_tile: int = 4
+    # None = autotuned per (rank, q_dims, t_dims, backend).
+    vocab_tile: Optional[int] = 4
     dtype: Any = jnp.float32
+    # route the streamed CE through the fused Pallas kernel (fwd + dedicated
+    # bwd). None = auto: kernel on TPU, lax.scan reference elsewhere.
+    use_kernel: Optional[bool] = None
+    block_b: Optional[int] = None  # kernel token-block size; None = autotuned
 
     def as_embedding_config(self) -> EmbeddingConfig:
         # The kron head is a *pure* (LayerNorm-free) word2ketXS operator.
@@ -62,6 +67,8 @@ class HeadConfig:
             t_dims=self.t_dims,
             use_layernorm=False,
             dtype=self.dtype,
+            use_kernel=self.use_kernel,
+            block_b=self.block_b,
         )
 
 
@@ -155,11 +162,22 @@ def head_ce_loss(
     Memory: O(tokens · tile) transient, O(tokens) carried — never
     O(tokens · vocab). The scan body is wrapped in jax.checkpoint so the
     backward pass recomputes tile logits instead of saving them.
+
+    For a kron head with ``use_kernel`` resolved on, the whole streamed CE
+    (forward AND backward) runs in the fused Pallas kernel instead of the
+    scan — same tiling, dedicated backward, tuned block sizes.
     """
-    ecfg_q = None
     x = h.reshape(-1, h.shape[-1]).astype(jnp.float32)
     y = labels.reshape(-1)
     B = x.shape[0]
+
+    if cfg.kind == "kron":
+        from repro.kernels import kernels_enabled
+        if kernels_enabled(cfg.use_kernel):
+            from repro.kernels.kron_logits.ops import fused_kron_ce
+            per_tok = fused_kron_ce(params["factors"], x, y, cfg.vocab_size,
+                                    cfg.vocab_tile, cfg.block_b)
+            return _masked_mean(per_tok, label_mask)
 
     # The per-tile weight slice is threaded through the scan as `xs` (NOT
     # dynamic_slice'd inside the body): scan-xs gradients accumulate by
@@ -172,7 +190,12 @@ def head_ce_loss(
         if P > x.shape[-1]:
             x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
         t1 = t[0]
-        tile_t1 = min(cfg.vocab_tile, t1)
+        vocab_tile = cfg.vocab_tile
+        if vocab_tile is None:  # autotuned t1 tile (same table as the kernel)
+            from repro.kernels import autotune
+            vocab_tile = autotune.get_block_config(
+                "kron_logits", cfg.rank, tuple(q), tuple(t)).t1_block
+        tile_t1 = min(vocab_tile, t1)
         while t1 % tile_t1 != 0:
             tile_t1 -= 1
         n_tiles = t1 // tile_t1
@@ -220,7 +243,10 @@ def head_ce_loss(
     init = (jnp.full((B,), neg), jnp.zeros((B,)), jnp.zeros((B,)))
     (m, l, ylogit), _ = jax.lax.scan(body, init, (jnp.arange(n_tiles), tiles))
     lse = m + jnp.log(l)
-    per_tok = lse - ylogit
+    return _masked_mean(lse - ylogit, label_mask)
+
+
+def _masked_mean(per_tok: jax.Array, label_mask: Optional[jax.Array]) -> jax.Array:
     if label_mask is not None:
         w = label_mask.reshape(-1).astype(jnp.float32)
         return jnp.sum(per_tok * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,10 +1,46 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
-kron_gather  — fused word2ketXS lookup (one-hot-matmul gather + kron tree)
-kron_logits  — fused Kronecker vocab head + online-softmax cross-entropy
+kron_gather  — fused word2ketXS lookup (one-hot-matmul gather + kron tree),
+               with a dedicated backward kernel (LN-tree VJP from stashed
+               per-node statistics)
+kron_logits  — fused Kronecker vocab head + online-softmax cross-entropy,
+               with a dedicated backward kernel (second streaming pass
+               applying the softmax−onehot cotangent)
 flash_attn   — GQA-aware flash attention (causal / local window / bidir)
+common       — shared in-kernel math (one-hot iota gather, balanced-tree
+               fwd/bwd, factor-chain fwd/VJP)
+autotune     — block_b / t1_block selection per (rank, q_dims, t_dims,
+               backend) from a measured table or VMEM heuristic
 
 Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 custom-VJP wrapper choosing interpret mode off-TPU) and ref.py (pure-jnp
-oracle used for validation and as the analytic backward).
+oracle used for validation and as the backward fallback).
 """
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def kernels_enabled(flag: Optional[bool] = None) -> bool:
+    """Resolve a config's ``use_kernel`` tri-state.
+
+    None = auto: the kernels engage on TPU **only when no multi-device mesh
+    is ambient**. Inside a GSPMD program a bare ``pallas_call`` is an opaque
+    custom call with no partitioning rule — auto-routing the sharded CE/
+    lookup through it would silently all-gather the operands and undo the
+    sequence-parallel token sharding (see core/logits.py). Sharded runs must
+    opt in explicitly (``use_kernel=True``) once they wrap the op in
+    shard_map. Off-TPU the Pallas kernels run in interpret mode — correct
+    but not the default for the pure-jnp reference paths that CPU unit
+    tests exercise.
+    """
+    if flag is not None:
+        return flag
+    if jax.default_backend() != "tpu":
+        return False
+    from repro.parallel import meshctx
+    mesh = meshctx.get_mesh()
+    return mesh is None or mesh.size <= 1

@@ -1,0 +1,190 @@
+"""Block-size selection for the kron Pallas kernels.
+
+Both fused ops are tiled by two knobs: ``block_b`` (tokens per grid step) and,
+for the CE kernel, ``t1_block`` (first-digit vocabulary columns per tile).
+The right values depend on (rank, q_dims, t_dims, backend) — the old
+hardcoded ``block_b=256, t1_block=16`` left 2–4× on the table at the paper's
+GLoVe shape and overflowed VMEM estimates at LM scale.
+
+Selection precedence (all static — resolved at trace time, never inside jit):
+
+  1. an explicit caller override (``block_b=…`` int argument to the op);
+  2. a **measured table** entry — JSON at ``$REPRO_AUTOTUNE_TABLE`` or the
+     checked-in ``autotune_table.json`` next to this file, keyed by
+     ``op|backend|r{rank}|q{q1xq2…}|t{t1xt2…}``;
+  3. the **VMEM-budget heuristic** below.
+
+``measure()`` re-derives table entries empirically (used by
+``benchmarks/timing.py``, which persists winners via ``update_table``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+
+__all__ = [
+    "BlockConfig",
+    "table_key",
+    "get_block_config",
+    "heuristic_block_config",
+    "load_table",
+    "update_table",
+    "measure",
+]
+
+_TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
+_TABLE_FILE = os.path.join(os.path.dirname(__file__), "autotune_table.json")
+
+# Live-intermediate budget per grid step. Real VMEM is ~16 MB/core; leave
+# room for double buffering and the pinned factor stacks. The CPU interpreter
+# lowers each grid step to one XLA loop body — bigger blocks amortize loop
+# overhead, so its budget is larger.
+_BUDGET_BYTES = {"tpu": 4 << 20, "cpu": 16 << 20, "gpu": 8 << 20}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    block_b: int
+    t1_block: int = 0  # 0 = not applicable (kron_gather)
+
+
+def table_key(op: str, backend: str, rank: int,
+              q_dims: Sequence[int], t_dims: Sequence[int]) -> str:
+    q = "x".join(map(str, q_dims))
+    t = "x".join(map(str, t_dims))
+    return f"{op}|{backend}|r{rank}|q{q}|t{t}"
+
+
+_table_cache: Optional[dict] = None
+
+
+def load_table(refresh: bool = False) -> dict:
+    global _table_cache
+    if _table_cache is not None and not refresh:
+        return _table_cache
+    path = os.environ.get(_TABLE_ENV, _TABLE_FILE)
+    table: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                table = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            table = {}
+    _table_cache = table
+    return table
+
+
+def update_table(key: str, cfg: BlockConfig, *, us: Optional[float] = None,
+                 save_path: Optional[str] = None) -> None:
+    """Record a measured winner in the in-memory table (and optionally on disk)."""
+    table = load_table()
+    entry = {"block_b": cfg.block_b, "t1_block": cfg.t1_block}
+    if us is not None:
+        entry["us"] = round(us, 1)
+    table[key] = entry
+    if save_path:
+        with open(save_path, "w") as f:
+            json.dump(table, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << max(0, n.bit_length() - 1)
+
+
+def _divisors_desc(n: int) -> list[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def heuristic_block_config(
+    op: str,
+    backend: str,
+    rank: int,
+    q_dims: Sequence[int],
+    t_dims: Sequence[int],
+) -> BlockConfig:
+    """VMEM-budget model of the dominant live intermediates.
+
+    kron_gather: the tree holds ~2 levels of ``(block_b, rank, ≤P)`` nodes at
+    once, and the backward sweep roughly doubles that (node + cotangent).
+
+    kron_logits: per step the chain's widest intermediate is
+    ``(block_b, rank, t1_block, prod q[1:])`` next to the
+    ``(block_b, t1_block·prod t[1:])`` logits tile and the ``(block_b, P)``
+    activations; t1_block must divide t_1 (BlockSpec tiling).
+    """
+    budget = _BUDGET_BYTES.get(backend, _BUDGET_BYTES["cpu"])
+    P = int(math.prod(q_dims))
+    if op == "kron_gather":
+        per_token = 4 * rank * P * 4  # fwd tree (~2 lvls) + bwd cotangents
+        block_b = _pow2_floor(max(8, budget // max(per_token, 1)))
+        return BlockConfig(block_b=int(min(512, max(8, block_b))))
+
+    if op == "kron_logits":
+        t1, t_rest = t_dims[0], int(math.prod(t_dims[1:]))
+        q_rest = int(math.prod(q_dims[1:]))
+        block_b = 128 if backend == "tpu" else 256
+        for t1b in _divisors_desc(t1):
+            per_step = block_b * 4 * (
+                2 * rank * t1b * q_rest  # chain intermediate (+ cotangent)
+                + 2 * t1b * t_rest       # logits tile (+ softmax cotangent)
+                + P                       # activations block
+            )
+            if per_step <= budget or t1b == 1:
+                return BlockConfig(block_b=block_b, t1_block=int(t1b))
+    raise ValueError(f"unknown op {op!r}")
+
+
+def get_block_config(
+    op: str,
+    rank: int,
+    q_dims: Sequence[int],
+    t_dims: Sequence[int],
+    backend: Optional[str] = None,
+) -> BlockConfig:
+    backend = backend or jax.default_backend()
+    entry = load_table().get(table_key(op, backend, rank, q_dims, t_dims))
+    if entry is not None:
+        return BlockConfig(block_b=int(entry["block_b"]),
+                           t1_block=int(entry.get("t1_block", 0)))
+    return heuristic_block_config(op, backend, rank, q_dims, t_dims)
+
+
+def measure(
+    candidates: Sequence[BlockConfig],
+    build: Callable[[BlockConfig], Callable[[], jax.Array]],
+    *,
+    n: int = 3,
+    warmup: int = 1,
+) -> tuple[BlockConfig, dict[BlockConfig, float]]:
+    """Time ``build(cfg)()`` per candidate; return (winner, per-candidate µs).
+
+    ``build`` returns a zero-arg callable (typically a jit'd closure over the
+    op inputs); compilation happens during warmup so steady-state is timed.
+    """
+    timings: dict[BlockConfig, float] = {}
+    last_err: Optional[Exception] = None
+    for cand in candidates:
+        try:
+            fn = build(cand)
+            for _ in range(warmup):
+                jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            for _ in range(n):
+                out = fn()
+            jax.block_until_ready(out)
+            timings[cand] = (time.perf_counter() - t0) / n * 1e6
+        except Exception as e:  # unbuildable candidate (e.g. VMEM overflow)
+            last_err = e
+            continue
+    if not timings:
+        raise RuntimeError("no autotune candidate succeeded") from last_err
+    best = min(timings, key=timings.get)
+    return best, timings

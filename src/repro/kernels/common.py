@@ -1,0 +1,290 @@
+"""Shared math for the kron_gather / kron_logits Pallas kernels.
+
+Everything here is plain jnp on *values* (not refs) so the same code runs
+inside a Pallas kernel body, in interpret mode, and in the pure-JAX oracles:
+
+  * :func:`one_hot` — the iota-compare one-hot used to phrase every gather /
+    scatter as an MXU matmul (TPUs have no efficient VMEM pointer-chase);
+  * the balanced tensor-product tree (paper §2.3) as an explicit
+    forward-with-residuals / backward-sweep pair, so the backward kernel can
+    re-walk the exact pairing structure of the forward;
+  * the Kronecker factor chain (lazy ``x · (Σ_k ⊗_j F_jk)``) as a
+    forward / analytic-VJP pair for the CE kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def one_hot(idx: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """(B,) int -> (B, n) one-hot via broadcasted iota (MXU-friendly)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    return (idx[:, None] == iota).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Balanced tensor-product tree (fwd with residuals + bwd sweep)
+# ---------------------------------------------------------------------------
+
+def tree_plan(n_leaves: int) -> tuple[list, tuple]:
+    """Pairing structure of the balanced kron tree.
+
+    Returns ``(plan, root)`` where ``plan`` is a list of
+    ``(node_token, left_token, right_token)`` in creation order and tokens are
+    ``("leaf", j)`` / ``("node", k)``. ``k`` is also the index into the
+    stashed per-node statistics. An odd leftover at any level carries up
+    unchanged (same rule as the forward kernels).
+    """
+    level: list = [("leaf", j) for j in range(n_leaves)]
+    plan = []
+    k = 0
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            tok = ("node", k)
+            plan.append((tok, level[i], level[i + 1]))
+            nxt.append(tok)
+            k += 1
+        if len(level) % 2 == 1:
+            nxt.append(level[-1])
+        level = nxt
+    return plan, level[0]
+
+
+def num_tree_nodes(n_leaves: int) -> int:
+    return n_leaves - 1
+
+
+def _pair_kron(a: jax.Array, b: jax.Array) -> jax.Array:
+    out = a[..., :, None] * b[..., None, :]
+    return out.reshape(*a.shape[:-1], a.shape[-1] * b.shape[-1])
+
+
+def tree_forward(
+    leaves: Sequence[jax.Array],
+    use_layernorm: bool,
+    eps: float = LN_EPS,
+    stats: Optional[tuple[Sequence[jax.Array], Sequence[jax.Array]]] = None,
+    skip_root: bool = False,
+):
+    """Balanced kron tree over (..., q_j) leaves with optional per-node LN.
+
+    Returns ``(root, residuals)`` where residuals hold every node value plus
+    the LN moments — exactly what :func:`tree_backward` needs. When ``stats``
+    (``(means, rstds)`` lists indexed by node id) is given, the saved moments
+    are used instead of recomputing them, making a backward-pass recompute
+    bitwise-consistent with the forward kernel.
+
+    ``skip_root=True`` skips materializing the final (root) node value — the
+    backward's separable root split (see :func:`tree_backward`) never reads
+    it, and at the root the node is the full (..., prod q) tensor, so the
+    replay then touches nothing larger than the children. Requires saved
+    ``stats`` when LayerNorm is on (the root moments can't be recomputed
+    without the root value).
+    """
+    plan, root = tree_plan(len(leaves))
+    vals: dict = {("leaf", j): v for j, v in enumerate(leaves)}
+    means: list = []
+    rstds: list = []
+    for idx, (tok, lt, rt) in enumerate(plan):
+        last = idx == len(plan) - 1
+        if skip_root and last:
+            if use_layernorm:
+                assert stats is not None, "skip_root with LN needs saved stats"
+                means.append(stats[0][tok[1]])
+                rstds.append(stats[1][tok[1]])
+            vals[tok] = None
+            break
+        z = _pair_kron(vals[lt], vals[rt])
+        if use_layernorm:
+            k = tok[1]
+            if stats is not None:
+                mu, rstd = stats[0][k], stats[1][k]
+            else:
+                mu = jnp.mean(z, axis=-1, keepdims=True)
+                rstd = jax.lax.rsqrt(jnp.var(z, axis=-1, keepdims=True) + eps)
+            z = (z - mu) * rstd
+            means.append(mu)
+            rstds.append(rstd)
+        vals[tok] = z
+    return vals[root], (vals, means, rstds)
+
+
+def tree_backward(
+    n_leaves: int,
+    d_root2d: jax.Array,
+    use_layernorm: bool,
+    residuals,
+) -> list[jax.Array]:
+    """Cotangents of the tree leaves given the *rank-summed* root cotangent.
+
+    ``d_root2d`` is the ``(B, prod q)`` output cotangent (identical across
+    rank — the forward ends in a rank sum). ``residuals`` is the second
+    return of :func:`tree_forward` (``skip_root=True`` is fine).
+
+    The root split exploits the Kronecker structure: with ``z = u ⊗ v``,
+    every LN-VJP term factors through the children
+    (``Σ(u⊗v) = Σu·Σv``, ``Σ(u⊗v)² = Σu²·Σv²``, and the dense cotangent
+    contraction is one batched matmul against the reshaped ``(B, M, N)``
+    cotangent), so **no (B, rank, prod q) intermediate is ever built** —
+    the dominant backward traffic drops from O(B·r·P) to O(B·P).
+    Lower nodes (≤ √P wide) use the generic dense sweep; their LN VJP is the
+    non-affine form ``dz = rstd · (dy − mean(dy) − y · mean(dy · y))``.
+    """
+    vals, means, rstds = residuals
+    plan, root = tree_plan(n_leaves)
+    if not plan:  # single leaf: root == leaf, cotangent broadcasts over rank
+        leaf = vals[("leaf", 0)]
+        return [jnp.broadcast_to(d_root2d[:, None, :], leaf.shape)]
+
+    # ---- separable root split (no O(B·r·P) intermediates) -----------------
+    tok, lt, rt = plan[-1]
+    u, v = vals[lt], vals[rt]  # (B, r, M), (B, r, N)
+    bsz, M = d_root2d.shape[0], u.shape[-1]
+    N = v.shape[-1]
+    pn = M * N
+    D = d_root2d.reshape(bsz, M, N)
+    Dv = jnp.einsum("bmn,brn->brm", D, v, preferred_element_type=jnp.float32)
+    Du = jnp.einsum("bmn,brm->brn", D, u, preferred_element_type=jnp.float32)
+    if use_layernorm:
+        mu, rstd = means[tok[1]], rstds[tok[1]]  # (B, r, 1)
+        su1 = jnp.sum(u, -1, keepdims=True)
+        su2 = jnp.sum(u * u, -1, keepdims=True)
+        sv1 = jnp.sum(v, -1, keepdims=True)
+        sv2 = jnp.sum(v * v, -1, keepdims=True)
+        mbar = jnp.mean(d_root2d, -1)[:, None, None]  # (B, 1, 1)
+        # c = mean(dy·y) with y = rstd·(u⊗v − μ):  Σ dy·y = rstd·(uᵀDv − μ·P·m̄)
+        udv = jnp.sum(u * Dv, -1, keepdims=True)
+        c = rstd * (udv - mu * pn * mbar) / pn
+        du = rstd * ((Dv - mbar * sv1) - c * rstd * (u * sv2 - mu * sv1))
+        dv = rstd * ((Du - mbar * su1) - c * rstd * (v * su2 - mu * su1))
+    else:
+        du, dv = Dv, Du
+    cot = {lt: du, rt: dv}
+
+    # ---- generic dense sweep below the root -------------------------------
+    for tok, lt, rt in reversed(plan[:-1]):
+        dy = cot.pop(tok)
+        a, b = vals[lt], vals[rt]
+        if use_layernorm:
+            y = vals[tok]
+            rstd = rstds[tok[1]]
+            dz = rstd * (
+                dy
+                - jnp.mean(dy, axis=-1, keepdims=True)
+                - y * jnp.mean(dy * y, axis=-1, keepdims=True)
+            )
+        else:
+            dz = dy
+        dzr = dz.reshape(*a.shape, b.shape[-1])
+        cot[lt] = jnp.sum(dzr * b[..., None, :], axis=-1)
+        cot[rt] = jnp.sum(dzr * a[..., :, None], axis=-2)
+    return [cot[("leaf", j)] for j in range(n_leaves)]
+
+
+# ---------------------------------------------------------------------------
+# Kronecker factor chain (fwd + analytic VJP)
+# ---------------------------------------------------------------------------
+
+def chain_forward(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """``x (B, P)`` fp32 → logits ``(B, prod t)`` via the factor chain.
+
+    Column order is ``(t_1, …, t_n)`` row-major, matching mixed-radix ids.
+    Factors may be tiles (e.g. F_1 pre-sliced along t_1) — only their own
+    shapes matter.
+    """
+    q_dims = tuple(f.shape[1] for f in factors)
+    n = len(factors)
+    b = x.shape[0]
+    z = x.reshape((b,) + q_dims)
+    for i, f in enumerate(factors):
+        if i == 0:
+            z = jnp.einsum("bq...,rqt->brt...", z, f.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+        else:
+            z = jnp.einsum("brq...,rqt->brt...", z, f.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+        z = jnp.moveaxis(z, 2, 2 + (n - 1))
+    z = jnp.sum(z, axis=1)  # rank
+    return z.reshape(b, -1)
+
+
+def chain_vjp(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    d_logits: jax.Array,
+) -> tuple[jax.Array, list[jax.Array]]:
+    """Analytic VJP of :func:`chain_forward`: ``(dx, [dF_j])``.
+
+    Recomputes the chain intermediates (they are never saved — same
+    rematerialization budget as the forward kernel) and runs the reverse
+    sweep with one ``(z_i, dL)`` and one ``(dL, F_i)`` contraction per factor.
+    """
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    n = len(factors)
+    b = x.shape[0]
+
+    zs = []
+    z = x.reshape((b,) + q_dims)
+    for i, f in enumerate(factors):
+        zs.append(z)
+        spec = "bq...,rqt->brt..." if i == 0 else "brq...,rqt->brt..."
+        z = jnp.einsum(spec, z, f.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        z = jnp.moveaxis(z, 2, 2 + (n - 1))
+
+    rank = factors[0].shape[0]
+    d = d_logits.reshape((b,) + t_dims)
+    d = jnp.broadcast_to(d[:, None], (b, rank) + t_dims)  # undo the rank sum
+    dfactors: list = [None] * n
+    for i in range(n - 1, -1, -1):
+        d_moved = jnp.moveaxis(d, 2 + (n - 1), 2)  # t_i back to axis 2
+        f = factors[i].astype(jnp.float32)
+        if i == 0:
+            dfactors[0] = jnp.einsum("bq...,brt...->rqt", zs[0], d_moved,
+                                     preferred_element_type=jnp.float32)
+            d = jnp.einsum("brt...,rqt->bq...", d_moved, f,
+                           preferred_element_type=jnp.float32)
+        else:
+            dfactors[i] = jnp.einsum("brq...,brt...->rqt", zs[i], d_moved,
+                                     preferred_element_type=jnp.float32)
+            d = jnp.einsum("brt...,rqt->brq...", d_moved, f,
+                           preferred_element_type=jnp.float32)
+    dx = d.reshape(b, -1)
+    return dx, dfactors
+
+
+def gather_leaves(
+    ids: jax.Array,
+    factors_2d: Sequence[jax.Array],
+    t_dims: Sequence[int],
+    rank: int,
+    q_dims: Sequence[int],
+) -> tuple[list[jax.Array], list[jax.Array]]:
+    """Mixed-radix digits → one-hot gathered leaves.
+
+    ``factors_2d[j]`` is factor j pre-reshaped to ``(t_j, rank·q_j)`` fp32
+    (``F.transpose(2, 0, 1).reshape(t, r·q)``). Returns ``(leaves, onehots)``
+    with ``leaves[j] (B, rank, q_j)`` and ``onehots[j] (B, t_j)`` — the
+    one-hots are reused by the backward scatter (as ``ohᵀ @ dleaf``).
+    """
+    bsz = ids.shape[0]
+    leaves, onehots = [], []
+    rem = ids
+    for j, f2d in enumerate(factors_2d):
+        base = int(math.prod(t_dims[j + 1:]))
+        digit = rem // base
+        rem = rem % base
+        oh = one_hot(digit, t_dims[j])
+        g = jnp.dot(oh, f2d, preferred_element_type=jnp.float32)
+        leaves.append(g.reshape(bsz, rank, q_dims[j]))
+        onehots.append(oh)
+    return leaves, onehots

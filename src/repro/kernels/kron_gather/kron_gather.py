@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused word2ketXS embedding lookup.
+"""Pallas TPU kernels: fused word2ketXS embedding lookup (fwd + bwd).
 
 TPU adaptation of the paper's "lazy tensor" row reconstruction (§3.2):
 
@@ -13,64 +13,105 @@ TPU adaptation of the paper's "lazy tensor" row reconstruction (§3.2):
     each node) and the rank-sum run entirely in registers/VMEM and write only
     the (block_b, prod_q) output tile.
 
-Grid: 1-D over token blocks. All shapes static; digits are computed in-kernel
-with integer ops from the token ids (mixed-radix decomposition).
+Three entry points share one 1-D token-block grid (digits are computed
+in-kernel with integer ops from the token ids):
+
+  * :func:`kron_gather_pallas` — inference forward;
+  * :func:`kron_gather_fwd_pallas` — forward that additionally stashes the
+    per-node LayerNorm statistics (mean, rstd) as a ``(B, 2·#nodes, rank)``
+    residual for the backward kernel;
+  * :func:`kron_gather_bwd_pallas` — dedicated backward: re-gathers the
+    leaves (one-hot matmuls), replays the tree with the *saved* statistics
+    (bitwise-consistent, no second moment pass), runs the reverse tree sweep
+    in VMEM, and scatters ``dL/dF_j`` as ``one_hotᵀ @ dleaf`` matmuls into
+    factor-shaped accumulators that stay resident across the whole grid.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _tree_combine(vs, use_layernorm: bool, eps: float = 1e-5):
-    """Balanced kron tree over (B, r, q_j) leaves -> (B, r, prod q)."""
-    level = list(vs)
-    while len(level) > 1:
-        nxt = []
-        for i in range(0, len(level) - 1, 2):
-            a, b = level[i], level[i + 1]
-            node = (a[..., :, None] * b[..., None, :]).reshape(
-                *a.shape[:-1], a.shape[-1] * b.shape[-1]
-            )
-            if use_layernorm:
-                mu = jnp.mean(node, axis=-1, keepdims=True)
-                var = jnp.var(node, axis=-1, keepdims=True)
-                node = (node - mu) * jax.lax.rsqrt(var + eps)
-            nxt.append(node)
-        if len(level) % 2 == 1:
-            nxt.append(level[-1])
-        level = nxt
-    return level[0]
+from repro.core import kron as K
+from repro.kernels import common as C
 
 
-def _kernel(ids_ref, *refs, t_dims, rank, q_dims, use_layernorm):
-    *factor_refs, out_ref = refs
+def _factors_2d(factor_refs, t_dims, rank, q_dims):
+    return [
+        f_ref[...].astype(jnp.float32).transpose(2, 0, 1).reshape(tj, rank * qj)
+        for f_ref, qj, tj in zip(factor_refs, q_dims, t_dims)
+    ]
+
+
+def _fwd_kernel(ids_ref, *refs, t_dims, rank, q_dims, use_layernorm, with_stats):
+    if with_stats:
+        *factor_refs, out_ref, stats_ref = refs
+    else:
+        *factor_refs, out_ref = refs
     ids = ids_ref[...]  # (Bblk,) int32
+
+    f2d = _factors_2d(factor_refs, t_dims, rank, q_dims)
+    leaves, _ = C.gather_leaves(ids, f2d, t_dims, rank, q_dims)
+    root, (_, means, rstds) = C.tree_forward(leaves, use_layernorm)
+    out_ref[...] = jnp.sum(root, axis=1).astype(out_ref.dtype)
+
+    if with_stats:
+        # residual layout: stats[:, 2k] = mean_k, stats[:, 2k+1] = rstd_k
+        cols = []
+        for mu, rstd in zip(means, rstds):
+            cols += [mu[..., 0], rstd[..., 0]]  # (Bblk, rank) each
+        stats_ref[...] = jnp.stack(cols, axis=1)  # (Bblk, 2·nodes, rank)
+
+
+def _bwd_kernel(ids_ref, g_ref, *refs, t_dims, rank, q_dims, use_layernorm):
+    if use_layernorm:
+        stats_ref, *refs = refs
+    n = len(q_dims)
+    factor_refs, dfactor_refs = refs[:n], refs[n:]
+    ids = ids_ref[...]
+    g = g_ref[...].astype(jnp.float32)  # (Bblk, P); zero rows for pad tokens
     bblk = ids.shape[0]
 
-    leaves = []
-    rem = ids
-    for j, f_ref in enumerate(factor_refs):
-        base = int(math.prod(t_dims[j + 1:]))
-        digit = rem // base
-        rem = rem % base
-        tj, qj = t_dims[j], q_dims[j]
-        # one-hot gather as an MXU matmul: (Bblk, t_j) @ (t_j, r*q_j)
-        oh = (digit[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tj), 1)).astype(
-            jnp.float32
-        )
-        f2d = f_ref[...].astype(jnp.float32).transpose(2, 0, 1).reshape(tj, rank * qj)
-        g = jnp.dot(oh, f2d, preferred_element_type=jnp.float32)
-        leaves.append(g.reshape(bblk, rank, qj))
+    f2d = _factors_2d(factor_refs, t_dims, rank, q_dims)
+    leaves, onehots = C.gather_leaves(ids, f2d, t_dims, rank, q_dims)
 
-    v = _tree_combine(leaves, use_layernorm)  # (Bblk, r, prod q)
-    out_ref[...] = jnp.sum(v, axis=1).astype(out_ref.dtype)
+    stats = None
+    if use_layernorm:
+        raw = stats_ref[...].astype(jnp.float32)  # (Bblk, 2·nodes, rank)
+        n_nodes = C.num_tree_nodes(n)
+        means = [raw[:, 2 * k, :][..., None] for k in range(n_nodes)]
+        rstds = [raw[:, 2 * k + 1, :][..., None] for k in range(n_nodes)]
+        stats = (means, rstds)
+    # replay below the root only — the separable root split in tree_backward
+    # never materializes the (Bblk, rank, P) root or its cotangent
+    _, res = C.tree_forward(leaves, use_layernorm, stats=stats, skip_root=True)
+    dleaves = C.tree_backward(n, g, use_layernorm, res)
+
+    i = pl.program_id(0)
+    for df_ref, oh, dleaf, qj in zip(dfactor_refs, onehots, dleaves, q_dims):
+        # scatter-add as a matmul: (t_j, Bblk) @ (Bblk, rank·q_j)
+        contrib = jnp.dot(oh.T, dleaf.reshape(bblk, rank * qj),
+                          preferred_element_type=jnp.float32)
+        contrib = contrib.reshape(oh.shape[1], rank, qj).transpose(1, 2, 0)
+
+        @pl.when(i == 0)
+        def _init(df_ref=df_ref, contrib=contrib):
+            df_ref[...] = contrib
+
+        @pl.when(i > 0)
+        def _acc(df_ref=df_ref, contrib=contrib):
+            df_ref[...] += contrib
+
+
+def _pad_ids(ids: jax.Array, block_b: int):
+    B = ids.shape[0]
+    bpad = -B % block_b
+    return (jnp.pad(ids, (0, bpad)) if bpad else ids), B
 
 
 def kron_gather_pallas(
@@ -83,19 +124,51 @@ def kron_gather_pallas(
     out_dtype=jnp.float32,
 ) -> jax.Array:
     """ids (B,) -> (B, prod q). Caller slices to embed_dim and reshapes."""
+    out = _gather_call(factors, ids, use_layernorm, block_b, interpret,
+                       out_dtype, with_stats=False)
+    return out
+
+
+def kron_gather_fwd_pallas(
+    factors: Sequence[jax.Array],
+    ids: jax.Array,
+    *,
+    use_layernorm: bool = True,
+    block_b: int = 256,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Forward + stashed per-node LN stats ``(B, 2·#nodes, rank)`` (or None)."""
+    if not use_layernorm:  # no moments to stash — the bwd recompute is exact
+        out = _gather_call(factors, ids, use_layernorm, block_b, interpret,
+                           out_dtype, with_stats=False)
+        return out, None
+    return _gather_call(factors, ids, use_layernorm, block_b, interpret,
+                        out_dtype, with_stats=True)
+
+
+def _gather_call(factors, ids, use_layernorm, block_b, interpret, out_dtype,
+                 *, with_stats):
     rank = factors[0].shape[0]
     q_dims = tuple(f.shape[1] for f in factors)
     t_dims = tuple(f.shape[2] for f in factors)
     P = int(math.prod(q_dims))
-    B = ids.shape[0]
-    bpad = -B % block_b
-    ids_p = jnp.pad(ids, (0, bpad)) if bpad else ids
+    ids_p, B = _pad_ids(ids, block_b)
     n_blocks = ids_p.shape[0] // block_b
+    n_nodes = C.num_tree_nodes(len(factors))
 
     kernel = functools.partial(
-        _kernel, t_dims=t_dims, rank=rank, q_dims=q_dims, use_layernorm=use_layernorm
+        _fwd_kernel, t_dims=t_dims, rank=rank, q_dims=q_dims,
+        use_layernorm=use_layernorm, with_stats=with_stats,
     )
-    out = pl.pallas_call(
+    out_shape = [jax.ShapeDtypeStruct((ids_p.shape[0], P), out_dtype)]
+    out_specs = [pl.BlockSpec((block_b, P), lambda i: (i, 0))]
+    if with_stats:
+        out_shape.append(
+            jax.ShapeDtypeStruct((ids_p.shape[0], 2 * n_nodes, rank), jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((block_b, 2 * n_nodes, rank), lambda i: (i, 0, 0)))
+    outs = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
         in_specs=[
@@ -105,8 +178,110 @@ def kron_gather_pallas(
                 for f in factors
             ],
         ],
-        out_specs=pl.BlockSpec((block_b, P), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((ids_p.shape[0], P), out_dtype),
+        out_specs=out_specs if with_stats else out_specs[0],
+        out_shape=out_shape if with_stats else out_shape[0],
         interpret=interpret,
     )(ids_p, *factors)
-    return out[:B]
+    if with_stats:
+        return outs[0][:B], outs[1][:B]
+    return outs[:B]
+
+
+def kron_gather_bwd_pallas(
+    factors: Sequence[jax.Array],
+    ids: jax.Array,
+    g: jax.Array,  # (B, embed_dim) output cotangent
+    stats: Optional[jax.Array],  # (B, 2·#nodes, rank) from the fwd, or None
+    *,
+    use_layernorm: bool = True,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> list[jax.Array]:
+    """Dedicated backward: returns fp32 ``dL/dF_j`` (rank, q_j, t_j) each."""
+    rank = factors[0].shape[0]
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    P = int(math.prod(q_dims))
+    n_nodes = C.num_tree_nodes(len(factors))
+
+    ids_p, B = _pad_ids(ids, block_b)
+    bpad = ids_p.shape[0] - B
+    g32 = g.astype(jnp.float32)
+    # pad the cotangent to (padded_B, P): the slice-to-embed_dim columns and
+    # the pad tokens both contribute exactly zero
+    g32 = jnp.pad(g32, ((0, bpad), (0, P - g32.shape[1])))
+    inputs = [ids_p, g32]
+    in_specs = [
+        pl.BlockSpec((block_b,), lambda i: (i,)),
+        pl.BlockSpec((block_b, P), lambda i: (i, 0)),
+    ]
+    if use_layernorm:
+        assert stats is not None, "LayerNorm backward needs the stashed stats"
+        stats_p = jnp.pad(stats, ((0, bpad), (0, 0), (0, 0)))
+        inputs.append(stats_p)
+        in_specs.append(
+            pl.BlockSpec((block_b, 2 * n_nodes, rank), lambda i: (i, 0, 0)))
+    inputs += list(factors)
+    in_specs += [pl.BlockSpec(f.shape, lambda i: (0, 0, 0)) for f in factors]
+
+    kernel = functools.partial(
+        _bwd_kernel, t_dims=t_dims, rank=rank, q_dims=q_dims,
+        use_layernorm=use_layernorm,
+    )
+    dfactors = pl.pallas_call(
+        kernel,
+        grid=(ids_p.shape[0] // block_b,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec(f.shape, lambda i: (0, 0, 0)) for f in factors],
+        out_shape=[jax.ShapeDtypeStruct(f.shape, jnp.float32) for f in factors],
+        interpret=interpret,
+    )(*inputs)
+    return list(dfactors)
+
+
+def kron_gather_bwd_host(
+    factors: Sequence[jax.Array],
+    ids: jax.Array,
+    g: jax.Array,  # (B, embed_dim) output cotangent
+    stats: Optional[jax.Array],  # (B, 2·#nodes, rank) from the fwd, or None
+    *,
+    use_layernorm: bool = True,
+) -> list[jax.Array]:
+    """Host (non-Pallas) executor of the SAME dedicated backward algorithm.
+
+    Off-TPU the interpret-mode grid emulation costs more than the math; this
+    runs the identical sweep (shared ``common`` helpers, incl. the separable
+    root split) as one fused XLA computation, with the two TPU-isms swapped
+    for their host-optimal primitives: leaves via ``jnp.take`` instead of
+    one-hot matmuls, ``dF_j`` via ``segment_sum`` instead of ``one_hotᵀ @``.
+    Used by ``ops.kron_gather``'s backward whenever the forward ran in
+    interpret mode; returns fp32 ``dL/dF_j``.
+    """
+    rank = factors[0].shape[0]
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    P = int(math.prod(q_dims))
+    B = ids.shape[0]
+    n = len(factors)
+
+    digits = K.mixed_radix_digits(ids, t_dims)
+    leaves = [
+        jnp.moveaxis(jnp.take(f, d, axis=2), (0, 1), (-2, -1)).astype(jnp.float32)
+        for f, d in zip(factors, digits)
+    ]
+    sts = None
+    if use_layernorm:
+        assert stats is not None, "LayerNorm backward needs the stashed stats"
+        raw = stats.astype(jnp.float32)
+        n_nodes = C.num_tree_nodes(n)
+        sts = ([raw[:, 2 * k, :][..., None] for k in range(n_nodes)],
+               [raw[:, 2 * k + 1, :][..., None] for k in range(n_nodes)])
+    _, res = C.tree_forward(leaves, use_layernorm, stats=sts, skip_root=True)
+    g32 = g.astype(jnp.float32)
+    g32 = jnp.pad(g32, ((0, 0), (0, P - g32.shape[1])))
+    dleaves = C.tree_backward(n, g32, use_layernorm, res)
+    dfactors = []
+    for d, dleaf, qj, tj in zip(digits, dleaves, q_dims, t_dims):
+        seg = jax.ops.segment_sum(dleaf.reshape(B, rank * qj), d, num_segments=tj)
+        dfactors.append(seg.reshape(tj, rank, qj).transpose(1, 2, 0))
+    return dfactors

@@ -1,25 +1,72 @@
 """Jit'd public op for the fused word2ketXS lookup.
 
-Forward = Pallas kernel (interpret mode on CPU, compiled on TPU). Backward =
-analytic VJP obtained from the pure-jnp oracle (the factor gradients are
-one-hot scatter-adds — cheap XLA scatters; a dedicated backward kernel is a
-documented optimization for real-TPU runs).
+Forward AND backward are dedicated kernels. The forward-for-grad stashes the
+per-node LayerNorm statistics; the backward re-gathers the leaves, replays
+the tree with the saved stats (separable root split — no (B, rank, prod q)
+intermediates) and accumulates ``dL/dF_j`` without any XLA scatter on the
+TPU path. On TPU both directions are compiled Pallas kernels; off-TPU the
+forward runs the kernel in interpret mode while the backward runs the same
+algorithm through the host executor (``kron_gather_bwd_host`` — identical
+``common`` math, no grid emulation).
+
+The pure-jnp reference VJP is kept as an oracle and fallback: select it with
+``set_backward_impl("ref")`` or ``REPRO_KRON_BWD=ref`` (it is what the
+backward kernel is validated against in tests/test_kernel_grads.py).
+
+``block_b=None`` (the default) resolves the token-block size from the
+autotune table / heuristic for the factor shapes at trace time.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.kron_gather.kron_gather import kron_gather_pallas
+from repro.kernels import autotune
+from repro.kernels.kron_gather.kron_gather import (
+    kron_gather_bwd_host,
+    kron_gather_bwd_pallas,
+    kron_gather_fwd_pallas,
+    kron_gather_pallas,
+)
 from repro.kernels.kron_gather.ref import kron_gather_ref
+
+_backward_impl = os.environ.get("REPRO_KRON_BWD", "kernel")  # "kernel" | "ref"
+if _backward_impl not in ("kernel", "ref"):
+    raise ValueError(
+        f"REPRO_KRON_BWD={_backward_impl!r} — expected 'kernel' or 'ref'")
+
+
+def set_backward_impl(name: str) -> None:
+    """Select the backward implementation: "kernel" (default) or "ref"."""
+    global _backward_impl
+    if name not in ("kernel", "ref"):
+        raise ValueError(f"unknown backward impl {name!r}")
+    _backward_impl = name
+
+
+def get_backward_impl() -> str:
+    return _backward_impl
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _resolve_block_b(factors: Sequence[jax.Array], block_b: Optional[int]) -> int:
+    if block_b is not None:
+        return block_b
+    cfg = autotune.get_block_config(
+        "kron_gather",
+        factors[0].shape[0],
+        tuple(f.shape[1] for f in factors),
+        tuple(f.shape[2] for f in factors),
+    )
+    return cfg.block_b
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -28,30 +75,53 @@ def kron_gather(
     ids: jax.Array,
     embed_dim: int,
     use_layernorm: bool = True,
-    block_b: int = 256,
+    block_b: Optional[int] = None,
 ) -> jax.Array:
     out = kron_gather_pallas(
         list(factors),
         ids,
         use_layernorm=use_layernorm,
-        block_b=block_b,
+        block_b=_resolve_block_b(factors, block_b),
         interpret=not _on_tpu(),
     )
     return out[:, :embed_dim]
 
 
 def _fwd(factors, ids, embed_dim, use_layernorm, block_b):
-    out = kron_gather(factors, ids, embed_dim, use_layernorm, block_b)
-    return out, (tuple(factors), ids)
+    out, stats = kron_gather_fwd_pallas(
+        list(factors),
+        ids,
+        use_layernorm=use_layernorm,
+        block_b=_resolve_block_b(factors, block_b),
+        interpret=not _on_tpu(),
+    )
+    return out[:, :embed_dim], (tuple(factors), ids, stats)
 
 
 def _bwd(embed_dim, use_layernorm, block_b, res, g):
-    factors, ids = res
-    _, vjp = jax.vjp(
-        lambda fs: kron_gather_ref(fs, ids, embed_dim=embed_dim, use_layernorm=use_layernorm),
-        list(factors),
-    )
-    (dfactors,) = vjp(g)
+    factors, ids, stats = res
+    if _backward_impl == "ref":
+        _, vjp = jax.vjp(
+            lambda fs: kron_gather_ref(
+                fs, ids, embed_dim=embed_dim, use_layernorm=use_layernorm),
+            list(factors),
+        )
+        (dfactors,) = vjp(g)
+        return (dfactors, None)
+    if _on_tpu():
+        dfactors = kron_gather_bwd_pallas(
+            list(factors),
+            ids,
+            g,
+            stats,
+            use_layernorm=use_layernorm,
+            block_b=_resolve_block_b(factors, block_b),
+            interpret=False,
+        )
+    else:  # same dedicated algorithm, host-fused executor (no grid emulation)
+        dfactors = kron_gather_bwd_host(
+            list(factors), ids, g, stats, use_layernorm=use_layernorm)
+    dfactors = [df.astype(f.dtype) for df, f in zip(dfactors, factors)]
     return (dfactors, None)
 
 

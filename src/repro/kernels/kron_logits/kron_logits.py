@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused Kronecker vocab head + online-softmax cross-entropy.
+"""Pallas TPU kernels: fused Kronecker vocab head + online-softmax CE (fwd+bwd).
 
 The memory-critical op of large-vocab LMs is ``loss = CE(h @ W_unembed)``:
 the (tokens × vocab) logits tensor (e.g. 1M × 256k) dwarfs every other
@@ -11,8 +11,18 @@ Grid: (token_blocks, t1_blocks); the t1 axis is the innermost (sequential on
 TPU) dimension and accumulates into revisited (Bblk,) output blocks, exactly
 the flash-attention pattern applied to the vocabulary axis.
 
-Per grid step:   z = x·F1[:, :, tile]  (MXU)   →  z·F2, … (MXU)
-                 online (m, l, ylogit) update  (VPU)
+Forward, per grid step:   tile logits via the factor chain  (MXU)
+                          online (m, l, ylogit) update      (VPU)
+
+Backward (:func:`kron_ce_bwd_pallas`) walks the SAME grid a second time: it
+recomputes each tile's logits from (x, factor tiles), turns them into the
+softmax cotangent ``g · (softmax − onehot)`` using the forward's saved
+``(m, l)`` statistics, and pushes it through the analytic chain VJP
+(`common.chain_vjp`) — ``dh`` accumulates across t1 tiles into the revisited
+(Bblk, P) block, the non-streamed factors accumulate into constant-resident
+(rank, q_j, t_j) blocks, and ``dF_1`` accumulates into the ``j``-th t1 slice
+of a constant-resident (rank, q_1, t_1) block via a dynamic store. Logits
+never reach HBM in the backward either.
 """
 
 from __future__ import annotations
@@ -25,13 +35,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import common as C
 
-def _kernel(
-    x_ref, y_ref, *refs, q_dims, t_dims, rank, t1_block, vocab_size
+
+def _fwd_kernel(
+    x_ref, y_ref, *refs, q_dims, t_dims, t1_block, vocab_size
 ):
     *factor_refs, m_ref, l_ref, ylog_ref = refs
     j = pl.program_id(1)
-    n = len(q_dims)
     bblk = x_ref.shape[0]
     t_rest = int(math.prod(t_dims[1:]))
     tile_cols = t1_block * t_rest
@@ -43,12 +54,7 @@ def _kernel(
         ylog_ref[...] = jnp.zeros((bblk,), jnp.float32)
 
     x = x_ref[...].astype(jnp.float32)  # (Bblk, P)
-    z = x.reshape((bblk, 1) + tuple(q_dims))
-    for fi, f_ref in enumerate(factor_refs):
-        f = f_ref[...].astype(jnp.float32)  # (r, q_fi, t_fi or t1_block)
-        z = jnp.einsum("brq...,rqt->brt...", z, f, preferred_element_type=jnp.float32)
-        z = jnp.moveaxis(z, 2, 2 + (n - 1))
-    logits = jnp.sum(z, axis=1).reshape(bblk, tile_cols)
+    logits = C.chain_forward(x, [f_ref[...] for f_ref in factor_refs])
 
     col0 = j * tile_cols
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_cols), 1)
@@ -63,13 +69,87 @@ def _kernel(
     in_tile = (y >= col0) & (y < col0 + tile_cols)
     # gather the label logit with a one-hot dot (MXU-friendly, no vmem gather)
     local = jnp.clip(y - col0, 0, tile_cols - 1)
-    oh = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tile_cols), 1)).astype(
-        jnp.float32
-    )
-    picked = jnp.sum(oh * logits, axis=-1)
+    picked = jnp.sum(C.one_hot(local, tile_cols) * logits, axis=-1)
     m_ref[...] = m_new
     l_ref[...] = l_new
     ylog_ref[...] = jnp.where(in_tile, picked, ylog)
+
+
+def _bwd_kernel(
+    x_ref, y_ref, g_ref, m_ref, l_ref, *refs,
+    q_dims, t_dims, t1_block, vocab_size,
+):
+    n = len(q_dims)
+    factor_refs, (dx_ref, df0_ref, *dfrest_refs) = refs[:n], refs[n:]
+    i, j = pl.program_id(0), pl.program_id(1)
+    t_rest = int(math.prod(t_dims[1:]))
+    tile_cols = t1_block * t_rest
+
+    x = x_ref[...].astype(jnp.float32)  # (Bblk, P)
+    y = y_ref[...]
+    g = g_ref[...].astype(jnp.float32)  # (Bblk,) loss cotangent; 0 on pad rows
+    m = m_ref[...]
+    l = l_ref[...]
+
+    factors = [f_ref[...] for f_ref in factor_refs]  # [f0 tile, rest…]
+    logits = C.chain_forward(x, factors)  # (Bblk, tile_cols)
+
+    col0 = j * tile_cols
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_cols), 1)
+    # softmax from the saved forward statistics (no second online pass)
+    p = jnp.exp(logits - m[:, None]) / l[:, None]
+    p = jnp.where(cols < vocab_size, p, 0.0)
+    in_tile = (y >= col0) & (y < col0 + tile_cols)
+    local = jnp.clip(y - col0, 0, tile_cols - 1)
+    onehot = C.one_hot(local, tile_cols) * in_tile[:, None].astype(jnp.float32)
+    dlogits = g[:, None] * (p - onehot)
+
+    dx, dfs = C.chain_vjp(x, factors, dlogits)
+
+    @pl.when(j == 0)
+    def _dx_init():
+        dx_ref[...] = dx
+
+    @pl.when(j > 0)
+    def _dx_acc():
+        dx_ref[...] += dx
+
+    # dF_1 lives whole in VMEM across the grid; each step touches its t1 slice
+    @pl.when((i == 0) & (j == 0))
+    def _df0_zero():
+        df0_ref[...] = jnp.zeros_like(df0_ref)
+
+    idx0 = (slice(None), slice(None), pl.dslice(j * t1_block, t1_block))
+    pl.store(df0_ref, idx0, pl.load(df0_ref, idx0) + dfs[0])
+
+    for df_ref, df in zip(dfrest_refs, dfs[1:]):
+        @pl.when((i == 0) & (j == 0))
+        def _init(df_ref=df_ref, df=df):
+            df_ref[...] = df
+
+        @pl.when((i > 0) | (j > 0))
+        def _acc(df_ref=df_ref, df=df):
+            df_ref[...] += df
+
+
+def _prep(factors, h, labels, block_b, t1_block):
+    """Shared fwd/bwd padding + tile-size resolution."""
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    P = int(math.prod(q_dims))
+    x = h.astype(jnp.float32)
+    if P > x.shape[-1]:
+        x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
+    B = x.shape[0]
+    bpad = -B % block_b
+    if bpad:
+        x = jnp.pad(x, ((0, bpad), (0, 0)))
+        labels = jnp.pad(labels, (0, bpad))
+    t1 = t_dims[0]
+    blk = min(t1_block, t1)
+    while t1 % blk != 0:
+        blk -= 1
+    return x, labels, B, q_dims, t_dims, P, blk, t1 // blk
 
 
 def kron_ce_pallas(
@@ -81,31 +161,20 @@ def kron_ce_pallas(
     t1_block: int = 16,
     block_b: int = 256,
     interpret: bool = True,
-) -> jax.Array:
-    """Returns per-token CE losses (B,) without materializing logits."""
-    rank = factors[0].shape[0]
-    q_dims = tuple(f.shape[1] for f in factors)
-    t_dims = tuple(f.shape[2] for f in factors)
-    P = int(math.prod(q_dims))
+    return_stats: bool = False,
+):
+    """Per-token CE losses (B,) without materializing logits.
 
-    x = h.astype(jnp.float32)
-    if P > x.shape[-1]:
-        x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
-    B = x.shape[0]
-    bpad = -B % block_b
-    if bpad:
-        x = jnp.pad(x, ((0, bpad), (0, 0)))
-        labels = jnp.pad(labels, (0, bpad))
+    With ``return_stats=True`` also returns the online-softmax ``(m, l)``
+    statistics — the residuals the backward kernel needs.
+    """
+    rank = factors[0].shape[0]
+    x, labels, B, q_dims, t_dims, P, blk, nt = _prep(
+        factors, h, labels, block_b, t1_block)
     nb = x.shape[0] // block_b
 
-    t1 = t_dims[0]
-    blk = min(t1_block, t1)
-    while t1 % blk != 0:
-        blk -= 1
-    nt = t1 // blk
-
     kernel = functools.partial(
-        _kernel, q_dims=q_dims, t_dims=t_dims, rank=rank, t1_block=blk,
+        _fwd_kernel, q_dims=q_dims, t_dims=t_dims, t1_block=blk,
         vocab_size=vocab_size,
     )
     out_shape = [jax.ShapeDtypeStruct((x.shape[0],), jnp.float32)] * 3
@@ -126,4 +195,68 @@ def kron_ce_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(x, labels, f0, *factors[1:])
-    return (m + jnp.log(l) - ylog)[:B]
+    loss = (m + jnp.log(l) - ylog)[:B]
+    if return_stats:
+        return loss, m[:B], l[:B]
+    return loss
+
+
+def kron_ce_bwd_pallas(
+    factors: Sequence[jax.Array],
+    h: jax.Array,  # (B, p)
+    labels: jax.Array,  # (B,) int32
+    m: jax.Array,  # (B,) forward online-max residual
+    l: jax.Array,  # (B,) forward sumexp residual
+    g: jax.Array,  # (B,) per-token loss cotangent
+    vocab_size: int,
+    *,
+    t1_block: int = 16,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> tuple[list[jax.Array], jax.Array]:
+    """Dedicated backward: ``([dL/dF_j], dL/dh)``, both fp32."""
+    rank = factors[0].shape[0]
+    x, labels, B, q_dims, t_dims, P, blk, nt = _prep(
+        factors, h, labels, block_b, t1_block)
+    nb = x.shape[0] // block_b
+    bpad = x.shape[0] - B
+    g32 = jnp.pad(g.astype(jnp.float32), (0, bpad))  # zero ⇒ pad rows inert
+    m32 = jnp.pad(m.astype(jnp.float32), (0, bpad))
+    l32 = jnp.pad(l.astype(jnp.float32), (0, bpad), constant_values=1.0)
+
+    kernel = functools.partial(
+        _bwd_kernel, q_dims=q_dims, t_dims=t_dims, t1_block=blk,
+        vocab_size=vocab_size,
+    )
+    f0 = factors[0]
+    dx, df0, *dfrest = pl.pallas_call(
+        kernel,
+        grid=(nb, nt),
+        in_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((rank, q_dims[0], blk), lambda i, j: (0, 0, j)),
+            *[
+                pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0))
+                for f in factors[1:]
+            ],
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec(f0.shape, lambda i, j: (0, 0, 0)),
+            *[
+                pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0))
+                for f in factors[1:]
+            ],
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            *[jax.ShapeDtypeStruct(f.shape, jnp.float32) for f in factors],
+        ],
+        interpret=interpret,
+    )(x, labels, g32, m32, l32, f0, *factors[1:])
+    dh = dx[:B, : h.shape[-1]]
+    return [df0, *dfrest], dh

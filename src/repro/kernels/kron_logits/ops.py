@@ -1,24 +1,71 @@
-"""Jit'd public op: fused Kronecker-head CE with analytic backward.
+"""Jit'd public op: fused Kronecker-head CE with a dedicated Pallas backward.
 
-Forward = Pallas streaming kernel. Backward = VJP of the rematerializing
-vocab-tiled reference (same tiling, O(B·tile) memory) — tile logits are
-recomputed, softmax−onehot cotangents scatter into the small factors.
+Forward = streaming online-softmax kernel (stashes its (m, l) statistics as
+residuals). Backward = second streaming pass over the SAME
+(token_blocks, t1_blocks) grid: tile logits are recomputed, the
+``g · (softmax − onehot)`` cotangent is applied through the analytic chain
+VJP into ``dF_j`` and ``dh`` — the (tokens × vocab) tensor never exists in
+either direction.
+
+The rematerializing vocab-tiled reference VJP is kept as an oracle and
+fallback: ``set_backward_impl("ref")`` or ``REPRO_KRON_BWD=ref``.
+
+``t1_block=None`` / ``block_b=None`` (the defaults) resolve from the
+autotune table / heuristic for the factor shapes at trace time.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.kron_logits.kron_logits import kron_ce_pallas
+from repro.kernels import autotune
+from repro.kernels.kron_logits.kron_logits import (
+    kron_ce_bwd_pallas,
+    kron_ce_pallas,
+)
 from repro.kernels.kron_logits.ref import kron_ce_tiled
+
+_backward_impl = os.environ.get("REPRO_KRON_BWD", "kernel")  # "kernel" | "ref"
+if _backward_impl not in ("kernel", "ref"):
+    raise ValueError(
+        f"REPRO_KRON_BWD={_backward_impl!r} — expected 'kernel' or 'ref'")
+
+
+def set_backward_impl(name: str) -> None:
+    """Select the backward implementation: "kernel" (default) or "ref"."""
+    global _backward_impl
+    if name not in ("kernel", "ref"):
+        raise ValueError(f"unknown backward impl {name!r}")
+    _backward_impl = name
+
+
+def get_backward_impl() -> str:
+    return _backward_impl
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _resolve_blocks(
+    factors: Sequence[jax.Array],
+    t1_block: Optional[int],
+    block_b: Optional[int],
+) -> tuple[int, int]:
+    if t1_block is not None and block_b is not None:
+        return t1_block, block_b
+    cfg = autotune.get_block_config(
+        "kron_logits",
+        factors[0].shape[0],
+        tuple(f.shape[1] for f in factors),
+        tuple(f.shape[2] for f in factors),
+    )
+    return (t1_block or cfg.t1_block, block_b or cfg.block_b)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -27,28 +74,43 @@ def fused_kron_ce(
     h: jax.Array,
     labels: jax.Array,
     vocab_size: int,
-    t1_block: int = 16,
-    block_b: int = 256,
+    t1_block: Optional[int] = None,
+    block_b: Optional[int] = None,
 ) -> jax.Array:
+    t1b, bb = _resolve_blocks(factors, t1_block, block_b)
     return kron_ce_pallas(
         list(factors), h, labels, vocab_size,
-        t1_block=t1_block, block_b=block_b, interpret=not _on_tpu(),
+        t1_block=t1b, block_b=bb, interpret=not _on_tpu(),
     )
 
 
 def _fwd(factors, h, labels, vocab_size, t1_block, block_b):
-    out = fused_kron_ce(factors, h, labels, vocab_size, t1_block, block_b)
-    return out, (tuple(factors), h, labels)
+    t1b, bb = _resolve_blocks(factors, t1_block, block_b)
+    loss, m, l = kron_ce_pallas(
+        list(factors), h, labels, vocab_size,
+        t1_block=t1b, block_b=bb, interpret=not _on_tpu(),
+        return_stats=True,
+    )
+    return loss, (tuple(factors), h, labels, m, l)
 
 
 def _bwd(vocab_size, t1_block, block_b, res, g):
-    factors, h, labels = res
-    _, vjp = jax.vjp(
-        lambda fs, hh: kron_ce_tiled(fs, hh, labels, vocab_size, t1_block=t1_block),
-        list(factors), h,
+    factors, h, labels, m, l = res
+    if _backward_impl == "ref":
+        t1b, _ = _resolve_blocks(factors, t1_block, block_b)
+        _, vjp = jax.vjp(
+            lambda fs, hh: kron_ce_tiled(fs, hh, labels, vocab_size, t1_block=t1b),
+            list(factors), h,
+        )
+        dfactors, dh = vjp(g)
+        return (dfactors, dh, None)
+    t1b, bb = _resolve_blocks(factors, t1_block, block_b)
+    dfactors, dh = kron_ce_bwd_pallas(
+        list(factors), h, labels, m, l, g, vocab_size,
+        t1_block=t1b, block_b=bb, interpret=not _on_tpu(),
     )
-    dfactors, dh = vjp(g)
-    return (dfactors, dh, None)
+    dfactors = [df.astype(f.dtype) for df, f in zip(dfactors, factors)]
+    return (dfactors, dh.astype(h.dtype), None)
 
 
 fused_kron_ce.defvjp(_fwd, _bwd)

@@ -1,12 +1,26 @@
 """Production meshes. Functions only — importing this module never touches
-jax device state (required so unit tests keep their 1-CPU world)."""
+jax device state (required so unit tests keep their 1-CPU world).
+
+``AxisType`` landed in jax.sharding after 0.4.x; on older jax every mesh axis
+is implicitly "auto", so the shim simply drops the kwarg (feature-detect, not
+version-parse)."""
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # older jax: all axes are auto-sharded; kwarg unsupported
+    _AxisType = None
 
 __all__ = ["make_production_mesh", "make_mesh"]
+
+
+def _mk(shape: tuple[int, ...], axes: tuple[str, ...]):
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,8 +29,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     outer data-parallel / pipeline axis crossing DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)

@@ -153,7 +153,7 @@ def moe_block(params, cfg, x):
             drop = jax.lax.pmean(drop, ("model",) + batch_axes)
             return out.reshape(Bl, Sl, d), aux, drop
 
-        inner_sm = jax.shard_map(
+        inner_sm = meshctx.shard_map(
             inner,
             mesh=mesh,
             in_specs=(P(batch_axes, None, None), P(), P("model"), P("model"), P("model")),

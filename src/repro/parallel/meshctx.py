@@ -13,9 +13,21 @@ from __future__ import annotations
 import contextlib
 from typing import Optional
 
+import jax
 from jax.sharding import Mesh
 
 _CURRENT: Optional[Mesh] = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with a fallback for jax versions where it still lives
+    in ``jax.experimental.shard_map`` (and the kwarg is ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
 
 
 def get_mesh() -> Optional[Mesh]:

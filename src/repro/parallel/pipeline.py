@@ -79,5 +79,5 @@ def gpipe_apply(stage_fn, stage_params, xs, *, axis: str = "pod"):
         return outs
 
     in_specs = (jax.tree_util.tree_map(lambda _: P(axis), stage_params), P())
-    return jax.shard_map(inner, mesh=mesh, in_specs=in_specs, out_specs=P(),
+    return meshctx.shard_map(inner, mesh=mesh, in_specs=in_specs, out_specs=P(),
                          check_vma=False)(stage_params, xs)

@@ -148,7 +148,7 @@ def kv_decode_attention(cfg, q, k_new, v_new, cache_k, cache_v, slot, valid_len,
         B, KVH, G, Dh = out.shape[0], out.shape[1], out.shape[2], out.shape[3]
         return out.reshape(B, KVH * G, Dh).astype(q.dtype), ck, cv
 
-    return jax.shard_map(
+    return meshctx.shard_map(
         inner, mesh=mesh,
         in_specs=(P(baxes), P(baxes), P(baxes),
                   P(baxes, "model"), P(baxes, "model"), P(baxes), P(baxes)),
@@ -211,7 +211,7 @@ def mla_decode_attention(cfg, p_attn, x_tok, cache_c, cache_krope, slot, valid_l
             go = jax.lax.psum(o * corr[..., None], "model")
             return (go / jnp.maximum(gl, 1e-30)[..., None]).astype(dt), cc, ckr
 
-        ctx_l, cache_c, cache_krope = jax.shard_map(
+        ctx_l, cache_c, cache_krope = meshctx.shard_map(
             inner, mesh=mesh,
             in_specs=(P(baxes), P(baxes), P(baxes, "model"), P(baxes, "model"),
                       P(baxes), P(baxes), P(baxes), P(baxes)),

@@ -15,12 +15,39 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, embedding_for, head_for
 from repro.models import model as MD
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import CompressionConfig, compress_decompress, init_residuals
 
-__all__ = ["TrainConfig", "init_state", "make_train_step"]
+__all__ = ["TrainConfig", "init_state", "make_train_step", "pin_kernel_blocks"]
+
+
+def pin_kernel_blocks(cfg: ModelConfig) -> ModelConfig:
+    """Resolve autotuned kernel tile sizes ONCE at step-build time.
+
+    ``None`` block fields mean "ask repro/kernels/autotune"; baking the
+    resolved values into the frozen config here means every jit trace of the
+    train step sees the same static tiles, and a tuning-table reload can
+    never retrigger compilation mid-run.
+    """
+    from repro.kernels import autotune
+    updates: dict = {}
+    if cfg.embedding_kind == "word2ketxs" and cfg.embedding_block_b is None:
+        ecfg = embedding_for(cfg)
+        bc = autotune.get_block_config(
+            "kron_gather", ecfg.rank, ecfg.resolved_q(), ecfg.resolved_t())
+        updates["embedding_block_b"] = bc.block_b
+    if cfg.head_kind == "kron" and (
+            cfg.head_block_b is None or cfg.head_vocab_tile is None):
+        hecfg = head_for(cfg).as_embedding_config()
+        bc = autotune.get_block_config(
+            "kron_logits", hecfg.rank, hecfg.resolved_q(), hecfg.resolved_t())
+        if cfg.head_block_b is None:
+            updates["head_block_b"] = bc.block_b
+        if cfg.head_vocab_tile is None:
+            updates["head_vocab_tile"] = bc.t1_block
+    return dataclasses.replace(cfg, **updates) if updates else cfg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +66,8 @@ def init_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> dict:
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    cfg = pin_kernel_blocks(cfg)
+
     def loss_fn(params, batch):
         loss, metrics = MD.loss_fn(params, cfg, batch)
         return loss, metrics

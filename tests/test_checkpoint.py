@@ -65,8 +65,8 @@ def test_elastic_restart_different_mesh(tmp_path):
 
     # restore into explicitly device_put leaves under a 1-device mesh with
     # a different (trivially resharded) layout — checkpoint is layout-free
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     from repro.parallel.sharding import param_specs, to_shardings
     pshape = jax.eval_shape(lambda: state["params"])
     shardings = to_shardings(mesh, param_specs(cfg, mesh, pshape))
