@@ -9,9 +9,15 @@ Vocab sizes are derived from the paper's own "Regular" rows:
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.core.embedding import EmbeddingConfig, embedding_num_params
+
+KET_LINEAR_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_ket_linears.json")
 
 
 def _row(name, cfg, regular_params):
@@ -100,7 +106,76 @@ def assigned_arch_compression():
     return rows
 
 
-def run(report):
+def ket_linear_table(order: int = 2, rank: int = 8):
+    """Beyond-paper: space savings from ket-ifying the FFN/attention
+    projections (``linear_kind="ket"``) for the 10 assigned archs.
+
+    Per arch: dense vs ket parameter count and bytes (at param_dtype fp32)
+    for the per-layer qkv/out + FFN wi/wg/wo projections, summed over
+    layers. MLA attention and MoE experts keep dense storage and are
+    excluded (they are not covered by ``linear_kind``).
+    """
+    from repro.configs import ARCHS, get_config
+    from repro.core.ketops import KronSpec, num_params
+
+    def ket_n(d_in, d_out):
+        return num_params(KronSpec(in_dim=d_in, out_dim=d_out, order=order,
+                                   rank=rank, use_layernorm=False))
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        d, H, KVH, Dh, ff = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                             cfg.head_dim, cfg.d_ff)
+        pattern = cfg.layer_pattern
+        counts = {"attn": [0, 0], "ffn": [0, 0]}  # kind -> [dense, ket]
+
+        def layer_kinds(kind):
+            # mirror models/transformer.init_layer: which projections exist
+            att = kind in ("attn", "local_attn") or (kind == "moe_attn" and not cfg.mla)
+            ffn = kind in ("attn", "local_attn", "rglru")
+            return att, ffn
+
+        n_layers = cfg.num_layers + cfg.enc_layers
+        for i in range(n_layers):
+            kind = pattern[i % len(pattern)] if i < cfg.num_layers else "attn"
+            att, ffn_here = layer_kinds(kind)
+            if att:
+                # encdec decoder layers carry self- AND cross-attention
+                mult = 2 if (cfg.family == "encdec" and i < cfg.num_layers) else 1
+                counts["attn"][0] += mult * (d * H * Dh * 2 + d * KVH * Dh * 2)
+                counts["attn"][1] += mult * (ket_n(d, H * Dh) + ket_n(H * Dh, d)
+                                             + 2 * ket_n(d, KVH * Dh))
+            if ffn_here and ff:
+                # mirror the init code: rglru blocks hardcode geglu (gated),
+                # encdec layers hardcode gelu (ungated) regardless of mlp_type
+                if kind == "rglru":
+                    gated = True
+                elif cfg.family == "encdec":
+                    gated = False
+                else:
+                    gated = cfg.mlp_type in ("swiglu", "geglu")
+                n_in = 2 if gated else 1
+                counts["ffn"][0] += n_in * d * ff + ff * d
+                counts["ffn"][1] += n_in * ket_n(d, ff) + ket_n(ff, d)
+        dense_n = counts["attn"][0] + counts["ffn"][0]
+        ket_total = counts["attn"][1] + counts["ffn"][1]
+        if dense_n == 0:  # pure-SSM arch: no covered projections
+            continue
+        rows.append({
+            "arch": arch, "order": order, "rank": rank,
+            "dense_params": dense_n, "ket_params": ket_total,
+            "dense_bytes": dense_n * 4, "ket_bytes": ket_total * 4,
+            "saving_rate": dense_n / ket_total,
+            "attn_saving": (counts["attn"][0] / counts["attn"][1]
+                            if counts["attn"][1] else None),
+            "ffn_saving": (counts["ffn"][0] / counts["ffn"][1]
+                           if counts["ffn"][1] else None),
+        })
+    return rows
+
+
+def run(report, json_path=None):
     for fn, cols in [
         (table1_gigaword, ("config", "params", "saving_rate", "paper_params")),
         (table2_iwslt, ("config", "params", "saving_rate", "paper_params")),
@@ -116,3 +191,13 @@ def run(report):
     for arch, reg, comp, rate, hcomp, both in assigned_arch_compression():
         report(f"arch_compression.{arch},0.0,"
                f"regular={reg};w2kxs={comp};saving={rate:.0f}x;head={hcomp};embed+head={both:.0f}x")
+    ket_rows = ket_linear_table()
+    for r in ket_rows:
+        report(f"ket_linears.{r['arch']},0.0,"
+               f"dense={r['dense_params']};ket={r['ket_params']};"
+               f"saving={r['saving_rate']:.0f}x;"
+               f"bytes={r['dense_bytes']}->{r['ket_bytes']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"ket_linears": ket_rows}, f, indent=2)
+            f.write("\n")

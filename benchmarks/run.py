@@ -35,7 +35,9 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import paper_tables
-    paper_tables.run(report)
+    # --quick (CI smoke) never rewrites checked-in JSON
+    paper_tables.run(report,
+                     json_path=None if args.quick else paper_tables.KET_LINEAR_JSON)
 
     if args.quick:
         from benchmarks import timing

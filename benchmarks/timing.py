@@ -265,7 +265,6 @@ def bench_kernel_fwd_bwd(report, quick: bool = False, out_path=None):
 def bench_smoke_steps(report):
     from repro.configs import ARCHS, get_smoke
     from repro.data.synthetic import DataConfig, batch_at
-    from repro.models import model as MD
     from repro.train.step import TrainConfig, init_state, make_train_step
 
     for arch in ARCHS:

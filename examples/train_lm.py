@@ -17,7 +17,6 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig
 from repro.optim.adamw import AdamWConfig, cosine_schedule
 from repro.train.loop import LoopConfig, train_loop

@@ -85,6 +85,20 @@ class ModelConfig:
     # 256k-vocab cell) splits tokens over it — sequence-parallel CE.
     ce_token_shard: str = "data_model"
 
+    # ket-ified linear layers (beyond-paper: the ketops operator applied to
+    # the layers that dominate LM parameter count). "ket" stores FFN wi/wg/wo
+    # and attention qkv/out projections as rank-r Kronecker factor stacks and
+    # applies them with the chain matmul (core/ketops.apply_matrix).
+    linear_kind: str = "dense"  # dense | ket
+    linear_order: int = 2
+    linear_rank: int = 8
+    # t1 column tile for the chain apply (bounds the (B, r, t1, Πq_rest)
+    # intermediate); None = resolved once by train.step.pin_kernel_blocks
+    linear_tile: Optional[int] = None
+    # shard the ket factor stacks' rank axis over "model" (rank-parallel
+    # operator; factors are otherwise replicated like embedding factors)
+    ket_shard_rank: bool = False
+
     # numerics / training
     dtype: Any = jnp.bfloat16
     param_dtype: Any = jnp.float32

@@ -3,6 +3,11 @@
 A single config dataclass + functional init/lookup API so models can switch
 the embedding representation with one config field (``--embedding regular``
 vs ``word2ketxs``), exactly mirroring the paper's experimental comparison.
+
+``EmbeddingConfig`` holds a :class:`repro.core.ketops.KronSpec` — the one
+source of truth for order/rank/factorizations/LN/kernel knobs — and keeps
+the historical scalar keyword constructor plus read-only properties as a
+compatibility surface. All non-regular math delegates to ``ketops``.
 """
 
 from __future__ import annotations
@@ -14,64 +19,79 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import kron as K
-from repro.core import word2ket as W2K
-from repro.core import word2ketxs as W2KXS
+from repro.core import ketops
 
 __all__ = ["EmbeddingConfig", "init_embedding", "embed_lookup", "embedding_num_params"]
 
+_KINDS = ("regular", "word2ket", "word2ketxs")
 
-@dataclasses.dataclass(frozen=True)
-class EmbeddingConfig:
+
+@dataclasses.dataclass(frozen=True, init=False)
+class EmbeddingConfig(ketops.SpecProps):
     """Configuration of a token-embedding representation.
 
     kind: "regular" | "word2ket" | "word2ketxs"
-    order/rank: tensor order n and rank r (paper eq. 3 / eq. 4); ignored for
-        "regular".
-    q_dims/t_dims: optional explicit factorizations of the embedding axis /
-        vocab axis; derived from (vocab_size, embed_dim, order) when None.
-    use_layernorm: LayerNorm at balanced-tree nodes (paper §2.3). The kron
-        *head* requires a pure (LN-free) embedding — see core/logits.py.
-    use_kernel: route word2ketXS lookups through the fused Pallas kernel
-        (fwd + dedicated bwd). None = auto: kernel on TPU, pure-jnp
-        reference elsewhere.
-    block_b: token-block size for the kernel grid; None = autotuned per
-        (rank, q_dims, t_dims, backend) — see repro/kernels/autotune.py.
+    spec: the KronSpec describing the factorized operator (also built for
+        "regular" so dtype/knobs have one home; its storage is then unused).
+
+    The constructor accepts the ketops knobs as scalars (order, rank,
+    q_dims, t_dims, use_layernorm, dtype, use_kernel, block_b) and folds
+    them into the spec; pass ``spec=`` directly to share one with other
+    consumers (it must agree with vocab_size/embed_dim/kind, and the
+    scalar knobs are then ignored).
     """
 
     vocab_size: int
     embed_dim: int
-    kind: str = "regular"
-    order: int = 2
-    rank: int = 1
-    q_dims: Optional[tuple[int, ...]] = None
-    t_dims: Optional[tuple[int, ...]] = None
-    use_layernorm: bool = True
-    dtype: Any = jnp.float32
-    use_kernel: Optional[bool] = None
-    block_b: Optional[int] = None
+    kind: str
+    spec: ketops.KronSpec
 
-    def resolved_q(self) -> tuple[int, ...]:
-        if self.q_dims is not None:
-            return self.q_dims
-        return K.choose_factorization(self.embed_dim, self.order)
-
-    def resolved_t(self) -> tuple[int, ...]:
-        if self.t_dims is not None:
-            return self.t_dims
-        return K.choose_factorization(self.vocab_size, self.order)
-
-    def __post_init__(self):
-        if self.kind not in ("regular", "word2ket", "word2ketxs"):
-            raise ValueError(f"unknown embedding kind {self.kind!r}")
-        if self.kind != "regular":
-            q = self.resolved_q()
-            if len(q) != self.order or math.prod(q) < self.embed_dim:
-                raise ValueError(f"bad q_dims {q} for p={self.embed_dim}")
-            if self.kind == "word2ketxs":
-                t = self.resolved_t()
-                if len(t) != self.order or math.prod(t) < self.vocab_size:
-                    raise ValueError(f"bad t_dims {t} for d={self.vocab_size}")
+    def __init__(
+        self,
+        vocab_size: int,
+        embed_dim: int,
+        kind: str = "regular",
+        order: int = 2,
+        rank: int = 1,
+        q_dims: Optional[tuple[int, ...]] = None,
+        t_dims: Optional[tuple[int, ...]] = None,
+        use_layernorm: bool = True,
+        dtype: Any = jnp.float32,
+        use_kernel: Optional[bool] = None,
+        block_b: Optional[int] = None,
+        spec: Optional[ketops.KronSpec] = None,
+    ):
+        if kind not in _KINDS:
+            raise ValueError(f"unknown embedding kind {kind!r}")
+        if spec is None:
+            spec = ketops.KronSpec(
+                in_dim=embed_dim,
+                out_dim=vocab_size,
+                order=order,
+                rank=rank,
+                q_dims=q_dims,
+                t_dims=t_dims,
+                storage="leaves" if kind == "word2ket" else "factors",
+                use_layernorm=use_layernorm,
+                dtype=dtype,
+                use_kernel=use_kernel,
+                block_b=block_b,
+            )
+        else:
+            if (spec.in_dim, spec.out_dim) != (embed_dim, vocab_size):
+                raise ValueError(
+                    f"spec dims ({spec.in_dim}, {spec.out_dim}) != "
+                    f"(embed_dim={embed_dim}, vocab_size={vocab_size})")
+            want = "leaves" if kind == "word2ket" else "factors"
+            if spec.storage != want:
+                raise ValueError(f"kind {kind!r} needs storage {want!r}, "
+                                 f"got {spec.storage!r}")
+        object.__setattr__(self, "vocab_size", vocab_size)
+        object.__setattr__(self, "embed_dim", embed_dim)
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "spec", spec)
+        if kind != "regular":
+            spec.validate()
 
 
 def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
@@ -79,34 +99,18 @@ def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
         scale = 1.0 / math.sqrt(cfg.embed_dim)
         table = jax.random.normal(key, (cfg.vocab_size, cfg.embed_dim), cfg.dtype) * scale
         return {"table": table}
-    if cfg.kind == "word2ket":
-        return W2K.init(key, cfg)
-    return W2KXS.init(key, cfg)
+    return ketops.init(key, cfg.spec)
 
 
 def embed_lookup(cfg: EmbeddingConfig, params: dict, ids: jax.Array) -> jax.Array:
     """ids (...,) int32 -> embeddings (..., embed_dim)."""
     if cfg.kind == "regular":
         return jnp.take(params["table"], ids, axis=0)
-    if cfg.kind == "word2ket":
-        return W2K.lookup(cfg, params, ids)
-    from repro.kernels import kernels_enabled
-    if kernels_enabled(cfg.use_kernel):
-        from repro.kernels.kron_gather.ops import kron_gather
-        flat = kron_gather(params["factors"], ids.reshape(-1), cfg.embed_dim,
-                           cfg.use_layernorm, cfg.block_b)
-        return flat.reshape(*ids.shape, cfg.embed_dim).astype(cfg.dtype)
-    return W2KXS.lookup(cfg, params, ids)
+    return ketops.apply_vector(cfg.spec, params, ids)
 
 
 def embedding_num_params(cfg: EmbeddingConfig) -> int:
     """Trainable parameter count — reproduces the paper's #Params columns."""
     if cfg.kind == "regular":
         return cfg.vocab_size * cfg.embed_dim
-    q = cfg.resolved_q()
-    if cfg.kind == "word2ket":
-        # d · r · n · q   (paper §2.3; uniform q required)
-        return cfg.vocab_size * cfg.rank * sum(q)
-    t = cfg.resolved_t()
-    # r · Σ_j q_j·t_j   (paper §3.2: r·n·q·t for uniform factors)
-    return cfg.rank * sum(qj * tj for qj, tj in zip(q, t))
+    return ketops.num_params(cfg.spec)

@@ -1,0 +1,341 @@
+"""ketops: the unified Kronecker-operator subsystem (paper §2.3 / §3.2).
+
+The paper's core object is a large linear operator stored as a sum of
+Kronecker products,
+
+    F = Σ_{k=1..r} ⊗_{j=1..n} F_jk ,   F_jk ∈ R^{q_j × t_j},
+
+with ``prod(q) ≥ in_dim`` and ``prod(t) ≥ out_dim``. Everything the repo
+does with that object — word2ket embeddings, word2ketXS embeddings, the
+Kronecker vocab head, and ket-ified linear layers — is one of four
+primitives over one spec:
+
+  * :func:`init`          — factor (or per-column leaf) tables;
+  * :func:`apply_vector`  — lazy column extraction: ``ids -> F[:, ids]``
+                            (an embedding lookup; routes through the fused
+                            ``kron_gather`` Pallas kernel when enabled);
+  * :func:`apply_matrix`  — ``x @ F`` via the factor chain:
+                            ``r·B·(q1·q2·t1 + t1·q2·t2)`` FLOPs at order 2
+                            instead of ``B·in_dim·out_dim`` (the kron-head
+                            math, now available to any linear layer);
+  * :func:`materialize`   — the dense matrix, for tests/oracles only.
+
+Two storage layouts share the spec:
+
+  * ``storage="factors"`` (word2ketXS, §3.2): ``order`` stacks of shape
+    ``(rank, q_j, t_j)`` — a few KB regardless of ``in_dim·out_dim``;
+  * ``storage="leaves"`` (word2ket, §2.3): per-column leaf tables of shape
+    ``(out_dim, rank, q_j)`` — each column is its own entangled tensor.
+    Only ``apply_vector`` (and ``materialize``) make sense here.
+
+``core/word2ket.py``, ``core/word2ketxs.py`` and the kron branch of
+``core/logits.py`` are thin adapters over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kron as K
+
+__all__ = [
+    "KronSpec",
+    "SpecProps",
+    "init",
+    "apply_vector",
+    "apply_matrix",
+    "apply_matrix_factors",
+    "materialize",
+    "materialize_dense",
+    "num_params",
+    "factor_shapes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class KronSpec:
+    """Shape + policy of one Kronecker-factorized operator F (in_dim × out_dim).
+
+    in_dim:  the q-axis logical dimension (embedding width p / linear fan-in);
+             ``prod(resolved_q()) >= in_dim``, excess rows are sliced away.
+    out_dim: the t-axis logical dimension (vocab size / linear fan-out);
+             ``prod(resolved_t()) >= out_dim``, excess columns are masked or
+             sliced.
+    order/rank: tensor order n and rank r (paper eq. 3 / eq. 4).
+    q_dims/t_dims: explicit factorizations; derived from (in_dim, out_dim,
+             order) when None.
+    storage: "factors" (word2ketXS whole-matrix) | "leaves" (word2ket
+             per-column).
+    use_layernorm: non-affine LayerNorm at the balanced-tree nodes (paper
+             §2.3). Must be False for ``apply_matrix`` — LN is per-column,
+             so only the lazy column view can express it.
+    use_kernel: route ``apply_vector`` through the fused Pallas kernel
+             (None = auto: TPU without an ambient multi-device mesh).
+    block_b: token-block size for the kernel grid; None = autotuned.
+    vocab_tile: t1-digit tile for streamed column-tiled consumers (the CE
+             loss and tiled ``apply_matrix``); None = autotuned.
+    """
+
+    in_dim: int
+    out_dim: int
+    order: int = 2
+    rank: int = 1
+    q_dims: Optional[tuple[int, ...]] = None
+    t_dims: Optional[tuple[int, ...]] = None
+    storage: str = "factors"
+    use_layernorm: bool = True
+    dtype: Any = jnp.float32
+    use_kernel: Optional[bool] = None
+    block_b: Optional[int] = None
+    vocab_tile: Optional[int] = None
+
+    def __post_init__(self):
+        if self.storage not in ("factors", "leaves"):
+            raise ValueError(f"unknown storage {self.storage!r}")
+
+    def resolved_q(self) -> tuple[int, ...]:
+        if self.q_dims is not None:
+            return self.q_dims
+        return K.choose_factorization(self.in_dim, self.order)
+
+    def resolved_t(self) -> tuple[int, ...]:
+        if self.t_dims is not None:
+            return self.t_dims
+        return K.choose_factorization(self.out_dim, self.order)
+
+    def validate(self) -> "KronSpec":
+        q = self.resolved_q()
+        if len(q) != self.order or math.prod(q) < self.in_dim:
+            raise ValueError(f"bad q_dims {q} for in_dim={self.in_dim}")
+        if self.storage == "factors":
+            t = self.resolved_t()
+            if len(t) != self.order or math.prod(t) < self.out_dim:
+                raise ValueError(f"bad t_dims {t} for out_dim={self.out_dim}")
+        return self
+
+
+class SpecProps:
+    """Read-only pass-through of KronSpec knobs for configs holding a
+    ``spec`` field (EmbeddingConfig / HeadConfig compat surface)."""
+
+    spec: KronSpec
+
+    @property
+    def order(self) -> int:
+        return self.spec.order
+
+    @property
+    def rank(self) -> int:
+        return self.spec.rank
+
+    @property
+    def q_dims(self) -> Optional[tuple[int, ...]]:
+        return self.spec.q_dims
+
+    @property
+    def t_dims(self) -> Optional[tuple[int, ...]]:
+        return self.spec.t_dims
+
+    @property
+    def use_layernorm(self) -> bool:
+        return self.spec.use_layernorm
+
+    @property
+    def vocab_tile(self) -> Optional[int]:
+        return self.spec.vocab_tile
+
+    @property
+    def dtype(self) -> Any:
+        return self.spec.dtype
+
+    @property
+    def use_kernel(self) -> Optional[bool]:
+        return self.spec.use_kernel
+
+    @property
+    def block_b(self) -> Optional[int]:
+        return self.spec.block_b
+
+    def resolved_q(self) -> tuple[int, ...]:
+        return self.spec.resolved_q()
+
+    def resolved_t(self) -> tuple[int, ...]:
+        return self.spec.resolved_t()
+
+
+def factor_shapes(spec: KronSpec) -> list[tuple[int, int, int]]:
+    q, t = spec.resolved_q(), spec.resolved_t()
+    return [(spec.rank, qj, tj) for qj, tj in zip(q, t)]
+
+
+def _leaf_scale(spec: KronSpec) -> float:
+    # Entry of the reconstructed column is a sum over r of products of n
+    # factor entries; with factor std s: std ≈ sqrt(r)·s^n; target
+    # 1/sqrt(prod q) — the O(1/sqrt(fan)) of a regular table / dense layer.
+    p = math.prod(spec.resolved_q())
+    return (1.0 / (math.sqrt(spec.rank) * math.sqrt(p))) ** (1.0 / spec.order)
+
+
+def init(key: jax.Array, spec: KronSpec) -> dict:
+    spec.validate()
+    q = spec.resolved_q()
+    keys = jax.random.split(key, spec.order)
+    s = _leaf_scale(spec)
+    if spec.storage == "leaves":
+        leaves = [
+            jax.random.normal(k, (spec.out_dim, spec.rank, qj), spec.dtype) * s
+            for k, qj in zip(keys, q)
+        ]
+        return {"leaves": leaves}
+    factors = [
+        jax.random.normal(k, shape, spec.dtype) * s
+        for k, shape in zip(keys, factor_shapes(spec))
+    ]
+    return {"factors": factors}
+
+
+def num_params(spec: KronSpec) -> int:
+    """Trainable parameter count — reproduces the paper's #Params columns."""
+    q = spec.resolved_q()
+    if spec.storage == "leaves":
+        # d · r · Σq_j   (paper §2.3; = d·r·n·q for uniform q)
+        return spec.out_dim * spec.rank * sum(q)
+    t = spec.resolved_t()
+    # r · Σ_j q_j·t_j   (paper §3.2: r·n·q·t for uniform factors)
+    return spec.rank * sum(qj * tj for qj, tj in zip(q, t))
+
+
+# ---------------------------------------------------------------------------
+# apply_vector — lazy column extraction (embedding lookup)
+# ---------------------------------------------------------------------------
+
+def apply_vector(spec: KronSpec, params: dict, ids: jax.Array) -> jax.Array:
+    """ids (...,) int -> columns of F as vectors (..., in_dim).
+
+    ``storage="leaves"``: gathers one leaf row per factor. ``"factors"``:
+    lazy mixed-radix column extraction (paper §3.2) — column i of ⊗_j F_jk
+    is ⊗_j col_{i_j}(F_jk). Both run the balanced LayerNorm tree. The
+    factors path routes through the fused ``kron_gather`` Pallas kernel
+    when ``spec.use_kernel`` resolves on.
+    """
+    if spec.storage == "leaves":
+        vs = [jnp.take(leaf, ids, axis=0) for leaf in params["leaves"]]  # (..., r, q_j)
+        v = K.kron_vectors_tree(vs, use_layernorm=spec.use_layernorm)
+        return jnp.sum(v, axis=-2)[..., : spec.in_dim]
+
+    from repro.kernels import kernels_enabled
+    if kernels_enabled(spec.use_kernel):
+        from repro.kernels.kron_gather.ops import kron_gather
+        flat = kron_gather(params["factors"], ids.reshape(-1), spec.in_dim,
+                           spec.use_layernorm, spec.block_b)
+        return flat.reshape(*ids.shape, spec.in_dim).astype(spec.dtype)
+
+    t = spec.resolved_t()
+    digits = K.mixed_radix_digits(ids, t)
+    # factor j: (rank, q_j, t_j); gather its i_j-th column -> (..., rank, q_j)
+    vs = [jnp.take(f, d, axis=2) for f, d in zip(params["factors"], digits)]
+    vs = [jnp.moveaxis(v, (0, 1), (-2, -1)) for v in vs]
+    v = K.kron_vectors_tree(vs, use_layernorm=spec.use_layernorm)  # (..., r, prod q)
+    return jnp.sum(v, axis=-2)[..., : spec.in_dim]
+
+
+# ---------------------------------------------------------------------------
+# apply_matrix — x @ F via the factor chain (kron head / ket linear layers)
+# ---------------------------------------------------------------------------
+
+def apply_matrix_factors(
+    factors: list,
+    x: jax.Array,
+    out_dim: int,
+    *,
+    tile: Optional[int] = None,
+) -> jax.Array:
+    """``x (..., d_in) @ (Σ_k ⊗_j F_jk)`` -> ``(..., out_dim)``, spec-free.
+
+    All shapes derive from the factor stacks ``(rank, q_j, t_j)``, so ket
+    linear layers can call this on bare parameter pytrees. ``x`` is
+    zero-padded up to ``prod q`` and the output sliced to ``out_dim``.
+
+    ``tile`` streams the first t-factor in column tiles (clamped to a
+    divisor of t_1): the chain's widest intermediate shrinks from
+    ``(B, r, t1, Πq_rest)`` to ``(B, r, tile, Πq_rest)``. Tiles are a
+    static Python loop — differentiable, jit-stable.
+    """
+    from repro.kernels import common as KC
+
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    P = math.prod(q_dims)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if P > x2.shape[-1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+
+    t1 = t_dims[0]
+    if tile is not None and 0 < tile < t1:
+        while t1 % tile != 0:  # BlockSpec-style: tile must divide t_1
+            tile -= 1
+        f0, rest = factors[0], list(factors[1:])
+        outs = [
+            KC.chain_forward(x2, [f0[:, :, i * tile:(i + 1) * tile]] + rest)
+            for i in range(t1 // tile)
+        ]
+        # chain column order is mixed-radix over (t1, t2, ...): contiguous
+        # t1 tiles are contiguous column blocks
+        z = jnp.concatenate(outs, axis=-1)
+    else:
+        z = KC.chain_forward(x2, list(factors))
+    z = z[:, :out_dim]
+    return z.reshape(*lead, out_dim).astype(x.dtype)
+
+
+def apply_matrix(
+    spec: KronSpec,
+    params: dict,
+    x: jax.Array,
+    *,
+    tile: Optional[int] = None,
+) -> jax.Array:
+    """``x (..., in_dim) -> (..., out_dim)`` through the factorized operator.
+
+    Requires ``storage="factors"`` and ``use_layernorm=False`` (with LN off
+    the operator is *exactly* Σ_k ⊗_j F_jk, so the chain matmul is exact).
+    """
+    if spec.storage != "factors":
+        raise ValueError("apply_matrix needs whole-matrix ('factors') storage")
+    if spec.use_layernorm:
+        raise ValueError("apply_matrix requires a pure (LayerNorm-free) operator")
+    return apply_matrix_factors(
+        params["factors"], x, spec.out_dim,
+        tile=tile if tile is not None else spec.vocab_tile)
+
+
+# ---------------------------------------------------------------------------
+# Dense views (tests / oracles — never at scale)
+# ---------------------------------------------------------------------------
+
+def materialize(spec: KronSpec, params: dict) -> jax.Array:
+    """Full (out_dim, in_dim) table via lazy lookup of every column.
+
+    Always walks the pure-jnp reference path (never the Pallas kernel) so it
+    stays an *independent* oracle for kernel-routed lookups.
+    """
+    ids = jnp.arange(spec.out_dim)
+    return apply_vector(dataclasses.replace(spec, use_kernel=False), params, ids)
+
+
+def materialize_dense(spec: KronSpec, params: dict) -> jax.Array:
+    """Independent oracle via dense Kronecker products (no tree code path).
+
+    Only valid for LN-free "factors" storage. Returns (out_dim, in_dim).
+    """
+    assert spec.storage == "factors" and not spec.use_layernorm
+    mats = [K.kron_matrix([f[k] for f in params["factors"]])
+            for k in range(spec.rank)]
+    F = sum(mats)  # (prod q, prod t)
+    return F.T[: spec.out_dim, : spec.in_dim]

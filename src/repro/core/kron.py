@@ -16,7 +16,6 @@ both the reference implementations and as the oracle for the Pallas kernels.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Sequence
 
 import jax

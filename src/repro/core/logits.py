@@ -5,7 +5,9 @@ of the model: with LayerNorm disabled the embedding operator is exactly
 F = Σ_k ⊗_j F_jk, so ``logits = h · F`` factorizes into a chain of small dense
 matmuls — r·B·(q1·q2·t1 + t1·q2·t2) FLOPs for order 2 instead of B·p·d.
 At vocab 256k / p 4096 that is 10–50× fewer FLOPs than a dense head *and* the
-factors are a few MB instead of a 1 GB weight matrix.
+factors are a few MB instead of a 1 GB weight matrix. The chain itself is
+:func:`repro.core.ketops.apply_matrix` — the same primitive ket-ified linear
+layers use (models/common.py).
 
 Both heads expose a **vocab-tiled fused cross-entropy** (`head_ce_loss`) that
 runs an online logsumexp over vocabulary tiles inside ``lax.scan`` with a
@@ -23,6 +25,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import ketops
 from repro.core.embedding import EmbeddingConfig
 
 __all__ = [
@@ -35,25 +38,68 @@ __all__ = [
 ]
 
 
-@dataclasses.dataclass(frozen=True)
-class HeadConfig:
+@dataclasses.dataclass(frozen=True, init=False)
+class HeadConfig(ketops.SpecProps):
+    """Vocab-head configuration; the kron branch is a pure (LN-free) KronSpec.
+
+    The constructor keeps the historical scalar keywords; ``spec.vocab_tile``
+    carries the CE streaming tile (t1 digits per tile for kron, in units the
+    autotune table understands). The tile's rank-carrying intermediate is
+    (tokens, rank, vocab_tile, q2) fp32 — keep it small at production token
+    counts. None = autotuned per (rank, q_dims, t_dims, backend).
+    """
+
     vocab_size: int
     embed_dim: int
-    kind: str = "dense"  # "dense" | "kron"
-    order: int = 2
-    rank: int = 32
-    q_dims: Optional[tuple[int, ...]] = None
-    t_dims: Optional[tuple[int, ...]] = None
-    # t1 digits per CE tile (kron) / 8192 columns (dense). The tile's rank-
-    # carrying intermediate is (tokens, rank, vocab_tile, q2) fp32 — keep the
-    # tile small so that stays ~GB at production token counts (perf knob).
-    # None = autotuned per (rank, q_dims, t_dims, backend).
-    vocab_tile: Optional[int] = 4
-    dtype: Any = jnp.float32
-    # route the streamed CE through the fused Pallas kernel (fwd + dedicated
-    # bwd). None = auto: kernel on TPU, lax.scan reference elsewhere.
-    use_kernel: Optional[bool] = None
-    block_b: Optional[int] = None  # kernel token-block size; None = autotuned
+    kind: str
+    spec: ketops.KronSpec
+
+    def __init__(
+        self,
+        vocab_size: int,
+        embed_dim: int,
+        kind: str = "dense",
+        order: int = 2,
+        rank: int = 32,
+        q_dims: Optional[tuple[int, ...]] = None,
+        t_dims: Optional[tuple[int, ...]] = None,
+        vocab_tile: Optional[int] = 4,
+        dtype: Any = jnp.float32,
+        use_kernel: Optional[bool] = None,
+        block_b: Optional[int] = None,
+        spec: Optional[ketops.KronSpec] = None,
+    ):
+        if kind not in ("dense", "kron"):
+            raise ValueError(f"unknown head kind {kind!r}")
+        if spec is None:
+            spec = ketops.KronSpec(
+                in_dim=embed_dim,
+                out_dim=vocab_size,
+                order=order,
+                rank=rank,
+                q_dims=q_dims,
+                t_dims=t_dims,
+                storage="factors",
+                use_layernorm=False,  # the kron head requires a pure operator
+                dtype=dtype,
+                use_kernel=use_kernel,
+                block_b=block_b,
+                vocab_tile=vocab_tile,
+            )
+        else:
+            if (spec.in_dim, spec.out_dim) != (embed_dim, vocab_size):
+                raise ValueError(
+                    f"spec dims ({spec.in_dim}, {spec.out_dim}) != "
+                    f"(embed_dim={embed_dim}, vocab_size={vocab_size})")
+            if spec.storage != "factors" or spec.use_layernorm:
+                raise ValueError(
+                    "head spec must be a pure (LN-free) 'factors' operator")
+        object.__setattr__(self, "vocab_size", vocab_size)
+        object.__setattr__(self, "embed_dim", embed_dim)
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "spec", spec)
+        if kind == "kron":
+            spec.validate()
 
     def as_embedding_config(self) -> EmbeddingConfig:
         # The kron head is a *pure* (LayerNorm-free) word2ketXS operator.
@@ -61,14 +107,7 @@ class HeadConfig:
             vocab_size=self.vocab_size,
             embed_dim=self.embed_dim,
             kind="word2ketxs",
-            order=self.order,
-            rank=self.rank,
-            q_dims=self.q_dims,
-            t_dims=self.t_dims,
-            use_layernorm=False,
-            dtype=self.dtype,
-            use_kernel=self.use_kernel,
-            block_b=self.block_b,
+            spec=self.spec,
         )
 
 
@@ -77,17 +116,13 @@ def init_head(key: jax.Array, cfg: HeadConfig) -> dict:
         scale = 1.0 / math.sqrt(cfg.embed_dim)
         w = jax.random.normal(key, (cfg.vocab_size, cfg.embed_dim), cfg.dtype) * scale
         return {"unembed": w}
-    from repro.core import word2ketxs as W2KXS
-
-    return W2KXS.init(key, cfg.as_embedding_config())
+    return ketops.init(key, cfg.spec)
 
 
 def head_num_params(cfg: HeadConfig) -> int:
     if cfg.kind == "dense":
         return cfg.vocab_size * cfg.embed_dim
-    ecfg = cfg.as_embedding_config()
-    q, t = ecfg.resolved_q(), ecfg.resolved_t()
-    return cfg.rank * sum(qj * tj for qj, tj in zip(q, t))
+    return ketops.num_params(cfg.spec)
 
 
 # ---------------------------------------------------------------------------
@@ -96,37 +131,7 @@ def head_num_params(cfg: HeadConfig) -> int:
 
 def kron_head_logits(cfg: HeadConfig, params: dict, h: jax.Array) -> jax.Array:
     """h (..., p) -> logits (..., vocab) via the factorized operator chain."""
-    ecfg = cfg.as_embedding_config()
-    q, t = ecfg.resolved_q(), ecfg.resolved_t()
-    P = math.prod(q)
-    lead = h.shape[:-1]
-    x = h.reshape(-1, h.shape[-1]).astype(jnp.float32)
-    if P > x.shape[-1]:
-        x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
-    z = x.reshape((-1, 1) + tuple(q))  # (B, r=1 broadcast, q1..qn)
-    for j, f in enumerate(params["factors"]):  # f: (r, q_j, t_j)
-        # contract axis 2 (current q_j position) against f's q_j, batched on r
-        z = jnp.einsum("brq...,rqt->brt...", z, f.astype(jnp.float32))
-        # move the fresh t_j axis to the end so axis 2 is the next q_{j+1}
-        z = jnp.moveaxis(z, 2, 2 + (len(q) - 1))
-    z = jnp.sum(z, axis=1)  # sum over rank
-    logits = z.reshape(x.shape[0], math.prod(t))[:, : cfg.vocab_size]
-    return logits.reshape(*lead, cfg.vocab_size)
-
-
-def _kron_tile_chain(cfg: HeadConfig, factors: list, x: jax.Array) -> jax.Array:
-    """Logits tile from a factor chain whose FIRST factor is pre-sliced to
-    (r, q1, tile_t1). x: (B, prod_q) fp32. Returns (B, tile_t1 * prod(t[1:]))."""
-    ecfg = cfg.as_embedding_config()
-    q = ecfg.resolved_q()
-    z = x.reshape((-1, 1) + tuple(q))
-    cols = 1
-    for f in factors:
-        z = jnp.einsum("brq...,rqt->brt...", z, f.astype(jnp.float32))
-        z = jnp.moveaxis(z, 2, 2 + (len(q) - 1))
-        cols *= f.shape[2]
-    z = jnp.sum(z, axis=1)
-    return z.reshape(x.shape[0], cols)
+    return ketops.apply_matrix(cfg.spec, params, h.astype(jnp.float32), tile=0)
 
 
 def _dense_tile_logits(params: dict, x: jax.Array, col_start: jax.Array, cols: int) -> jax.Array:
@@ -184,8 +189,8 @@ def head_ce_loss(
     # stacking, whereas slice gradients become scatter-adds that GSPMD
     # reshards catastrophically inside the loop (measured in §Perf).
     if cfg.kind == "kron":
-        ecfg = cfg.as_embedding_config()
-        q, t = ecfg.resolved_q(), ecfg.resolved_t()
+        from repro.kernels import common as KC
+        q, t = cfg.spec.resolved_q(), cfg.spec.resolved_t()
         P = math.prod(q)
         if P > x.shape[-1]:
             x = jnp.pad(x, ((0, 0), (0, P - x.shape[-1])))
@@ -203,10 +208,10 @@ def head_ce_loss(
         # (r, q1, t1) -> (n_tiles, r, q1, tile_t1)
         f0 = params["factors"][0]
         tiles = jnp.moveaxis(f0.reshape(f0.shape[0], f0.shape[1], n_tiles, tile_t1), 2, 0)
-        rest = params["factors"][1:]
+        rest = list(params["factors"][1:])
 
         def tile_fn(w_tile):
-            return _kron_tile_chain(cfg, [w_tile] + list(rest), x)
+            return KC.chain_forward(x, [w_tile] + rest)
 
     else:
         tile_cols = min(8192, cfg.vocab_size)

@@ -7,44 +7,29 @@ one leaf row per factor and evaluates the balanced tensor-product tree with
 LayerNorm at the internal nodes, then sums over rank.
 
 Storage: d·r·Σq_j  (= d·r·n·q for uniform q), vs d·p regular.
+
+Thin adapter over :mod:`repro.core.ketops` (``storage="leaves"``); ``cfg``
+is an :class:`repro.core.embedding.EmbeddingConfig` holding the KronSpec.
 """
 
 from __future__ import annotations
 
-import math
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import kron as K
+from repro.core import ketops
 
 __all__ = ["init", "lookup", "materialize"]
 
 
 def init(key: jax.Array, cfg) -> dict:
-    q = cfg.resolved_q()
-    p = math.prod(q)
-    keys = jax.random.split(key, cfg.order)
-    # Per-leaf scale so the rank-summed reconstructed vector has O(1/sqrt(p))
-    # entries like a regular embedding: each entry of ⊗v_j is a product of n
-    # leaf entries; with leaf std s, entry std ≈ s^n; want s^n·sqrt(r) = 1/sqrt(p).
-    s = (1.0 / (math.sqrt(cfg.rank) * math.sqrt(p))) ** (1.0 / cfg.order)
-    leaves = [
-        jax.random.normal(k, (cfg.vocab_size, cfg.rank, qj), cfg.dtype) * s
-        for k, qj in zip(keys, q)
-    ]
-    return {"leaves": leaves}
+    return ketops.init(key, cfg.spec)
 
 
 def lookup(cfg, params: dict, ids: jax.Array) -> jax.Array:
     """ids (...,) -> (..., embed_dim)."""
-    vs = [jnp.take(leaf, ids, axis=0) for leaf in params["leaves"]]  # (..., r, q_j)
-    v = K.kron_vectors_tree(vs, use_layernorm=cfg.use_layernorm)  # (..., r, prod q)
-    v = jnp.sum(v, axis=-2)
-    return v[..., : cfg.embed_dim]
+    return ketops.apply_vector(cfg.spec, params, ids)
 
 
 def materialize(cfg, params: dict) -> jax.Array:
     """Full (vocab, p) matrix — test oracle, small shapes only."""
-    ids = jnp.arange(cfg.vocab_size)
-    return lookup(cfg, params, ids)
+    return ketops.materialize(cfg.spec, params)

@@ -6,57 +6,33 @@ stacks of shape (rank, q_j, t_j) — a few KB..MB total regardless of d·p.
 
 Lazy lookup (the paper's "lazy tensors", §3.2): column i of ⊗_j F_jk is
 ⊗_j col_{i_j}(F_jk) where (i_1..i_n) are the mixed-radix digits of i in
-radices (t_1..t_n). A lookup therefore gathers one t-column per factor and
-runs the same balanced LayerNorm tree as word2ket — the d×p matrix is never
-materialized.
+radices (t_1..t_n); the d×p matrix is never materialized. The TPU hot path
+is repro/kernels/kron_gather.
 
-``lookup`` is the pure-jnp reference; the TPU hot path is
-repro/kernels/kron_gather (fused one-hot-matmul gather + rank-summed outer
-products in VMEM).
+Thin adapter over :mod:`repro.core.ketops` (``storage="factors"``); ``cfg``
+is an :class:`repro.core.embedding.EmbeddingConfig` holding the KronSpec.
 """
 
 from __future__ import annotations
 
-import math
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import kron as K
+from repro.core import ketops
 
 __all__ = ["init", "lookup", "materialize", "factor_shapes"]
 
 
 def factor_shapes(cfg) -> list[tuple[int, int, int]]:
-    q, t = cfg.resolved_q(), cfg.resolved_t()
-    return [(cfg.rank, qj, tj) for qj, tj in zip(q, t)]
+    return ketops.factor_shapes(cfg.spec)
 
 
 def init(key: jax.Array, cfg) -> dict:
-    q = cfg.resolved_q()
-    p = math.prod(q)
-    keys = jax.random.split(key, cfg.order)
-    # Entry of the reconstructed column is a sum over r of products of n factor
-    # entries; with factor std s: std ≈ sqrt(r)·s^n; target 1/sqrt(p).
-    s = (1.0 / (math.sqrt(cfg.rank) * math.sqrt(p))) ** (1.0 / cfg.order)
-    factors = [
-        jax.random.normal(k, shape, cfg.dtype) * s
-        for k, shape in zip(keys, factor_shapes(cfg))
-    ]
-    return {"factors": factors}
+    return ketops.init(key, cfg.spec)
 
 
 def lookup(cfg, params: dict, ids: jax.Array) -> jax.Array:
-    """ids (...,) int -> (..., embed_dim). Pure-jnp reference path."""
-    t = cfg.resolved_t()
-    digits = K.mixed_radix_digits(ids, t)
-    # factor j: (rank, q_j, t_j); gather its i_j-th column -> (..., rank, q_j)
-    vs = [jnp.take(f, d, axis=2) for f, d in zip(params["factors"], digits)]
-    # jnp.take gives (rank, q_j, *ids.shape); move to (*ids.shape, rank, q_j)
-    vs = [jnp.moveaxis(v, (0, 1), (-2, -1)) for v in vs]
-    v = K.kron_vectors_tree(vs, use_layernorm=cfg.use_layernorm)  # (..., r, prod q)
-    v = jnp.sum(v, axis=-2)
-    return v[..., : cfg.embed_dim]
+    """ids (...,) int -> (..., embed_dim)."""
+    return ketops.apply_vector(cfg.spec, params, ids)
 
 
 def materialize(cfg, params: dict) -> jax.Array:
@@ -65,8 +41,7 @@ def materialize(cfg, params: dict) -> jax.Array:
     With use_layernorm=False this equals the transpose of
     Σ_k ⊗_j F_jk (sliced to the first d columns / p rows) exactly.
     """
-    ids = jnp.arange(cfg.vocab_size)
-    return lookup(cfg, params, ids)
+    return ketops.materialize(cfg.spec, params)
 
 
 def materialize_dense_oracle(cfg, params: dict) -> jax.Array:
@@ -74,9 +49,4 @@ def materialize_dense_oracle(cfg, params: dict) -> jax.Array:
 
     Only valid for use_layernorm=False. Returns (vocab, p).
     """
-    assert not cfg.use_layernorm
-    mats = []
-    for k in range(cfg.rank):
-        mats.append(K.kron_matrix([f[k] for f in params["factors"]]))
-    F = sum(mats)  # (prod q, prod t)
-    return F.T[: cfg.vocab_size, : cfg.embed_dim]
+    return ketops.materialize_dense(cfg.spec, params)

@@ -22,12 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import math
 import os
 import time
 from typing import Callable, Optional, Sequence
 
 import jax
+
+logger = logging.getLogger(__name__)
 
 __all__ = [
     "BlockConfig",
@@ -142,6 +145,9 @@ def heuristic_block_config(
     raise ValueError(f"unknown op {op!r}")
 
 
+_warned_misses: set = set()
+
+
 def get_block_config(
     op: str,
     rank: int,
@@ -150,10 +156,19 @@ def get_block_config(
     backend: Optional[str] = None,
 ) -> BlockConfig:
     backend = backend or jax.default_backend()
-    entry = load_table().get(table_key(op, backend, rank, q_dims, t_dims))
+    key = table_key(op, backend, rank, q_dims, t_dims)
+    entry = load_table().get(key)
     if entry is not None:
         return BlockConfig(block_b=int(entry["block_b"]),
                            t1_block=int(entry.get("t1_block", 0)))
+    # A de-tuned run is silent otherwise: warn once per shape so logs show
+    # which shapes run on the heuristic instead of measured winners.
+    if key not in _warned_misses:
+        _warned_misses.add(key)
+        logger.warning(
+            "autotune table miss for %s — falling back to the VMEM heuristic "
+            "(measure with: PYTHONPATH=src REPRO_RETUNE=1 python "
+            "benchmarks/run.py kernels)", key)
     return heuristic_block_config(op, backend, rank, q_dims, t_dims)
 
 

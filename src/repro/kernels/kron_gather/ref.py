@@ -6,7 +6,6 @@ not depend on the module-level config plumbing.
 
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
 import jax

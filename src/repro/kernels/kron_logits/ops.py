@@ -21,7 +21,6 @@ import os
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import autotune
 from repro.kernels.kron_logits.kron_logits import (

@@ -8,7 +8,6 @@ sweep is resumable and benchmarks/roofline.py can consume partial results.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time

@@ -19,7 +19,7 @@ def main(argv=None):
     from repro.launch.mesh import make_mesh
     from repro.models import model as MD
     from repro.parallel import meshctx
-    from repro.parallel.sharding import batch_axes_for, cache_specs, param_specs, to_shardings
+    from repro.parallel.sharding import cache_specs, param_specs, to_shardings
 
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)

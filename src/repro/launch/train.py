@@ -12,10 +12,8 @@ the same code on whatever devices exist. Mesh axes map (data, model) — or
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
-import numpy as np
 
 
 def main(argv=None):
@@ -44,6 +42,9 @@ def main(argv=None):
     p.add_argument("--compress-grads", action="store_true")
     p.add_argument("--embedding", default=None, choices=[None, "regular", "word2ket", "word2ketxs"])
     p.add_argument("--head", default=None, choices=[None, "dense", "kron"])
+    p.add_argument("--linear", default=None, choices=[None, "dense", "ket"],
+                   help="store FFN/attention projections as ket Kronecker factors")
+    p.add_argument("--linear-rank", type=int, default=None)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -52,6 +53,10 @@ def main(argv=None):
         overrides["embedding_kind"] = args.embedding
     if args.head:
         overrides["head_kind"] = args.head
+    if args.linear:
+        overrides["linear_kind"] = args.linear
+    if args.linear_rank is not None:
+        overrides["linear_rank"] = args.linear_rank
     cfg = (get_smoke if args.smoke else get_config)(args.arch, **overrides)
 
     dshape = tuple(int(x) for x in args.mesh.split("x"))

@@ -5,13 +5,12 @@ full (Sq, Skv) score matrix, which is mandatory at the 32k prefill shapes).
 
 from __future__ import annotations
 
-import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_rope, dense_init, rmsnorm
+from repro.models.common import (apply_rope, dense_init, linear_init, out_proj,
+                                 qkv_proj, rmsnorm)
 
 NEG = jnp.float32(-1e30)
 
@@ -144,12 +143,21 @@ def init_attention(key, cfg, dtype=None) -> dict:
     dtype = dtype or cfg.param_dtype
     d, H, KVH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 4)
-    p = {
-        "wq": dense_init(ks[0], (d, H, Dh), dtype, fan_in=d),
-        "wk": dense_init(ks[1], (d, KVH, Dh), dtype, fan_in=d),
-        "wv": dense_init(ks[2], (d, KVH, Dh), dtype, fan_in=d),
-        "wo": dense_init(ks[3], (H, Dh, d), dtype, fan_in=H * Dh),
-    }
+    if getattr(cfg, "linear_kind", "dense") == "ket":
+        kw = dict(kind="ket", order=cfg.linear_order, rank=cfg.linear_rank)
+        p = {
+            "wq": linear_init(ks[0], d, H * Dh, dtype, **kw),
+            "wk": linear_init(ks[1], d, KVH * Dh, dtype, **kw),
+            "wv": linear_init(ks[2], d, KVH * Dh, dtype, **kw),
+            "wo": linear_init(ks[3], H * Dh, d, dtype, **kw),
+        }
+    else:
+        p = {
+            "wq": dense_init(ks[0], (d, H, Dh), dtype, fan_in=d),
+            "wk": dense_init(ks[1], (d, KVH, Dh), dtype, fan_in=d),
+            "wv": dense_init(ks[2], (d, KVH, Dh), dtype, fan_in=d),
+            "wo": dense_init(ks[3], (H, Dh, d), dtype, fan_in=H * Dh),
+        }
     if cfg.qk_norm:
         p["q_norm"] = {"scale": jnp.ones((Dh,), dtype)}
         p["k_norm"] = {"scale": jnp.ones((Dh,), dtype)}
@@ -165,9 +173,10 @@ def _maybe_qk_norm(cfg, params, q, k):
 def attention_qkv(params, cfg, x, cos, sin, *, rope: bool = True):
     """x (B,S,d) -> q (B,S,H,Dh), k,v (B,S,KVH,Dh), rope+qknorm applied."""
     dt = cfg.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    tile = getattr(cfg, "linear_tile", None)
+    q = qkv_proj(params["wq"], x, dt, cfg.num_heads, cfg.head_dim, tile=tile)
+    k = qkv_proj(params["wk"], x, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+    v = qkv_proj(params["wv"], x, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
     q, k = _maybe_qk_norm(cfg, params, q, k)
     if rope:
         q = apply_rope(q, cos, sin)
@@ -175,20 +184,27 @@ def attention_qkv(params, cfg, x, cos, sin, *, rope: bool = True):
     return q, k, v
 
 
+def attention_out(params, cfg, o):
+    """o (..., H, Dh) -> (..., d_model) through wo (dense or ket)."""
+    return out_proj(params["wo"], o, cfg.dtype, cfg.d_model,
+                    tile=getattr(cfg, "linear_tile", None))
+
+
 def attention_block(params, cfg, x, cos, sin, *, local: bool = False,
                     causal: bool = True, chunk: int = 1024):
     q, k, v = attention_qkv(params, cfg, x, cos, sin)
     window = cfg.local_window if local else 0
     out = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk)
-    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.dtype))
+    return attention_out(params, cfg, out)
 
 
 def cross_attention_block(params, cfg, x, enc_k, enc_v, chunk: int = 1024):
     """Decoder cross-attention: q from x, k/v precomputed from encoder."""
     dt = cfg.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q = qkv_proj(params["wq"], x, dt, cfg.num_heads, cfg.head_dim,
+                 tile=getattr(cfg, "linear_tile", None))
     out = flash_attention(q, enc_k, enc_v, causal=False, chunk=chunk)
-    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return attention_out(params, cfg, out)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,13 @@
-"""Shared building blocks: norms, rotary embeddings, initializers."""
+"""Shared building blocks: norms, rotary embeddings, initializers, and the
+ket-aware linear-projection helpers.
+
+A *ket linear* stores a (d_in, d_out) weight as word2ketXS-style Kronecker
+factor stacks ({"factors": [(rank, q_j, t_j), ...]}, core/ketops) instead of
+a dense array, and applies it with the factor chain matmul. The ``proj``
+helpers below accept either representation so every attention/FFN/decode
+call site stays a one-liner and a config flip (``linear_kind="ket"``)
+swaps the storage model-wide.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +16,9 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["rmsnorm", "init_rmsnorm", "dense_init", "apply_rope", "rope_angles", "softcap"]
+__all__ = ["rmsnorm", "init_rmsnorm", "dense_init", "apply_rope", "rope_angles",
+           "softcap", "linear_init", "linear_apply", "qkv_proj", "out_proj",
+           "is_ket_param"]
 
 
 def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
@@ -25,6 +36,55 @@ def dense_init(key, shape, dtype=jnp.float32, fan_in: int | None = None):
     """Truncated-normal-ish init scaled by 1/sqrt(fan_in)."""
     fi = fan_in if fan_in is not None else shape[0]
     return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fi))
+
+
+def is_ket_param(p) -> bool:
+    """True when a projection parameter is a ket factor dict, not an array."""
+    return isinstance(p, dict)
+
+
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, *,
+                kind: str = "dense", order: int = 2, rank: int = 8):
+    """A (d_in, d_out) projection: dense array or ket Kronecker factors.
+
+    The ket init targets the same O(1/sqrt(d_in)) effective-entry scale as
+    ``dense_init`` (core/ketops._leaf_scale).
+    """
+    if kind == "dense":
+        return dense_init(key, (d_in, d_out), dtype, fan_in=d_in)
+    if kind != "ket":
+        raise ValueError(f"unknown linear kind {kind!r}")
+    from repro.core import ketops
+    spec = ketops.KronSpec(in_dim=d_in, out_dim=d_out, order=order, rank=rank,
+                           use_layernorm=False, dtype=dtype)
+    return ketops.init(key, spec)
+
+
+def linear_apply(p, x: jax.Array, dtype, d_out: int, *, tile=None) -> jax.Array:
+    """x (..., d_in) @ p -> (..., d_out); p is a 2-D dense array or ket dict."""
+    if is_ket_param(p):
+        from repro.core import ketops
+        return ketops.apply_matrix_factors(
+            p["factors"], x.astype(dtype), d_out, tile=tile)
+    return jnp.einsum("...i,io->...o", x, p.astype(dtype))
+
+
+def qkv_proj(p, x: jax.Array, dtype, n_heads: int, head_dim: int, *, tile=None) -> jax.Array:
+    """x (..., d) -> (..., n_heads, head_dim). Dense p: (d, n_heads, head_dim);
+    ket p: factors covering d -> n_heads·head_dim."""
+    if is_ket_param(p):
+        y = linear_apply(p, x, dtype, n_heads * head_dim, tile=tile)
+        return y.reshape(*x.shape[:-1], n_heads, head_dim)
+    return jnp.einsum("...d,dhk->...hk", x, p.astype(dtype))
+
+
+def out_proj(p, o: jax.Array, dtype, d_model: int, *, tile=None) -> jax.Array:
+    """o (..., H, Dh) -> (..., d_model). Dense p: (H, Dh, d); ket p: factors
+    covering H·Dh -> d."""
+    if is_ket_param(p):
+        o2 = o.reshape(*o.shape[:-2], o.shape[-2] * o.shape[-1])
+        return linear_apply(p, o2, dtype, d_model, tile=tile)
+    return jnp.einsum("...hk,hkd->...d", o, p.astype(dtype))
 
 
 def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:

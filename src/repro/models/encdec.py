@@ -9,7 +9,6 @@ every other arch. Absolute sinusoidal positions (whisper convention), no RoPE.
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.core.embedding import embed_lookup, init_embedding
 from repro.core.logits import head_ce_loss, head_logits, init_head
 from repro.models import attention as A
 from repro.models import ffn as F
-from repro.models.common import init_rmsnorm, rmsnorm
+from repro.models.common import init_rmsnorm, out_proj, qkv_proj, rmsnorm
 
 __all__ = ["init_encdec", "encdec_loss", "encdec_init_cache", "encdec_serve_step",
            "encode", "sinusoid"]
@@ -33,13 +32,18 @@ def sinusoid(S: int, d: int, dtype) -> jax.Array:
     return pe.astype(dtype)
 
 
+def _lin(cfg):
+    return dict(kind=cfg.linear_kind, order=cfg.linear_order, rank=cfg.linear_rank)
+
+
 def _init_enc_layer(key, cfg):
     ks = jax.random.split(key, 2)
     return {
         "ln1": init_rmsnorm(cfg.d_model, cfg.param_dtype),
         "attn": A.init_attention(ks[0], cfg),
         "ln2": init_rmsnorm(cfg.d_model, cfg.param_dtype),
-        "ffn": F.init_ffn(ks[1], cfg.d_model, cfg.d_ff, "gelu", cfg.param_dtype),
+        "ffn": F.init_ffn(ks[1], cfg.d_model, cfg.d_ff, "gelu", cfg.param_dtype,
+                          **_lin(cfg)),
     }
 
 
@@ -51,7 +55,8 @@ def _init_dec_layer(key, cfg):
         "ln_x": init_rmsnorm(cfg.d_model, cfg.param_dtype),
         "cross_attn": A.init_attention(ks[1], cfg),
         "ln2": init_rmsnorm(cfg.d_model, cfg.param_dtype),
-        "ffn": F.init_ffn(ks[2], cfg.d_model, cfg.d_ff, "gelu", cfg.param_dtype),
+        "ffn": F.init_ffn(ks[2], cfg.d_model, cfg.d_ff, "gelu", cfg.param_dtype,
+                          **_lin(cfg)),
     }
 
 
@@ -81,8 +86,9 @@ def encode(params, cfg, frames):
         h = rmsnorm(p["ln1"], x)
         q, k, v = A.attention_qkv(p["attn"], cfg, h, None, None, rope=False)
         o = A.flash_attention(q, k, v, causal=False)
-        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(cfg.dtype))
-        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "gelu", cfg.dtype)
+        x = x + A.attention_out(p["attn"], cfg, o)
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "gelu", cfg.dtype,
+                      dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
         return x, None
 
     x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
@@ -94,17 +100,21 @@ def _dec_block(p, cfg, x, enc_kv=None, self_kv=None):
     h = rmsnorm(p["ln1"], x)
     q, k, v = A.attention_qkv(p["self_attn"], cfg, h, None, None, rope=False)
     o = A.flash_attention(q, k, v, causal=True)
-    x = x + jnp.einsum("bshk,hkd->bsd", o, p["self_attn"]["wo"].astype(cfg.dtype))
+    x = x + A.attention_out(p["self_attn"], cfg, o)
     hx = rmsnorm(p["ln_x"], x)
     x = x + A.cross_attention_block(p["cross_attn"], cfg, hx, *enc_kv)
-    x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "gelu", cfg.dtype)
+    x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "gelu", cfg.dtype,
+                  dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
     return x, (k, v)
 
 
 def _cross_kv(p, cfg, enc_states):
     dt = cfg.dtype
-    k = jnp.einsum("bsd,dhk->bshk", enc_states, p["cross_attn"]["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", enc_states, p["cross_attn"]["wv"].astype(dt))
+    tile = getattr(cfg, "linear_tile", None)
+    k = qkv_proj(p["cross_attn"]["wk"], enc_states, dt, cfg.num_kv_heads,
+                 cfg.head_dim, tile=tile)
+    v = qkv_proj(p["cross_attn"]["wv"], enc_states, dt, cfg.num_kv_heads,
+                 cfg.head_dim, tile=tile)
     return k, v
 
 
@@ -167,19 +177,21 @@ def encdec_serve_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
     def body(x, xs):
         p, sk, sv, ck, cv = xs
         h = rmsnorm(p["ln1"], x)
-        q = jnp.einsum("bd,dhk->bhk", h, p["self_attn"]["wq"].astype(dt))
-        k = jnp.einsum("bd,dhk->bhk", h, p["self_attn"]["wk"].astype(dt))
-        v = jnp.einsum("bd,dhk->bhk", h, p["self_attn"]["wv"].astype(dt))
+        tile = getattr(cfg, "linear_tile", None)
+        q = qkv_proj(p["self_attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
+        k = qkv_proj(p["self_attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+        v = qkv_proj(p["self_attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
         sk = jax.lax.dynamic_update_slice_in_dim(sk, k[:, None], step, axis=1)
         sv = jax.lax.dynamic_update_slice_in_dim(sv, v[:, None], step, axis=1)
         B = q.shape[0]
         o = A.decode_attention(q, sk, sv, jnp.full((B,), step + 1))
-        x = x + jnp.einsum("bhk,hkd->bd", o, p["self_attn"]["wo"].astype(dt))
+        x = x + out_proj(p["self_attn"]["wo"], o, dt, cfg.d_model, tile=tile)
         hx = rmsnorm(p["ln_x"], x)
-        qx = jnp.einsum("bd,dhk->bhk", hx, p["cross_attn"]["wq"].astype(dt))
+        qx = qkv_proj(p["cross_attn"]["wq"], hx, dt, cfg.num_heads, cfg.head_dim, tile=tile)
         ox = A.decode_attention(qx, ck, cv, jnp.full((B,), ck.shape[1]))
-        x = x + jnp.einsum("bhk,hkd->bd", ox, p["cross_attn"]["wo"].astype(dt))
-        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "gelu", dt)[:, 0]
+        x = x + out_proj(p["cross_attn"]["wo"], ox, dt, cfg.d_model, tile=tile)
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "gelu", dt,
+                      dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
         return x, (sk, sv)
 
     x, (new_sk, new_sv) = jax.lax.scan(

@@ -1,35 +1,51 @@
-"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU) MLPs."""
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU) MLPs.
+
+Projections go through the ket-aware ``linear_apply`` helper, so
+``linear_kind="ket"`` stores wi/wg/wo as Kronecker factor stacks
+(core/ketops) instead of dense (d_model, d_ff) matrices.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import dense_init
+from repro.models.common import is_ket_param, linear_apply, linear_init
 
 
-def init_ffn(key, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32) -> dict:
+def init_ffn(key, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32,
+             *, kind: str = "dense", order: int = 2, rank: int = 8) -> dict:
     ks = jax.random.split(key, 3)
-    if mlp_type in ("swiglu", "geglu"):
-        return {
-            "wi": dense_init(ks[0], (d_model, d_ff), dtype, fan_in=d_model),
-            "wg": dense_init(ks[1], (d_model, d_ff), dtype, fan_in=d_model),
-            "wo": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
-        }
-    return {
-        "wi": dense_init(ks[0], (d_model, d_ff), dtype, fan_in=d_model),
-        "wo": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    kw = dict(kind=kind, order=order, rank=rank)
+    p = {
+        "wi": linear_init(ks[0], d_model, d_ff, dtype, **kw),
+        "wo": linear_init(ks[2], d_ff, d_model, dtype, **kw),
     }
+    if mlp_type in ("swiglu", "geglu"):
+        p["wg"] = linear_init(ks[1], d_model, d_ff, dtype, **kw)
+    return p
 
 
-def ffn(params: dict, x: jax.Array, mlp_type: str, dtype) -> jax.Array:
-    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dtype))
+def _dims(params: dict, dims) -> tuple[int, int]:
+    if dims is not None:
+        return dims
+    if is_ket_param(params["wi"]):
+        raise ValueError("ket FFN needs explicit dims=(d_model, d_ff)")
+    return params["wi"].shape[0], params["wi"].shape[1]
+
+
+def ffn(params: dict, x: jax.Array, mlp_type: str, dtype, dims=None,
+        tile=None) -> jax.Array:
+    """x (..., d_model) -> (..., d_model). ``dims=(d_model, d_ff)`` is
+    required for ket params (factor products overcover the logical dims)."""
+    d_model, d_ff = _dims(params, dims)
+    h = linear_apply(params["wi"], x, dtype, d_ff, tile=tile)
     if mlp_type == "swiglu":
-        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dtype))
+        g = linear_apply(params["wg"], x, dtype, d_ff, tile=tile)
         h = jax.nn.silu(g) * h
     elif mlp_type == "geglu":
-        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dtype))
+        g = linear_apply(params["wg"], x, dtype, d_ff, tile=tile)
         h = jax.nn.gelu(g) * h
     else:
         h = jax.nn.gelu(h)
-    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dtype))
+    return linear_apply(params["wo"], h, dtype, d_model, tile=tile)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LM_SHAPES, ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import encdec as ED
 from repro.models import transformer as T
 from repro.serve import decode as D

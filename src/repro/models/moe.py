@@ -18,7 +18,6 @@ ordinary tensor parallelism over the model axis.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -13,10 +13,7 @@ Three modes share the block definitions:
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,10 +38,12 @@ KINDS_WITH_FFN = {"attn", "local_attn", "rglru"}
 def init_layer(key, cfg: ModelConfig, kind: str) -> dict:
     ks = jax.random.split(key, 4)
     p: dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    lin = dict(kind=cfg.linear_kind, order=cfg.linear_order, rank=cfg.linear_rank)
     if kind in ("attn", "local_attn"):
         p["attn"] = A.init_attention(ks[0], cfg)
         p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
-        p["ffn"] = F.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.param_dtype)
+        p["ffn"] = F.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                              cfg.param_dtype, **lin)
     elif kind == "moe_attn":
         p["attn"] = A.init_mla(ks[0], cfg) if cfg.mla else A.init_attention(ks[0], cfg)
         p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
@@ -54,7 +53,8 @@ def init_layer(key, cfg: ModelConfig, kind: str) -> dict:
     elif kind == "rglru":
         p["rec"] = R.init_rglru(ks[0], cfg)
         p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
-        p["ffn"] = F.init_ffn(ks[1], cfg.d_model, cfg.d_ff, "geglu", cfg.param_dtype)
+        p["ffn"] = F.init_ffn(ks[1], cfg.d_model, cfg.d_ff, "geglu",
+                              cfg.param_dtype, **lin)
     else:
         raise ValueError(kind)
     return p
@@ -102,8 +102,9 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, cos, sin, *, want_cache: bool
         q, k, v = A.attention_qkv(p["attn"], cfg, h, cos, sin)
         window = cfg.local_window if kind == "local_attn" else 0
         o = A.flash_attention(q, k, v, causal=True, window=window, chunk=attn_chunk)
-        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(cfg.dtype))
-        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), cfg.mlp_type, cfg.dtype)
+        x = x + A.attention_out(p["attn"], cfg, o)
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), cfg.mlp_type, cfg.dtype,
+                      dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
         if want_cache:
             if kind == "local_attn":  # ring buffer: last `window` positions
                 W = min(cfg.local_window, k.shape[1])
@@ -123,7 +124,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, cos, sin, *, want_cache: bool
         else:
             q, k, v = A.attention_qkv(p["attn"], cfg, h, cos, sin)
             o = A.flash_attention(q, k, v, causal=True, chunk=attn_chunk)
-            o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(cfg.dtype))
+            o = A.attention_out(p["attn"], cfg, o)
             if want_cache:
                 cache = {"k": k, "v": v}
         x = x + o
@@ -139,7 +140,8 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, cos, sin, *, want_cache: bool
         x = x + R.rglru_block(p["rec"], cfg, h, scan_chunk=scan_chunk)
         if want_cache:
             cache = _rglru_prefill_cache(p["rec"], cfg, h)
-        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "geglu", cfg.dtype)
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "geglu", cfg.dtype,
+                      dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
     else:
         raise ValueError(kind)
     return x, aux, cache
@@ -238,7 +240,8 @@ def forward(params, cfg: ModelConfig, tokens, *, extra_prefix=None, want_cache=F
     return x, auxs, caches
 
 
-def _head_params(params, cfg):
+def head_params(params, cfg):
+    """Head parameter subtree (the embedding table when weights are tied)."""
     if getattr(cfg, "tie_embeddings", False):
         return params["embed"]
     return params["head"]
@@ -303,11 +306,11 @@ def lm_loss(params, cfg: ModelConfig, batch: dict, *, scan_chunk: int | None = N
         x = x[:, cfg.vision_prefix:]
     hcfg = head_for(cfg)
     x2, y, m = constrain_ce_inputs(cfg, x, batch["labels"], batch.get("label_mask"))
-    ce = head_ce_loss(hcfg, _head_params(params, cfg), x2, y, m)
+    ce = head_ce_loss(hcfg, head_params(params, cfg), x2, y, m)
     loss = ce + 0.01 * aux
     return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
 
 
 def lm_logits_last(params, cfg: ModelConfig, x_last: jax.Array) -> jax.Array:
     """x_last (B, d) -> (B, vocab) full logits (decode path)."""
-    return head_logits(head_for(cfg), _head_params(params, cfg), x_last)
+    return head_logits(head_for(cfg), head_params(params, cfg), x_last)

@@ -8,8 +8,7 @@ including the optional ZeRO-1 data-axis sharding of the moments.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

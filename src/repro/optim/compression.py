@@ -17,7 +17,6 @@ preservation is tested in tests/test_compression.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

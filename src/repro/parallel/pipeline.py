@@ -15,7 +15,6 @@ blocks). Bubble fraction = (S-1)/(M+S-1).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ Stacked layer groups ("groups/[i]/...") get a leading None for the stack dim.
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 import jax
 import numpy as np
@@ -60,6 +59,13 @@ def _rules(cfg: ModelConfig, mesh: Mesh):
     WO = P("model", None, None) if heads_ok else P()
     FF_IN = P(None, "model") if ff_ok else P()
     FF_OUT = P("model", None) if ff_ok else P()
+    # ket linear factor stacks (rank, q_j, t_j): replicated like the
+    # embedding factors (they are KBs), or rank-parallel over "model" when
+    # opted in — the chain matmul is batched over rank, so rank sharding
+    # turns the final rank sum into one small all-reduce.
+    ket_rank_ok = getattr(cfg, "ket_shard_rank", False) and \
+        getattr(cfg, "linear_rank", 1) % tp == 0
+    KET = P("model", None, None) if ket_rank_ok else P()
 
     return [
         # embeddings / heads (the paper's technique: factors replicated)
@@ -67,6 +73,8 @@ def _rules(cfg: ModelConfig, mesh: Mesh):
         (r"embed/(factors|leaves)/.*", P()),
         (r"head/unembed$", P("model", None) if vocab_ok else P()),
         (r"head/factors/.*", P()),
+        # ket-ified linear layers (attention qkv/out + FFN wi/wg/wo)
+        (r".*(attn/w[qkvo]|ffn/w[igo])/factors/.*", KET),
         # attention
         (r".*attn/wq$", H),
         (r".*attn/w[kv]$", KV),

@@ -14,9 +14,7 @@ like the forward pass.
 
 from __future__ import annotations
 
-import math
 from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +27,8 @@ from repro.models import ffn as F
 from repro.models import moe as M
 from repro.models import rglru as R
 from repro.models import ssm as S
-from repro.models.common import rmsnorm, rope_angles
-from repro.models.transformer import _head_params, lm_logits_last
+from repro.models.common import out_proj, qkv_proj, rmsnorm, rope_angles
+from repro.models.transformer import lm_logits_last
 from repro.parallel import meshctx
 
 NEG = jnp.float32(-1e30)
@@ -232,10 +230,11 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r
     """x (B, d) one token at per-slot positions step (B,); returns (x, cache)."""
     dt = cfg.dtype
     h = rmsnorm(p["ln1"], x)
+    tile = getattr(cfg, "linear_tile", None)
     if kind in ("attn", "local_attn"):
-        q = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wq"].astype(dt))
-        k = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wk"].astype(dt))
-        v = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wv"].astype(dt))
+        q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
+        k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+        v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
         if cfg.qk_norm:
             q = rmsnorm(p["attn"]["q_norm"], q)
             k = rmsnorm(p["attn"]["k_norm"], k)
@@ -249,8 +248,9 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r
             slot = step
             valid = step + 1
         o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"], slot, valid)
-        x = x + jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"].astype(dt))
-        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], cfg.mlp_type, dt)[:, 0]
+        x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], cfg.mlp_type, dt,
+                      dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
         return x, {"k": ck, "v": cv}
     if kind == "moe_attn":
         if cfg.mla:
@@ -258,13 +258,13 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r
                 cfg, p["attn"], h, cache["c"], cache["krope"], step, step + 1, cos_r, sin_r)
             new_cache = {"c": cc, "krope": ckr}
         else:
-            q = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wq"].astype(dt))
-            k = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wk"].astype(dt))
-            v = jnp.einsum("bd,dhk->bhk", h, p["attn"]["wv"].astype(dt))
+            q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
+            k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+            v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
             q = A.apply_rope(q[:, None], cos, sin)[:, 0]
             k = A.apply_rope(k[:, None], cos, sin)[:, 0]
             o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"], step, step + 1)
-            o = jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"].astype(dt))
+            o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
             new_cache = {"k": ck, "v": cv}
         x = x + o
         moe_out, _ = M.moe_block(p["moe"], cfg, rmsnorm(p["ln2"], x)[:, None])
@@ -275,7 +275,8 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r
     if kind == "rglru":
         out, new_cache = R.rglru_decode_step(p["rec"], cfg, h, cache)
         x = x + out
-        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "geglu", dt)[:, 0]
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "geglu", dt,
+                      dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
         return x, new_cache
     raise ValueError(kind)
 

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import signal
 import time
-from typing import Optional
 
 
 class PreemptionHandler:

@@ -9,8 +9,6 @@ depth (collective-frequency optimization).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +45,18 @@ def pin_kernel_blocks(cfg: ModelConfig) -> ModelConfig:
             updates["head_block_b"] = bc.block_b
         if cfg.head_vocab_tile is None:
             updates["head_vocab_tile"] = bc.t1_block
+    if cfg.linear_kind == "ket" and cfg.linear_tile is None:
+        # Tile the ket linears' chain apply like the CE head tiles its t1
+        # axis. Resolve for the widest projection (d_model -> d_ff, or
+        # -> H·Dh when the arch has no dense FFN); apply_matrix clamps the
+        # tile to a divisor of each layer's own t_1.
+        from repro.core import kron as K
+        d_out = cfg.d_ff if cfg.d_ff else cfg.num_heads * cfg.head_dim
+        bc = autotune.get_block_config(
+            "kron_logits", cfg.linear_rank,
+            K.choose_factorization(cfg.d_model, cfg.linear_order),
+            K.choose_factorization(d_out, cfg.linear_order))
+        updates["linear_tile"] = bc.t1_block
     return dataclasses.replace(cfg, **updates) if updates else cfg
 
 

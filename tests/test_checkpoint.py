@@ -47,9 +47,9 @@ def test_resume_continues_training(tmp_path):
     tcfg = TrainConfig(optimizer=AdamWConfig(lr=5e-3))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
     # run 6 steps, checkpoint every 3
-    out1 = train_loop(cfg, tcfg, dcfg,
-                      LoopConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=3,
-                                 log_every=100))
+    train_loop(cfg, tcfg, dcfg,
+               LoopConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=3,
+                          log_every=100))
     # resume to 10
     out2 = train_loop(cfg, tcfg, dcfg,
                       LoopConfig(total_steps=10, ckpt_dir=str(tmp_path), ckpt_every=3,

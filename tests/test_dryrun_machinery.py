@@ -7,7 +7,7 @@ import subprocess
 import sys
 import textwrap
 
-from repro.configs.base import LM_SHAPES, ShapeSpec
+from repro.configs.base import LM_SHAPES
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -9,7 +9,6 @@ from repro.kernels.kron_gather.ops import kron_gather
 from repro.kernels.kron_gather.kron_gather import kron_gather_pallas
 from repro.kernels.kron_gather.ref import kron_gather_ref
 from repro.kernels.kron_logits.ops import fused_kron_ce
-from repro.kernels.kron_logits.kron_logits import kron_ce_pallas
 from repro.kernels.kron_logits.ref import kron_ce_naive, kron_ce_tiled
 
 

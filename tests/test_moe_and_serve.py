@@ -67,7 +67,6 @@ def test_moe_drop_fraction_reported():
 @pytest.mark.parametrize("arch", ["glm4-9b", "recurrentgemma-9b", "falcon-mamba-7b"])
 def test_stepwise_decode_matches_full_forward(arch):
     from repro.models.transformer import forward, lm_logits_last
-    from repro.models.common import rmsnorm
 
     cfg = get_smoke(arch, dtype=jnp.float32)
     params = MD.init_params(jax.random.PRNGKey(0), cfg)

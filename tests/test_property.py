@@ -2,7 +2,6 @@
 the paper relies on (eq. 1, eq. 2, §3.2 lazy indexing) and system invariants
 (CE streaming == naive CE for arbitrary shapes/tilings)."""
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke
@@ -19,7 +18,6 @@ def setup():
 
 def _direct_greedy(cfg, params, prompt, n_new):
     cache = MD.init_cache(cfg, 1, 64)
-    toks = None
     for t in prompt:
         logits, cache = MD.serve_step_fn(params, cfg, cache,
                                          jnp.array([t], jnp.int32))
