@@ -9,15 +9,16 @@ Vocab sizes are derived from the paper's own "Regular" rows:
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
 
 from repro.core.embedding import EmbeddingConfig, embedding_num_params
 
-KET_LINEAR_JSON = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_ket_linears.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KET_LINEAR_JSON = os.path.join(_ROOT, "BENCH_ket_linears.json")
+QUANT_KET_JSON = os.path.join(_ROOT, "BENCH_quant_ket.json")
 
 
 def _row(name, cfg, regular_params):
@@ -175,7 +176,123 @@ def ket_linear_table(order: int = 2, rank: int = 8):
     return rows
 
 
-def run(report, json_path=None):
+def quant_ket_table(*, ids_per_timing: int = 4096, err_sample: int = 1024,
+                    timing_reps: int = 5):
+    """Low-bit ket factor storage (core/quant): bits × order × rank →
+    stored bytes, max-abs error vs the fp32 materialization, and gather
+    latency (fp32 path vs dequant-on-read path, interleaved medians).
+
+    Targets cover both serving surfaces of the paper's operator: word2ketXS
+    embeddings at the paper's GIGAWORD shapes (LayerNorm on) and ket linear
+    projections at LM-layer shapes (pure operators, so the analytic
+    ``materialize_error_bound`` applies and is recorded next to the
+    measured error).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ketops
+    from repro.core import quant as Q
+
+    targets = [
+        # (name, spec) — embeddings: paper Table 1 rows; linears: LM shapes
+        ("embed_gigaword_2-10", ketops.KronSpec(
+            in_dim=400, out_dim=30428, order=2, rank=10,
+            q_dims=(20, 20), t_dims=(175, 175))),
+        ("embed_gigaword_4-1", ketops.KronSpec(
+            in_dim=256, out_dim=30428, order=4, rank=1,
+            q_dims=(4,) * 4, t_dims=(14,) * 4)),
+        ("linear_ffn_2048x8192_2-8", ketops.KronSpec(
+            in_dim=2048, out_dim=8192, order=2, rank=8, use_layernorm=False)),
+        ("linear_qkv_2048x2048_4-8", ketops.KronSpec(
+            in_dim=2048, out_dim=2048, order=4, rank=8, use_layernorm=False)),
+    ]
+
+    def median_us(fn, args_a, args_b):
+        # interleave the two variants and take medians — back-to-back blocks
+        # drift ~2x on shared CPUs (see benchmarks/timing.py)
+        ta, tb = [], []
+        for _ in range(timing_reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args_a))
+            ta.append((time.perf_counter() - t0) * 1e6)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args_b))
+            tb.append((time.perf_counter() - t0) * 1e6)
+        return float(np.median(ta)), float(np.median(tb))
+
+    rows = []
+    for name, spec in targets:
+        params = ketops.init(jax.random.PRNGKey(0), spec)
+        bytes_fp32 = ketops.num_bytes(spec)
+        ids = jax.random.randint(jax.random.PRNGKey(1), (err_sample,),
+                                 0, spec.out_dim)
+        ref_cols = ketops.apply_vector(spec, params, ids)
+        ref_max = float(jnp.max(jnp.abs(ref_cols)))
+        tids = jax.random.randint(jax.random.PRNGKey(2), (ids_per_timing,),
+                                  0, spec.out_dim)
+
+        for mode in ("int8", "fp8"):
+            qspec = dataclasses.replace(spec, quant=mode)
+            qparams = Q.quantize_params(params, mode)
+
+            got = ketops.apply_vector(qspec, qparams, ids)
+            err = float(jnp.max(jnp.abs(got - ref_cols)))
+            bound = (Q.materialize_error_bound(params, mode)
+                     if not spec.use_layernorm else None)
+
+            fp32_fn = jax.jit(lambda p, i, s=spec: ketops.apply_vector(s, p, i))
+            q_fn = jax.jit(lambda p, i, s=qspec: ketops.apply_vector(s, p, i))
+            jax.block_until_ready(fp32_fn(params, tids))  # compile outside
+            jax.block_until_ready(q_fn(qparams, tids))    # the timed loop
+            us_fp32, us_q = median_us(
+                lambda p, i, which: (fp32_fn if which == 0 else q_fn)(p, i),
+                (params, tids, 0), (qparams, tids, 1))
+
+            rows.append({
+                "target": name, "quant": mode,
+                "order": spec.order, "rank": spec.rank,
+                "q_dims": list(spec.resolved_q()),
+                "t_dims": list(spec.resolved_t()),
+                "layernorm": spec.use_layernorm,
+                "params": ketops.num_params(spec),
+                "bytes_fp32": bytes_fp32,
+                "bytes_quant": ketops.num_bytes(qspec),
+                "saving_rate": bytes_fp32 / ketops.num_bytes(qspec),
+                "max_abs_err": err,
+                "rel_err": err / ref_max,
+                "err_bound": bound,
+                "gather_us_fp32": us_fp32,
+                "gather_us_quant": us_q,
+            })
+    return rows
+
+
+def quant_arch_table():
+    """Per-assigned-arch embed+head stored bytes across quant modes — the
+    serving-side space accounting (regular fp32 table vs ket fp32 vs ket
+    int8/fp8), via the quant-aware byte counters."""
+    from repro.configs import get_config
+    from repro.configs.base import embedding_for, head_for
+    from repro.core.embedding import embedding_num_bytes
+    from repro.core.logits import head_num_bytes
+
+    rows = []
+    for arch in ("qwen3-1.7b", "granite-20b", "glm4-9b"):
+        base = get_config(arch)
+        regular = 2 * base.vocab_size * base.d_model * 4  # fp32 table + head
+        row = {"arch": arch, "regular_bytes": regular}
+        for mode in ("none", "int8", "fp8"):
+            cfg = dataclasses.replace(base, quant=mode)
+            b = embedding_num_bytes(embedding_for(cfg)) + head_num_bytes(head_for(cfg))
+            row[f"ket_{mode}_bytes"] = b
+            row[f"ket_{mode}_saving"] = regular / b
+        rows.append(row)
+    return rows
+
+
+def run(report, json_path=None, quant_json_path=None):
     for fn, cols in [
         (table1_gigaword, ("config", "params", "saving_rate", "paper_params")),
         (table2_iwslt, ("config", "params", "saving_rate", "paper_params")),
@@ -200,4 +317,21 @@ def run(report, json_path=None):
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"ket_linears": ket_rows}, f, indent=2)
+            f.write("\n")
+    if quant_json_path:
+        q_rows = quant_ket_table()
+        for r in q_rows:
+            report(
+                f"quant_ket.{r['target']}.{r['quant']},{r['gather_us_quant']:.1f},"
+                f"bytes={r['bytes_fp32']}->{r['bytes_quant']};"
+                f"saving={r['saving_rate']:.2f}x;err={r['max_abs_err']:.2e};"
+                f"fp32_us={r['gather_us_fp32']:.1f}")
+        arch_rows = quant_arch_table()
+        for r in arch_rows:
+            report(f"quant_arch.{r['arch']},0.0,"
+                   f"regular={r['regular_bytes']};ket={r['ket_none_bytes']};"
+                   f"int8={r['ket_int8_bytes']}({r['ket_int8_saving']:.0f}x);"
+                   f"fp8={r['ket_fp8_bytes']}({r['ket_fp8_saving']:.0f}x)")
+        with open(quant_json_path, "w") as f:
+            json.dump({"quant_ket": q_rows, "quant_arch": arch_rows}, f, indent=2)
             f.write("\n")

@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract). Sections:
   * paper_tables — Tables 1–3 #Params/space-saving, exact reproduction
   * timing — lookup/CE/kernel/train-step microbenches (CPU wall clock)
   * kernels — fwd/bwd split for the fused kron kernels (BENCH_kernels.json)
+  * quant — int8/fp8 ket factor storage: bytes / error / gather latency
+    (BENCH_quant_ket.json)
   * roofline — three-term roofline per dry-run cell (reads results/dryrun)
 
 ``--quick`` runs the CI smoke: paper tables + a small-shape kernel fwd/bwd
@@ -22,7 +24,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("section", nargs="?", default="all",
-                    choices=["all", "timing", "kernels", "ablation", "roofline"])
+                    choices=["all", "timing", "kernels", "ablation", "roofline",
+                             "quant"])
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: paper tables + small-shape kernel fwd/bwd")
     args = ap.parse_args()
@@ -35,9 +38,17 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import paper_tables
-    # --quick (CI smoke) never rewrites checked-in JSON
-    paper_tables.run(report,
-                     json_path=None if args.quick else paper_tables.KET_LINEAR_JSON)
+    # --quick (CI smoke) never rewrites checked-in JSON; the "quant" section
+    # only rewrites its own BENCH_quant_ket.json
+    paper_tables.run(
+        report,
+        json_path=(None if args.quick or args.section == "quant"
+                   else paper_tables.KET_LINEAR_JSON),
+        quant_json_path=(paper_tables.QUANT_KET_JSON
+                         if not args.quick and args.section in ("all", "quant")
+                         else None))
+    if args.section == "quant":
+        return
 
     if args.quick:
         from benchmarks import timing

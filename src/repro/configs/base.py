@@ -99,6 +99,14 @@ class ModelConfig:
     # operator; factors are otherwise replicated like embedding factors)
     ket_shard_rank: bool = False
 
+    # low-bit ket factor storage (serving): "none" | "int8" | "fp8".
+    # Applies to the word2ket(XS) embedding, the kron head, and ket linears;
+    # regular tables / dense projections are untouched. init_params then
+    # emits {"q", "scale"} wire-format factors (core/quant) — a serving
+    # knob: quantized payloads are not differentiable, so train with "none"
+    # and quantize post-training (serve/engine.quantize_params).
+    quant: str = "none"
+
     # numerics / training
     dtype: Any = jnp.bfloat16
     param_dtype: Any = jnp.float32
@@ -152,6 +160,7 @@ def embedding_for(cfg: ModelConfig) -> EmbeddingConfig:
         rank=cfg.embedding_rank,
         use_layernorm=cfg.embedding_layernorm,
         dtype=cfg.param_dtype,
+        quant=cfg.quant,
         use_kernel=cfg.use_kernels,
         block_b=cfg.embedding_block_b,
     )
@@ -166,6 +175,7 @@ def head_for(cfg: ModelConfig) -> HeadConfig:
         rank=cfg.head_rank,
         vocab_tile=cfg.head_vocab_tile,
         dtype=cfg.param_dtype,
+        quant=cfg.quant,
         use_kernel=cfg.use_kernels,
         block_b=cfg.head_block_b,
     )

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.core import ketops
 
-__all__ = ["EmbeddingConfig", "init_embedding", "embed_lookup", "embedding_num_params"]
+__all__ = ["EmbeddingConfig", "init_embedding", "embed_lookup",
+           "embedding_num_params", "embedding_num_bytes"]
 
 _KINDS = ("regular", "word2ket", "word2ketxs")
 
@@ -35,7 +36,7 @@ class EmbeddingConfig(ketops.SpecProps):
         "regular" so dtype/knobs have one home; its storage is then unused).
 
     The constructor accepts the ketops knobs as scalars (order, rank,
-    q_dims, t_dims, use_layernorm, dtype, use_kernel, block_b) and folds
+    q_dims, t_dims, use_layernorm, dtype, quant, use_kernel, block_b) and folds
     them into the spec; pass ``spec=`` directly to share one with other
     consumers (it must agree with vocab_size/embed_dim/kind, and the
     scalar knobs are then ignored).
@@ -57,6 +58,7 @@ class EmbeddingConfig(ketops.SpecProps):
         t_dims: Optional[tuple[int, ...]] = None,
         use_layernorm: bool = True,
         dtype: Any = jnp.float32,
+        quant: str = "none",
         use_kernel: Optional[bool] = None,
         block_b: Optional[int] = None,
         spec: Optional[ketops.KronSpec] = None,
@@ -74,6 +76,7 @@ class EmbeddingConfig(ketops.SpecProps):
                 storage="leaves" if kind == "word2ket" else "factors",
                 use_layernorm=use_layernorm,
                 dtype=dtype,
+                quant=quant,
                 use_kernel=use_kernel,
                 block_b=block_b,
             )
@@ -114,3 +117,10 @@ def embedding_num_params(cfg: EmbeddingConfig) -> int:
     if cfg.kind == "regular":
         return cfg.vocab_size * cfg.embed_dim
     return ketops.num_params(cfg.spec)
+
+
+def embedding_num_bytes(cfg: EmbeddingConfig) -> int:
+    """Stored bytes, quant-aware (payloads at the quant width + scales)."""
+    if cfg.kind == "regular":
+        return cfg.vocab_size * cfg.embed_dim * jnp.dtype(cfg.dtype).itemsize
+    return ketops.num_bytes(cfg.spec)

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kron as K
+from repro.core import quant as Q
 
 __all__ = [
     "KronSpec",
@@ -53,6 +54,7 @@ __all__ = [
     "materialize",
     "materialize_dense",
     "num_params",
+    "num_bytes",
     "factor_shapes",
 ]
 
@@ -74,6 +76,11 @@ class KronSpec:
     use_layernorm: non-affine LayerNorm at the balanced-tree nodes (paper
              §2.3). Must be False for ``apply_matrix`` — LN is per-column,
              so only the lazy column view can express it.
+    quant: "none" | "int8" | "fp8" — low-bit factor storage (core/quant).
+             ``init`` then emits ``{"q", "scale"}`` wire-format tensors and
+             the apply primitives dequantize on read (the kernel path fuses
+             the dequant per block). Serving-only: payloads are not
+             differentiable.
     use_kernel: route ``apply_vector`` through the fused Pallas kernel
              (None = auto: TPU without an ambient multi-device mesh).
     block_b: token-block size for the kernel grid; None = autotuned.
@@ -90,6 +97,7 @@ class KronSpec:
     storage: str = "factors"
     use_layernorm: bool = True
     dtype: Any = jnp.float32
+    quant: str = "none"
     use_kernel: Optional[bool] = None
     block_b: Optional[int] = None
     vocab_tile: Optional[int] = None
@@ -97,6 +105,8 @@ class KronSpec:
     def __post_init__(self):
         if self.storage not in ("factors", "leaves"):
             raise ValueError(f"unknown storage {self.storage!r}")
+        if self.quant not in Q.MODES:
+            raise ValueError(f"unknown quant {self.quant!r} (expected {Q.MODES})")
 
     def resolved_q(self) -> tuple[int, ...]:
         if self.q_dims is not None:
@@ -154,6 +164,10 @@ class SpecProps:
         return self.spec.dtype
 
     @property
+    def quant(self) -> str:
+        return self.spec.quant
+
+    @property
     def use_kernel(self) -> Optional[bool]:
         return self.spec.use_kernel
 
@@ -191,16 +205,31 @@ def init(key: jax.Array, spec: KronSpec) -> dict:
             jax.random.normal(k, (spec.out_dim, spec.rank, qj), spec.dtype) * s
             for k, qj in zip(keys, q)
         ]
-        return {"leaves": leaves}
-    factors = [
-        jax.random.normal(k, shape, spec.dtype) * s
-        for k, shape in zip(keys, factor_shapes(spec))
-    ]
-    return {"factors": factors}
+        params = {"leaves": leaves}
+    else:
+        factors = [
+            jax.random.normal(k, shape, spec.dtype) * s
+            for k, shape in zip(keys, factor_shapes(spec))
+        ]
+        params = {"factors": factors}
+    # same draw as quant="none" then max-abs calibration, so quantizing an
+    # fp init with the same key reproduces init-with-quant exactly
+    return Q.quantize_params(params, spec.quant)
+
+
+def _tensor_shapes(spec: KronSpec) -> list[tuple[int, ...]]:
+    q = spec.resolved_q()
+    if spec.storage == "leaves":
+        return [(spec.out_dim, spec.rank, qj) for qj in q]
+    return factor_shapes(spec)
 
 
 def num_params(spec: KronSpec) -> int:
-    """Trainable parameter count — reproduces the paper's #Params columns."""
+    """Trainable parameter count — reproduces the paper's #Params columns.
+
+    Quantization does not change the count (scales are derived calibration
+    constants, not trainable parameters); see :func:`num_bytes` for storage.
+    """
     q = spec.resolved_q()
     if spec.storage == "leaves":
         # d · r · Σq_j   (paper §2.3; = d·r·n·q for uniform q)
@@ -210,9 +239,33 @@ def num_params(spec: KronSpec) -> int:
     return spec.rank * sum(qj * tj for qj, tj in zip(q, t))
 
 
+def num_bytes(spec: KronSpec) -> int:
+    """Stored bytes of the operator: payloads at the quant width plus the
+    fp32 per-slice scales (the serving-side space accounting)."""
+    return Q.storage_bytes(_tensor_shapes(spec), spec.quant, spec.dtype)
+
+
 # ---------------------------------------------------------------------------
 # apply_vector — lazy column extraction (embedding lookup)
 # ---------------------------------------------------------------------------
+
+def _gather_rows(leaf, ids: jax.Array) -> jax.Array:
+    """Row gather with dequant-on-read: only the touched rows (and their
+    scales) are expanded, never the whole leaf table."""
+    if Q.is_quantized(leaf):
+        return (jnp.take(leaf["q"], ids, axis=0).astype(jnp.float32)
+                * jnp.take(leaf["scale"], ids, axis=0))
+    return jnp.take(leaf, ids, axis=0)
+
+
+def _gather_cols(f, d: jax.Array) -> jax.Array:
+    """Column gather from a (rank, q_j, t_j) factor stack, dequant-on-read
+    (the per-rank scale broadcasts over the gathered columns)."""
+    if Q.is_quantized(f):
+        s = f["scale"].reshape(f["scale"].shape[0], *([1] * (1 + d.ndim)))
+        return jnp.take(f["q"], d, axis=2).astype(jnp.float32) * s
+    return jnp.take(f, d, axis=2)
+
 
 def apply_vector(spec: KronSpec, params: dict, ids: jax.Array) -> jax.Array:
     """ids (...,) int -> columns of F as vectors (..., in_dim).
@@ -221,24 +274,33 @@ def apply_vector(spec: KronSpec, params: dict, ids: jax.Array) -> jax.Array:
     lazy mixed-radix column extraction (paper §3.2) — column i of ⊗_j F_jk
     is ⊗_j col_{i_j}(F_jk). Both run the balanced LayerNorm tree. The
     factors path routes through the fused ``kron_gather`` Pallas kernel
-    when ``spec.use_kernel`` resolves on.
+    when ``spec.use_kernel`` resolves on — including a dequant-fused leg
+    when the params carry the quantized wire format.
     """
     if spec.storage == "leaves":
-        vs = [jnp.take(leaf, ids, axis=0) for leaf in params["leaves"]]  # (..., r, q_j)
+        vs = [_gather_rows(leaf, ids) for leaf in params["leaves"]]  # (..., r, q_j)
         v = K.kron_vectors_tree(vs, use_layernorm=spec.use_layernorm)
         return jnp.sum(v, axis=-2)[..., : spec.in_dim]
 
+    quantized = Q.is_quantized(params["factors"][0])
     from repro.kernels import kernels_enabled
     if kernels_enabled(spec.use_kernel):
-        from repro.kernels.kron_gather.ops import kron_gather
-        flat = kron_gather(params["factors"], ids.reshape(-1), spec.in_dim,
-                           spec.use_layernorm, spec.block_b)
+        if quantized:
+            from repro.kernels.kron_gather.ops import kron_gather_quant
+            flat = kron_gather_quant(
+                [f["q"] for f in params["factors"]],
+                [f["scale"] for f in params["factors"]],
+                ids.reshape(-1), spec.in_dim, spec.use_layernorm, spec.block_b)
+        else:
+            from repro.kernels.kron_gather.ops import kron_gather
+            flat = kron_gather(params["factors"], ids.reshape(-1), spec.in_dim,
+                               spec.use_layernorm, spec.block_b)
         return flat.reshape(*ids.shape, spec.in_dim).astype(spec.dtype)
 
     t = spec.resolved_t()
     digits = K.mixed_radix_digits(ids, t)
     # factor j: (rank, q_j, t_j); gather its i_j-th column -> (..., rank, q_j)
-    vs = [jnp.take(f, d, axis=2) for f, d in zip(params["factors"], digits)]
+    vs = [_gather_cols(f, d) for f, d in zip(params["factors"], digits)]
     vs = [jnp.moveaxis(v, (0, 1), (-2, -1)) for v in vs]
     v = K.kron_vectors_tree(vs, use_layernorm=spec.use_layernorm)  # (..., r, prod q)
     return jnp.sum(v, axis=-2)[..., : spec.in_dim]
@@ -265,9 +327,13 @@ def apply_matrix_factors(
     divisor of t_1): the chain's widest intermediate shrinks from
     ``(B, r, t1, Πq_rest)`` to ``(B, r, tile, Πq_rest)``. Tiles are a
     static Python loop — differentiable, jit-stable.
+
+    Factors may be quantized ``{"q", "scale"}`` dicts — the stacks are KBs,
+    so the chain simply dequantizes them up front (not differentiable).
     """
     from repro.kernels import common as KC
 
+    factors = [Q.as_f32(f) if Q.is_quantized(f) else f for f in factors]
     q_dims = tuple(f.shape[1] for f in factors)
     t_dims = tuple(f.shape[2] for f in factors)
     P = math.prod(q_dims)
@@ -335,7 +401,9 @@ def materialize_dense(spec: KronSpec, params: dict) -> jax.Array:
     Only valid for LN-free "factors" storage. Returns (out_dim, in_dim).
     """
     assert spec.storage == "factors" and not spec.use_layernorm
-    mats = [K.kron_matrix([f[k] for f in params["factors"]])
+    factors = [Q.as_f32(f) if Q.is_quantized(f) else f
+               for f in params["factors"]]
+    mats = [K.kron_matrix([f[k] for f in factors])
             for k in range(spec.rank)]
     F = sum(mats)  # (prod q, prod t)
     return F.T[: spec.out_dim, : spec.in_dim]

@@ -34,6 +34,7 @@ __all__ = [
     "head_logits",
     "head_ce_loss",
     "head_num_params",
+    "head_num_bytes",
     "kron_head_logits",
 ]
 
@@ -65,6 +66,7 @@ class HeadConfig(ketops.SpecProps):
         t_dims: Optional[tuple[int, ...]] = None,
         vocab_tile: Optional[int] = 4,
         dtype: Any = jnp.float32,
+        quant: str = "none",
         use_kernel: Optional[bool] = None,
         block_b: Optional[int] = None,
         spec: Optional[ketops.KronSpec] = None,
@@ -82,6 +84,7 @@ class HeadConfig(ketops.SpecProps):
                 storage="factors",
                 use_layernorm=False,  # the kron head requires a pure operator
                 dtype=dtype,
+                quant=quant,
                 use_kernel=use_kernel,
                 block_b=block_b,
                 vocab_tile=vocab_tile,
@@ -123,6 +126,13 @@ def head_num_params(cfg: HeadConfig) -> int:
     if cfg.kind == "dense":
         return cfg.vocab_size * cfg.embed_dim
     return ketops.num_params(cfg.spec)
+
+
+def head_num_bytes(cfg: HeadConfig) -> int:
+    """Stored bytes, quant-aware (payloads at the quant width + scales)."""
+    if cfg.kind == "dense":
+        return cfg.vocab_size * cfg.embed_dim * jnp.dtype(cfg.dtype).itemsize
+    return ketops.num_bytes(cfg.spec)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +187,11 @@ def head_ce_loss(
     B = x.shape[0]
 
     if cfg.kind == "kron":
+        from repro.core import quant as Q
+        if Q.is_quantized(params["factors"][0]):
+            # quantized head (serving eval): the stacks are KBs — dequant up
+            # front and reuse the fp scan/kernel paths unchanged
+            params = {"factors": [Q.as_f32(f) for f in params["factors"]]}
         from repro.kernels import kernels_enabled
         if kernels_enabled(cfg.use_kernel):
             from repro.kernels.kron_logits.ops import fused_kron_ce

@@ -58,11 +58,28 @@ class BlockConfig:
     t1_block: int = 0  # 0 = not applicable (kron_gather)
 
 
+def dtype_key(dtype_name: str) -> str:
+    """Normalize a factor dtype to its autotune-key class.
+
+    Only quantized payload dtypes (int8 / fp8) key separate table entries —
+    their pinned-factor VMEM footprint shrinks 4x and the winners shift.
+    Every regular float (fp32, bf16, ...) maps to the legacy suffix-free
+    "float32" class so existing measured tables stay valid.
+    """
+    if dtype_name == "int8" or dtype_name.startswith("float8"):
+        return dtype_name
+    return "float32"
+
+
 def table_key(op: str, backend: str, rank: int,
-              q_dims: Sequence[int], t_dims: Sequence[int]) -> str:
+              q_dims: Sequence[int], t_dims: Sequence[int],
+              dtype: str = "float32") -> str:
     q = "x".join(map(str, q_dims))
     t = "x".join(map(str, t_dims))
-    return f"{op}|{backend}|r{rank}|q{q}|t{t}"
+    key = f"{op}|{backend}|r{rank}|q{q}|t{t}"
+    if dtype != "float32":
+        key += f"|{dtype}"
+    return key
 
 
 _table_cache: Optional[dict] = None
@@ -154,10 +171,18 @@ def get_block_config(
     q_dims: Sequence[int],
     t_dims: Sequence[int],
     backend: Optional[str] = None,
+    dtype: str = "float32",
 ) -> BlockConfig:
     backend = backend or jax.default_backend()
-    key = table_key(op, backend, rank, q_dims, t_dims)
-    entry = load_table().get(key)
+    dtype = dtype_key(dtype)
+    key = table_key(op, backend, rank, q_dims, t_dims, dtype)
+    table = load_table()
+    entry = table.get(key)
+    if entry is None and dtype != "float32":
+        # no quantized-shape measurement yet: the fp32 winner for the same
+        # shape beats the heuristic (per-token intermediates are fp32 either
+        # way); a dtype-suffixed entry overrides it when one is measured
+        entry = table.get(table_key(op, backend, rank, q_dims, t_dims))
     if entry is not None:
         return BlockConfig(block_b=int(entry["block_b"]),
                            t1_block=int(entry.get("t1_block", 0)))

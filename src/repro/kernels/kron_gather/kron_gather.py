@@ -41,21 +41,30 @@ from repro.core import kron as K
 from repro.kernels import common as C
 
 
-def _factors_2d(factor_refs, t_dims, rank, q_dims):
-    return [
-        f_ref[...].astype(jnp.float32).transpose(2, 0, 1).reshape(tj, rank * qj)
-        for f_ref, qj, tj in zip(factor_refs, q_dims, t_dims)
-    ]
+def _factors_2d(factor_refs, t_dims, rank, q_dims, scale_refs=None):
+    """Factor refs -> fp32 ``(t_j, rank·q_j)`` views; with ``scale_refs``
+    (quantized wire format) the dequant runs here, in-kernel per block —
+    int8/fp8 payloads never round-trip through HBM as floats."""
+    out = []
+    for j, (f_ref, qj, tj) in enumerate(zip(factor_refs, q_dims, t_dims)):
+        f = f_ref[...].astype(jnp.float32)
+        if scale_refs is not None:
+            f = f * scale_refs[j][...].astype(jnp.float32)  # (r,1,1) broadcast
+        out.append(f.transpose(2, 0, 1).reshape(tj, rank * qj))
+    return out
 
 
-def _fwd_kernel(ids_ref, *refs, t_dims, rank, q_dims, use_layernorm, with_stats):
+def _fwd_kernel(ids_ref, *refs, t_dims, rank, q_dims, use_layernorm, with_stats,
+                quantized=False):
+    n = len(q_dims)
     if with_stats:
-        *factor_refs, out_ref, stats_ref = refs
+        *refs, out_ref, stats_ref = refs
     else:
-        *factor_refs, out_ref = refs
+        *refs, out_ref = refs
+    factor_refs, scale_refs = (refs[:n], refs[n:]) if quantized else (refs, None)
     ids = ids_ref[...]  # (Bblk,) int32
 
-    f2d = _factors_2d(factor_refs, t_dims, rank, q_dims)
+    f2d = _factors_2d(factor_refs, t_dims, rank, q_dims, scale_refs)
     leaves, _ = C.gather_leaves(ids, f2d, t_dims, rank, q_dims)
     root, (_, means, rstds) = C.tree_forward(leaves, use_layernorm)
     out_ref[...] = jnp.sum(root, axis=1).astype(out_ref.dtype)
@@ -122,10 +131,15 @@ def kron_gather_pallas(
     block_b: int = 256,
     interpret: bool = True,
     out_dtype=jnp.float32,
+    scales: Optional[Sequence[jax.Array]] = None,
 ) -> jax.Array:
-    """ids (B,) -> (B, prod q). Caller slices to embed_dim and reshapes."""
+    """ids (B,) -> (B, prod q). Caller slices to embed_dim and reshapes.
+
+    With ``scales`` the factors are quantized payloads (int8/fp8) and the
+    per-rank dequant is fused into the kernel body (serving fast path).
+    """
     out = _gather_call(factors, ids, use_layernorm, block_b, interpret,
-                       out_dtype, with_stats=False)
+                       out_dtype, with_stats=False, scales=scales)
     return out
 
 
@@ -148,7 +162,7 @@ def kron_gather_fwd_pallas(
 
 
 def _gather_call(factors, ids, use_layernorm, block_b, interpret, out_dtype,
-                 *, with_stats):
+                 *, with_stats, scales=None):
     rank = factors[0].shape[0]
     q_dims = tuple(f.shape[1] for f in factors)
     t_dims = tuple(f.shape[2] for f in factors)
@@ -160,6 +174,7 @@ def _gather_call(factors, ids, use_layernorm, block_b, interpret, out_dtype,
     kernel = functools.partial(
         _fwd_kernel, t_dims=t_dims, rank=rank, q_dims=q_dims,
         use_layernorm=use_layernorm, with_stats=with_stats,
+        quantized=scales is not None,
     )
     out_shape = [jax.ShapeDtypeStruct((ids_p.shape[0], P), out_dtype)]
     out_specs = [pl.BlockSpec((block_b, P), lambda i: (i, 0))]
@@ -168,20 +183,25 @@ def _gather_call(factors, ids, use_layernorm, block_b, interpret, out_dtype,
             jax.ShapeDtypeStruct((ids_p.shape[0], 2 * n_nodes, rank), jnp.float32))
         out_specs.append(
             pl.BlockSpec((block_b, 2 * n_nodes, rank), lambda i: (i, 0, 0)))
+    inputs = [ids_p, *factors]
+    in_specs = [
+        pl.BlockSpec((block_b,), lambda i: (i,)),
+        *[
+            pl.BlockSpec(f.shape, lambda i: (0, 0, 0))  # whole factor in VMEM
+            for f in factors
+        ],
+    ]
+    if scales is not None:  # (rank, 1, 1) per factor, pinned like the factors
+        inputs += list(scales)
+        in_specs += [pl.BlockSpec(s.shape, lambda i: (0, 0, 0)) for s in scales]
     outs = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((block_b,), lambda i: (i,)),
-            *[
-                pl.BlockSpec(f.shape, lambda i: (0, 0, 0))  # whole factor in VMEM
-                for f in factors
-            ],
-        ],
+        in_specs=in_specs,
         out_specs=out_specs if with_stats else out_specs[0],
         out_shape=out_shape if with_stats else out_shape[0],
         interpret=interpret,
-    )(ids_p, *factors)
+    )(*inputs)
     if with_stats:
         return outs[0][:B], outs[1][:B]
     return outs[:B]

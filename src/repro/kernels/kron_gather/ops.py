@@ -15,6 +15,11 @@ backward kernel is validated against in tests/test_kernel_grads.py).
 
 ``block_b=None`` (the default) resolves the token-block size from the
 autotune table / heuristic for the factor shapes at trace time.
+
+:func:`kron_gather_quant` is the forward-only dequant-fused leg for
+int8/fp8 wire-format factors (core/quant): payloads + per-rank scales go
+into the kernel, dequant runs in-VMEM per block, and the autotune table is
+keyed by the payload dtype.
 """
 
 from __future__ import annotations
@@ -65,6 +70,7 @@ def _resolve_block_b(factors: Sequence[jax.Array], block_b: Optional[int]) -> in
         factors[0].shape[0],
         tuple(f.shape[1] for f in factors),
         tuple(f.shape[2] for f in factors),
+        dtype=jnp.dtype(factors[0].dtype).name,
     )
     return cfg.block_b
 
@@ -83,6 +89,37 @@ def kron_gather(
         use_layernorm=use_layernorm,
         block_b=_resolve_block_b(factors, block_b),
         interpret=not _on_tpu(),
+    )
+    return out[:, :embed_dim]
+
+
+def kron_gather_quant(
+    factors_q: Sequence[jax.Array],
+    scales: Sequence[jax.Array],
+    ids: jax.Array,
+    embed_dim: int,
+    use_layernorm: bool = True,
+    block_b: Optional[int] = None,
+) -> jax.Array:
+    """Dequant-fused lookup over quantized factor stacks (serving path).
+
+    ``factors_q`` are int8/fp8 payloads ``(rank, q_j, t_j)`` with per-rank
+    ``scales`` ``(rank, 1, 1)``; the dequant happens inside the kernel per
+    block, so the payloads stream at 1 byte/param and the gather stays
+    memory-bound-optimal. Forward-only — quantized payloads are a wire
+    format, not trainable parameters (no VJP is defined).
+
+    ``block_b=None`` resolves from the autotune table under the payload
+    dtype's own key when one is measured, else the fp32 winner for the same
+    shape, else the VMEM heuristic.
+    """
+    out = kron_gather_pallas(
+        list(factors_q),
+        ids,
+        use_layernorm=use_layernorm,
+        block_b=_resolve_block_b(factors_q, block_b),
+        interpret=not _on_tpu(),
+        scales=list(scales),
     )
     return out[:, :embed_dim]
 

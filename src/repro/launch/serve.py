@@ -1,7 +1,7 @@
 """Meshed serving launcher: batched decode with sharded KV caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b --smoke \
-        --batch 8 --new-tokens 32 --mesh 1x1
+        --batch 8 --new-tokens 32 --mesh 1x1 [--quant int8]
 """
 
 from __future__ import annotations
@@ -28,6 +28,8 @@ def main(argv=None):
     p.add_argument("--new-tokens", type=int, default=32)
     p.add_argument("--max-len", type=int, default=128)
     p.add_argument("--mesh", default="1x1")
+    p.add_argument("--quant", default="none", choices=["none", "int8", "fp8"],
+                   help="post-training ket-factor quantization (wire format)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -37,6 +39,9 @@ def main(argv=None):
 
     with meshctx.use_mesh(mesh):
         params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+        if args.quant != "none":
+            from repro.serve.engine import quantize_params
+            params = quantize_params(params, args.quant)
         cache = MD.init_cache(cfg, args.batch, args.max_len)
         shape = ShapeSpec("serve", args.max_len, args.batch, "decode")
         pspec = param_specs(cfg, mesh, jax.eval_shape(lambda: params))

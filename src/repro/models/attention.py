@@ -144,7 +144,8 @@ def init_attention(key, cfg, dtype=None) -> dict:
     d, H, KVH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 4)
     if getattr(cfg, "linear_kind", "dense") == "ket":
-        kw = dict(kind="ket", order=cfg.linear_order, rank=cfg.linear_rank)
+        kw = dict(kind="ket", order=cfg.linear_order, rank=cfg.linear_rank,
+                  quant=getattr(cfg, "quant", "none"))
         p = {
             "wq": linear_init(ks[0], d, H * Dh, dtype, **kw),
             "wk": linear_init(ks[1], d, KVH * Dh, dtype, **kw),

@@ -44,11 +44,13 @@ def is_ket_param(p) -> bool:
 
 
 def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, *,
-                kind: str = "dense", order: int = 2, rank: int = 8):
+                kind: str = "dense", order: int = 2, rank: int = 8,
+                quant: str = "none"):
     """A (d_in, d_out) projection: dense array or ket Kronecker factors.
 
     The ket init targets the same O(1/sqrt(d_in)) effective-entry scale as
-    ``dense_init`` (core/ketops._leaf_scale).
+    ``dense_init`` (core/ketops._leaf_scale). ``quant`` stores the ket
+    factors in the int8/fp8 wire format (serving-only; dense ignores it).
     """
     if kind == "dense":
         return dense_init(key, (d_in, d_out), dtype, fan_in=d_in)
@@ -56,7 +58,7 @@ def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, *,
         raise ValueError(f"unknown linear kind {kind!r}")
     from repro.core import ketops
     spec = ketops.KronSpec(in_dim=d_in, out_dim=d_out, order=order, rank=rank,
-                           use_layernorm=False, dtype=dtype)
+                           use_layernorm=False, dtype=dtype, quant=quant)
     return ketops.init(key, spec)
 
 

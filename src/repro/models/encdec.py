@@ -33,7 +33,8 @@ def sinusoid(S: int, d: int, dtype) -> jax.Array:
 
 
 def _lin(cfg):
-    return dict(kind=cfg.linear_kind, order=cfg.linear_order, rank=cfg.linear_rank)
+    return dict(kind=cfg.linear_kind, order=cfg.linear_order, rank=cfg.linear_rank,
+                quant=cfg.quant)
 
 
 def _init_enc_layer(key, cfg):

@@ -14,9 +14,10 @@ from repro.models.common import is_ket_param, linear_apply, linear_init
 
 
 def init_ffn(key, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32,
-             *, kind: str = "dense", order: int = 2, rank: int = 8) -> dict:
+             *, kind: str = "dense", order: int = 2, rank: int = 8,
+             quant: str = "none") -> dict:
     ks = jax.random.split(key, 3)
-    kw = dict(kind=kind, order=order, rank=rank)
+    kw = dict(kind=kind, order=order, rank=rank, quant=quant)
     p = {
         "wi": linear_init(ks[0], d_model, d_ff, dtype, **kw),
         "wo": linear_init(ks[2], d_ff, d_model, dtype, **kw),

@@ -38,7 +38,8 @@ KINDS_WITH_FFN = {"attn", "local_attn", "rglru"}
 def init_layer(key, cfg: ModelConfig, kind: str) -> dict:
     ks = jax.random.split(key, 4)
     p: dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model, cfg.param_dtype)}
-    lin = dict(kind=cfg.linear_kind, order=cfg.linear_order, rank=cfg.linear_rank)
+    lin = dict(kind=cfg.linear_kind, order=cfg.linear_order, rank=cfg.linear_rank,
+               quant=cfg.quant)
     if kind in ("attn", "local_attn"):
         p["attn"] = A.init_attention(ks[0], cfg)
         p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)

@@ -68,12 +68,17 @@ def _rules(cfg: ModelConfig, mesh: Mesh):
     KET = P("model", None, None) if ket_rank_ok else P()
 
     return [
-        # embeddings / heads (the paper's technique: factors replicated)
+        # embeddings / heads (the paper's technique: factors replicated).
+        # Quantized wire-format factors appear as .../factors/[j]/q plus
+        # .../factors/[j]/scale — both leaves match the same patterns, so a
+        # scale always shards exactly like its payload (replicated here).
         (r"embed/table$", P("model", None) if vocab_ok else P()),
         (r"embed/(factors|leaves)/.*", P()),
         (r"head/unembed$", P("model", None) if vocab_ok else P()),
         (r"head/factors/.*", P()),
-        # ket-ified linear layers (attention qkv/out + FFN wi/wg/wo)
+        # ket-ified linear layers (attention qkv/out + FFN wi/wg/wo); under
+        # ket_shard_rank the (rank, 1, 1) scale splits its rank axis with
+        # the (rank, q_j, t_j) payload, keeping dequant shard-local.
         (r".*(attn/w[qkvo]|ffn/w[igo])/factors/.*", KET),
         # attention
         (r".*attn/wq$", H),

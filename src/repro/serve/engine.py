@@ -9,6 +9,15 @@ kind, since stepwise decode == full forward, see tests/test_moe_and_serve).
 Per-slot state lives in the *batched* cache tensors; admissions only write
 host-side bookkeeping + reset slot columns, so the jitted step function is
 never retraced. EOS or max-tokens retires a slot.
+
+Serving-grade quantization: ``quantize_params`` / ``dequantize_params``
+(re-exported from core/quant) are the post-training calibration roundtrip —
+max-abs-calibrate every ket factor/leaf stack into the int8/fp8 wire format
+(dense arrays untouched), and expand back to floats. The engine accepts
+either representation: the model's apply paths dequantize on read (fused
+in-kernel on the Pallas path), so a quantized checkpoint decodes through
+the identical step function. Construct with ``quant="int8"|"fp8"`` to
+calibrate fp params at admission time.
 """
 
 from __future__ import annotations
@@ -23,9 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.quant import dequantize_params, quantize_params
 from repro.models import model as MD
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "quantize_params", "dequantize_params"]
 
 
 @dataclasses.dataclass
@@ -42,9 +52,12 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 8,
-                 max_len: int = 512, greedy: bool = True, seed: int = 0):
+                 max_len: int = 512, greedy: bool = True, seed: int = 0,
+                 quant: str = "none"):
         self.cfg = cfg
-        self.params = params
+        # post-training calibration: quantize ket factors to the wire format
+        # once at admission; no-op for already-quantized or "none"
+        self.params = quantize_params(params, quant)
         self.B = batch_slots
         self.max_len = max_len
         self.greedy = greedy

@@ -6,6 +6,11 @@ renamed atomically into place; a checkpoint is only valid once its manifest
 exists, so a preemption mid-write can never leave a half-readable state.
 Arrays are saved *unsharded* — restore works on any mesh shape / device count
 (elasticity is tested 1-device -> 2x1-mesh in tests/test_checkpoint.py).
+
+Exotic-dtype leaves (fp8 quantized payloads, bf16) round-trip losslessly:
+``np.savez`` can't represent ml_dtypes extension types, so such leaves are
+bit-cast to a same-width uint view on save and the true dtype name is
+recorded in the manifest (``"dtypes"``) for the view-back on restore.
 """
 
 from __future__ import annotations
@@ -25,13 +30,21 @@ __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointMa
 
 _SEP = "/"
 
+# numpy-native kinds np.savez serializes with dtype intact; anything else
+# (ml_dtypes: fp8 payloads, bf16) is bit-cast to uintN and tagged
+_NATIVE_KINDS = set("biufc")
 
-def _flatten(tree) -> dict[str, np.ndarray]:
-    flat = {}
+
+def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    flat, dtypes = {}, {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_path_str(p) for p in path)
-        flat[key] = np.asarray(jax.device_get(leaf))
-    return flat
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in _NATIVE_KINDS:
+            dtypes[key] = arr.dtype.name
+            arr = arr.view(f"u{arr.dtype.itemsize}")
+        flat[key] = arr
+    return flat, dtypes
 
 
 def _path_str(p) -> str:
@@ -44,11 +57,12 @@ def _path_str(p) -> str:
 
 def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
-    flat = _flatten(tree)
+    flat, dtypes = _flatten(tree)
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-        manifest = {"step": int(step), "keys": sorted(flat), "extra": extra or {}}
+        manifest = {"step": int(step), "keys": sorted(flat), "extra": extra or {},
+                    "dtypes": dtypes}
         with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
             f.write(msgpack.packb(manifest))
         final = os.path.join(directory, f"ckpt_{step:08d}")
@@ -79,6 +93,7 @@ def restore_checkpoint(directory: str, step: int, like_tree) -> tuple[Any, dict]
         manifest = msgpack.unpackb(f.read())
     with np.load(os.path.join(path, "arrays.npz")) as data:
         arrays = {k: data[k] for k in data.files}
+    exotic = manifest.get("dtypes", {})
 
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
     out = []
@@ -87,6 +102,8 @@ def restore_checkpoint(directory: str, step: int, like_tree) -> tuple[Any, dict]
         if key not in arrays:
             raise KeyError(f"checkpoint missing {key}")
         arr = arrays[key]
+        if key in exotic:  # bit-cast back (fp8/bf16 saved as uint views)
+            arr = arr.view(jnp.dtype(exotic[key]))
         val = jnp.asarray(arr, dtype=leaf.dtype)
         if hasattr(leaf, "sharding") and leaf.sharding is not None and hasattr(
                 leaf.sharding, "mesh"):

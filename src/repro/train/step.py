@@ -29,12 +29,17 @@ def pin_kernel_blocks(cfg: ModelConfig) -> ModelConfig:
     train step sees the same static tiles, and a tuning-table reload can
     never retrigger compilation mid-run.
     """
+    from repro.core import quant as Q
     from repro.kernels import autotune
     updates: dict = {}
     if cfg.embedding_kind == "word2ketxs" and cfg.embedding_block_b is None:
         ecfg = embedding_for(cfg)
+        # quantized factors tune under their payload dtype's own table key
+        dt = ("float32" if cfg.quant == "none"
+              else jnp.dtype(Q.payload_dtype(cfg.quant)).name)
         bc = autotune.get_block_config(
-            "kron_gather", ecfg.rank, ecfg.resolved_q(), ecfg.resolved_t())
+            "kron_gather", ecfg.rank, ecfg.resolved_q(), ecfg.resolved_t(),
+            dtype=dt)
         updates["embedding_block_b"] = bc.block_b
     if cfg.head_kind == "kron" and (
             cfg.head_block_b is None or cfg.head_vocab_tile is None):

@@ -1,0 +1,412 @@
+"""Quantized ket factors end-to-end: wire format, error bounds, kernels,
+checkpoints, and the serving differential.
+
+Property layers:
+  * per-tensor: quantize→dequantize idempotence and per-slice scale shape;
+  * per-operator: ``materialize(quantized) − materialize(fp32)`` max-abs
+    error within the analytic per-bit-width bound
+    (``quant.materialize_error_bound``) for pure (LN-free) operators, and a
+    relative tolerance for LayerNorm operators (no closed form exists);
+  * kernel: the dequant-fused ``kron_gather_quant`` leg equals the jnp
+    dequant-on-read path;
+  * system: checkpoint roundtrip of quantized pytrees (int8 + fp8 payloads),
+    ServingEngine decoding from a quantized checkpoint, and the decode-path
+    vs full-forward differential over linear_kind × quant.
+
+Deterministic sweeps always run; hypothesis (CI) fuzzes the same properties.
+"""
+
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ketops
+from repro.core import quant as Q
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+MODES = ("int8", "fp8")
+
+SHAPES = {
+    2: ((4, 3), (5, 6)),
+    3: ((3, 2, 2), (4, 3, 3)),
+    4: ((2, 2, 2, 2), (3, 3, 2, 3)),
+}
+
+
+def _spec(order, rank, use_ln, quant="none", storage="factors"):
+    q, t = SHAPES[order]
+    return ketops.KronSpec(
+        in_dim=math.prod(q) - 1, out_dim=math.prod(t) - 3, order=order,
+        rank=rank, q_dims=q, t_dims=t, storage=storage, use_layernorm=use_ln,
+        quant=quant)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_quantize_dequantize_idempotent(mode):
+    """quantize(dequantize(quantize(x))) reproduces the same wire values:
+    the dequantized grid re-calibrates to the same scale (the slice max is
+    exactly representable), so a second pass changes nothing."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 7, 6)) * \
+        jnp.logspace(-3, 1, 5)[:, None, None]  # wildly different slice ranges
+    q1 = Q.quantize(x, mode)
+    assert q1["q"].dtype == Q.payload_dtype(mode)
+    assert q1["scale"].shape == (5, 1, 1)
+    d1 = Q.dequantize(q1)
+    q2 = Q.quantize(d1, mode)
+    d2 = Q.dequantize(q2)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d1),
+                               rtol=1e-6, atol=1e-8)
+    # quantizing an already-quantized dict is a no-op (calibration can rerun)
+    assert Q.quantize(q1, mode) is q1
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_per_slice_error_bounded(mode):
+    """Elementwise |x − deq(quant(x))| within the per-slice analytic step."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64)) * \
+        jnp.asarray([1e-4, 1.0, 37.0, 1e3])[:, None]
+    qd = Q.quantize(x, mode)
+    err = jnp.abs(Q.dequantize(qd) - x)
+    m = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    step = (0.5 * m / 127.0 if mode == "int8"
+            else (2.0 ** -4) * jnp.abs(x) + (2.0 ** -9) * m / 448.0)
+    assert bool(jnp.all(err <= step * 1.001 + 1e-12))
+
+
+def test_quantize_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        Q.quantize(jnp.ones((2, 2)), "int4")
+    with pytest.raises(ValueError):
+        ketops.KronSpec(in_dim=4, out_dim=6, q_dims=(2, 2), t_dims=(3, 2),
+                        quant="int4")
+
+
+# ---------------------------------------------------------------------------
+# operator-level error bound (materialize differential)
+# ---------------------------------------------------------------------------
+
+def _check_materialize_error(spec_fp, mode, seed):
+    params = ketops.init(jax.random.PRNGKey(seed), spec_fp)
+    qspec = dataclasses.replace(spec_fp, quant=mode)
+    qparams = Q.quantize_params(params, mode)
+    T = ketops.materialize(spec_fp, params)
+    Tq = ketops.materialize(qspec, qparams)
+    err = float(jnp.max(jnp.abs(T - Tq)))
+    if spec_fp.storage == "factors" and not spec_fp.use_layernorm:
+        bound = Q.materialize_error_bound(params, mode)
+        assert err <= bound * 1.001 + 1e-7, (err, bound)
+    else:
+        # LN renormalizes each tree node — no closed-form bound; the output
+        # is O(1)-normalized so a relative tolerance pins regressions
+        scale = float(jnp.max(jnp.abs(T)))
+        tol = 0.08 if mode == "int8" else 0.35
+        assert err <= tol * scale + 1e-6, (err, scale)
+
+
+@pytest.mark.parametrize("order", [2, 3, 4])
+@pytest.mark.parametrize("rank", [1, 8])
+@pytest.mark.parametrize("mode", MODES)
+def test_materialize_error_within_bound(order, rank, mode):
+    _check_materialize_error(_spec(order, rank, False), mode,
+                             seed=order * 10 + rank)
+
+
+@pytest.mark.parametrize("order", [2, 4])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("storage", ["factors", "leaves"])
+def test_materialize_error_with_layernorm(order, mode, storage):
+    _check_materialize_error(_spec(order, 4, True, storage=storage), mode,
+                             seed=order)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_apply_matrix_quantized_matches_quantized_table(mode):
+    """x @ F through quantized factors == x @ materialize(quantized)."""
+    spec = _spec(2, 8, False, quant=mode)
+    qparams = ketops.init(jax.random.PRNGKey(3), spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (9, spec.in_dim))
+    got = ketops.apply_matrix(spec, qparams, x)
+    F = ketops.materialize_dense(spec, qparams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ F.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def fp_specs(draw, use_ln=st.just(False)):
+        order = draw(st.integers(2, 4))
+        rank = draw(st.integers(1, 8))
+        q_dims = tuple(draw(st.integers(2, 4)) for _ in range(order))
+        t_dims = tuple(draw(st.integers(2, 4)) for _ in range(order))
+        in_dim = draw(st.integers(max(2, math.prod(q_dims) // 2), math.prod(q_dims)))
+        out_dim = draw(st.integers(max(2, math.prod(t_dims) // 2), math.prod(t_dims)))
+        return ketops.KronSpec(
+            in_dim=in_dim, out_dim=out_dim, order=order, rank=rank,
+            q_dims=q_dims, t_dims=t_dims, use_layernorm=draw(use_ln))
+
+    @settings(max_examples=25, deadline=None)
+    @given(fp_specs(), st.sampled_from(MODES), st.integers(0, 2 ** 31 - 1))
+    def test_fuzz_materialize_error_bound(spec, mode, seed):
+        """Max-abs materialize error per bit-width stays under the analytic
+        bound for arbitrary LN-free factor specs."""
+        _check_materialize_error(spec, mode, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(2, 32), st.sampled_from(MODES),
+           st.integers(0, 2 ** 31 - 1))
+    def test_fuzz_quant_dequant_idempotent(lead, width, mode, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (lead, width))
+        d1 = Q.dequantize(Q.quantize(x, mode))
+        d2 = Q.dequantize(Q.quantize(d1, mode))
+        np.testing.assert_allclose(np.asarray(d2), np.asarray(d1),
+                                   rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# dequant-fused kernel leg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("use_ln", [True, False])
+def test_kron_gather_quant_matches_jnp_path(mode, use_ln):
+    """The in-kernel dequant (interpret mode) equals dequant-on-read."""
+    spec = _spec(3, 4, use_ln, quant=mode)
+    qparams = ketops.init(jax.random.PRNGKey(5), spec)
+    ids = jax.random.randint(jax.random.PRNGKey(6), (13,), 0, spec.out_dim)
+    ref = ketops.apply_vector(spec, qparams, ids)
+    kspec = dataclasses.replace(spec, use_kernel=True, block_b=8)
+    got = ketops.apply_vector(kspec, qparams, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_autotune_key_splits_on_dtype():
+    from repro.kernels import autotune
+    base = autotune.table_key("kron_gather", "cpu", 4, (4, 4), (6, 5))
+    q = autotune.table_key("kron_gather", "cpu", 4, (4, 4), (6, 5), dtype="int8")
+    assert q != base and q.startswith(base)
+    # fp32 keeps the legacy suffix-free key (checked-in tables stay valid)
+    assert base == "kron_gather|cpu|r4|q4x4|t6x5"
+    # only quant payload dtypes key separately — bf16 factors are the same
+    # tuning class as fp32 (nothing ever measures a bf16 suffix)
+    assert autotune.dtype_key("bfloat16") == "float32"
+    assert autotune.dtype_key("float8_e4m3fn") == "float8_e4m3fn"
+    assert autotune.dtype_key("int8") == "int8"
+
+
+def test_autotune_quant_lookup_falls_back_to_fp32_winner(monkeypatch):
+    """A quantized shape with no dtype-keyed measurement uses the measured
+    fp32 winner for the same shape (not the heuristic)."""
+    from repro.kernels import autotune
+    key = autotune.table_key("kron_gather", "cpu", 4, (4, 4), (6, 5))
+    monkeypatch.setattr(autotune, "_table_cache", {key: {"block_b": 96}})
+    got = autotune.get_block_config("kron_gather", 4, (4, 4), (6, 5),
+                                    backend="cpu", dtype="int8")
+    assert got.block_b == 96
+    # a dtype-keyed entry overrides the fp32 winner once measured
+    monkeypatch.setattr(autotune, "_table_cache",
+                        {key: {"block_b": 96}, key + "|int8": {"block_b": 160}})
+    got = autotune.get_block_config("kron_gather", 4, (4, 4), (6, 5),
+                                    backend="cpu", dtype="int8")
+    assert got.block_b == 160
+
+
+# ---------------------------------------------------------------------------
+# storage accounting + checked-in benchmark acceptance
+# ---------------------------------------------------------------------------
+
+def test_num_bytes_accounts_payload_and_scales():
+    spec = ketops.KronSpec(in_dim=16, out_dim=50, order=2, rank=3,
+                           q_dims=(4, 4), t_dims=(8, 7))
+    n = ketops.num_params(spec)
+    assert ketops.num_bytes(spec) == 4 * n
+    for mode in MODES:
+        qspec = dataclasses.replace(spec, quant=mode)
+        assert ketops.num_params(qspec) == n  # count unchanged by quant
+        assert ketops.num_bytes(qspec) == n + 4 * 2 * spec.rank  # + scales
+
+
+def test_bench_quant_ket_json_meets_acceptance():
+    """Checked-in BENCH_quant_ket.json: every int8 row (embeddings AND ket
+    linears) shows >= 3.5x storage reduction over fp32 factors."""
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_quant_ket.json")
+    with open(path) as f:
+        rows = json.load(f)["quant_ket"]
+    int8 = [r for r in rows if r["quant"] == "int8"]
+    assert any(r["target"].startswith("embed") for r in int8)
+    assert any(r["target"].startswith("linear") for r in int8)
+    for r in int8:
+        assert r["saving_rate"] >= 3.5, r
+        if r["err_bound"] is not None:
+            assert r["max_abs_err"] <= r["err_bound"] * 1.001 + 1e-7, r
+
+
+def test_sharding_scale_leaves_follow_payload():
+    """param_specs over a quantized pytree: every scale leaf resolves to the
+    same PartitionSpec as its payload (replicated embed/head factors;
+    rank-sharded ket linears under ket_shard_rank)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    from repro.models import model as MD
+    from repro.parallel.sharding import param_specs
+    from repro.serve.engine import quantize_params
+
+    cfg = _cfg(linear_kind="ket", linear_rank=4, ket_shard_rank=True)
+    params = quantize_params(MD.init_params(jax.random.PRNGKey(0), cfg), "int8")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    specs = param_specs(cfg, mesh, jax.eval_shape(lambda: params))
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict) and set(tree) == {"q", "scale"}:
+            yield path, tree
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                yield from walk(v, f"{path}/{k}")
+        elif isinstance(tree, (list, tuple)):
+            for i, v in enumerate(tree):
+                yield from walk(v, f"{path}/[{i}]")
+
+    pairs = list(walk(specs))
+    assert pairs, "no quantized leaves found in the spec tree"
+    saw_rank_sharded = False
+    for path, pair in pairs:
+        q_spec, s_spec = pair["q"], pair["scale"]
+        # a scale shards exactly like its payload (possibly trailing-None
+        # trimmed — compare the leading entries that exist on both)
+        qt, st = tuple(q_spec), tuple(s_spec)
+        n = min(len(qt), len(st)) or 1
+        assert qt[:n] == st[:n] or (qt == () and st == ()), (path, q_spec, s_spec)
+        if "attn" in path or "ffn" in path:
+            # ket_shard_rank: rank axis over "model" (stacked layer groups
+            # carry a leading None for the stack dim)
+            assert "model" in qt and "model" in st, (path, q_spec, s_spec)
+            assert qt.index("model") == st.index("model"), (path, q_spec, s_spec)
+            saw_rank_sharded = True
+        else:
+            assert q_spec == P() and s_spec == P(), (path, q_spec, s_spec)
+    assert saw_rank_sharded
+
+
+# ---------------------------------------------------------------------------
+# system: checkpoint roundtrip + quantized serving
+# ---------------------------------------------------------------------------
+
+def _cfg(**overrides):
+    from repro.configs.base import ModelConfig
+    base = dict(
+        name="quant-e2e", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=96, vocab_size=64, head_dim=8,
+        embedding_kind="word2ketxs", embedding_rank=4, head_kind="kron",
+        head_rank=4, dtype=jnp.float32, param_dtype=jnp.float32, remat="none")
+    base.update(overrides)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_checkpoint_roundtrip_quantized_pytree(mode, tmp_path):
+    """Quantized pytrees (int8 AND exotic fp8 payloads) survive npz+manifest
+    save/restore bit-exactly."""
+    from repro.models import model as MD
+    from repro.serve.engine import quantize_params
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    cfg = _cfg(linear_kind="ket", linear_rank=4)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, mode)
+    save_checkpoint(str(tmp_path), 3, qparams)
+    like = jax.eval_shape(lambda: qparams)
+    restored, manifest = restore_checkpoint(str(tmp_path), 3, like)
+    assert manifest["step"] == 3
+
+    def eq(a, b):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)), np.asarray(b.astype(jnp.float32)))
+
+    jax.tree_util.tree_map(eq, restored, qparams)
+
+
+def test_engine_decodes_from_quantized_checkpoint(tmp_path):
+    """ServingEngine output from a restored quantized checkpoint equals the
+    engine running on the in-memory quantized params (acceptance)."""
+    from repro.models import model as MD
+    from repro.serve.engine import Request, ServingEngine, quantize_params
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    cfg = _cfg()
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, "int8")
+    save_checkpoint(str(tmp_path), 1, qparams)
+    restored, _ = restore_checkpoint(str(tmp_path), 1,
+                                     jax.eval_shape(lambda: qparams))
+
+    def decode(p):
+        eng = ServingEngine(cfg, p, batch_slots=2, max_len=32)
+        req = Request(uid=1, prompt=[5, 17, 33], max_new_tokens=6)
+        eng.submit(req)
+        eng.run_until_drained()
+        return req.output
+
+    out_ckpt = decode(restored)
+    assert out_ckpt == decode(qparams)
+    assert len(out_ckpt) == 6
+
+
+# ---------------------------------------------------------------------------
+# differential: quantized decode path vs quantized full forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("linear_kind", ["dense", "ket"])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_stepwise_decode_matches_full_forward_quantized(linear_kind, quant):
+    """Engine-style prefill-by-decode == full forward, for every
+    linear_kind × quant cell: per-position logits agree, and the greedy
+    continuation the engine produces matches the full-forward argmax."""
+    from repro.models import model as MD
+    from repro.models.transformer import forward, lm_logits_last
+    from repro.serve.engine import Request, ServingEngine, quantize_params
+
+    cfg = _cfg(linear_kind=linear_kind, linear_rank=4)
+    params = quantize_params(MD.init_params(jax.random.PRNGKey(0), cfg), quant)
+    T = 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, T), 0, cfg.vocab_size)
+
+    x, _, _ = forward(params, cfg, toks)
+    full_logits = jax.vmap(lambda h: lm_logits_last(params, cfg, h),
+                           in_axes=1, out_axes=1)(x)
+
+    cache = MD.init_cache(cfg, 2, T + 1)
+    step_logits = []
+    for t in range(T):
+        logits, cache = MD.serve_step_fn(params, cfg, cache, toks[:, t])
+        step_logits.append(logits)
+    step_logits = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(np.asarray(step_logits), np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+    # engine prefill-by-decode continues exactly where the forward left off
+    prompt = [int(t) for t in np.asarray(toks[0])]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=T + 4)
+    req = Request(uid=1, prompt=prompt, max_new_tokens=1)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.output == [int(jnp.argmax(full_logits[0, -1]))]

@@ -70,3 +70,65 @@ def test_engine_eos_early_stop(setup):
     eng.submit(req)
     eng.run_until_drained()
     assert req.output == ref[:3]
+
+
+def test_engine_eos_on_final_step_retires_once(setup):
+    """EOS arriving on the same step as max_new_tokens: the request retires
+    exactly once, with the EOS token included and no extra tick consumed."""
+    cfg, params = setup
+    n = 4
+    ref = _direct_greedy(cfg, params, [7, 3], n)
+    eos = ref[n - 1]  # EOS is exactly the max_new_tokens-th token
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    req = Request(uid=1, prompt=[7, 3], max_new_tokens=n, eos_id=eos)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.output == ref[:n]
+    assert req.finished_at is not None
+    assert eng.done == [req]  # retired once, not duplicated
+    assert eng.slot_req == [None]
+    assert eng.stats()["completed"] == 1
+
+
+def test_engine_admission_queue_longer_than_free_slots(setup):
+    """Submitting more requests than slots: exactly batch_slots admit per
+    tick-wave, the rest wait FIFO, and nothing is dropped or reordered."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64)
+    reqs = [Request(uid=i, prompt=[i + 1], max_new_tokens=3) for i in range(7)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    # one tick: 2 admitted into the 2 slots, 5 still queued
+    assert [r is not None for r in eng.slot_req] == [True, True]
+    assert [r.uid for r in eng.queue] == [2, 3, 4, 5, 6]
+    eng.run_until_drained()
+    assert not eng.queue and eng.slot_req == [None, None]
+    assert eng.stats()["completed"] == 7
+    # FIFO: finish order tracks submission order for equal-length requests
+    assert [r.uid for r in eng.done] == [r.uid for r in reqs]
+    for r in reqs:
+        assert r.output == _direct_greedy(cfg, params, r.prompt, 3), r.uid
+
+
+def test_engine_slot_reuse_matches_fresh_engine(setup):
+    """Retire -> readmit into the same slot: the recycled slot's cache is
+    isolated, so the second request decodes exactly like on a fresh engine."""
+    cfg, params = setup
+    prompt_a, prompt_b = [5, 17, 333], [42, 8]
+
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    ra = Request(uid=1, prompt=prompt_a, max_new_tokens=5)
+    eng.submit(ra)
+    eng.run_until_drained()
+    rb = Request(uid=2, prompt=prompt_b, max_new_tokens=5)
+    eng.submit(rb)  # reuses the slot request A just vacated
+    eng.run_until_drained()
+
+    fresh = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    rb_fresh = Request(uid=3, prompt=prompt_b, max_new_tokens=5)
+    fresh.submit(rb_fresh)
+    fresh.run_until_drained()
+
+    assert rb.output == rb_fresh.output
+    assert ra.output == _direct_greedy(cfg, params, prompt_a, 5)

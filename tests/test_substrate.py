@@ -1,4 +1,7 @@
-"""Substrate tests: optimizer, data pipeline, compression, fault handling."""
+"""Substrate tests: optimizer, data pipeline, microbatching, fault handling.
+
+(Gradient-compression tests live in tests/test_compression.py.)
+"""
 
 import numpy as np
 import jax
@@ -7,8 +10,6 @@ import pytest
 
 from repro.data.synthetic import DataConfig, batch_at
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
-from repro.optim.compression import (CompressionConfig, compress_decompress,
-                                     init_residuals)
 from repro.train.fault import PreemptionHandler, StragglerWatchdog
 
 
@@ -62,51 +63,6 @@ def test_data_labels_are_shifted_tokens():
     cfg = DataConfig(vocab_size=50, seq_len=6, global_batch=2, seed=0)
     b = batch_at(cfg, 0)
     np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
-
-
-# ---------------------------------------------------------------------------
-# gradient compression
-# ---------------------------------------------------------------------------
-
-def test_compression_error_feedback_is_unbiased_over_time():
-    """Error feedback: accumulated wire values converge to accumulated grads."""
-    rng = np.random.default_rng(0)
-    g_true = jnp.asarray(rng.normal(size=(4096,)) * 1e-3)
-    grads = {"w": g_true}
-    res = init_residuals(grads)
-    total_wire = jnp.zeros_like(g_true)
-    n = 50
-    for _ in range(n):
-        wire, res = compress_decompress(grads, res)
-        total_wire = total_wire + wire["w"]
-    # total transmitted ≈ n * g (residual bounded), elementwise
-    np.testing.assert_allclose(np.asarray(total_wire / n), np.asarray(g_true),
-                               atol=2e-6)
-
-
-def test_compression_quantization_error_bounded():
-    rng = np.random.default_rng(1)
-    g = {"w": jnp.asarray(rng.normal(size=(3000,)))}
-    res = init_residuals(g)
-    wire, res2 = compress_decompress(g, res)
-    err = np.abs(np.asarray(wire["w"] - g["w"]))
-    scale = np.abs(np.asarray(g["w"])).max() / 127
-    assert err.max() <= scale * 1.01
-    np.testing.assert_allclose(np.asarray(res2["w"]), np.asarray(g["w"] - wire["w"]),
-                               rtol=1e-5, atol=1e-7)
-
-
-def test_training_with_compression_still_learns():
-    from repro.configs import get_smoke
-    from repro.train.loop import LoopConfig, train_loop
-    from repro.train.step import TrainConfig
-
-    cfg = get_smoke("granite-20b", dtype=jnp.float32)
-    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2),
-                       compression=CompressionConfig(enabled=True))
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
-    out = train_loop(cfg, tcfg, dcfg, LoopConfig(total_steps=40, log_every=100))
-    assert out["final_loss"] < out["first_loss"] - 0.3
 
 
 # ---------------------------------------------------------------------------
