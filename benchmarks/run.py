@@ -6,10 +6,14 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract). Sections:
   * kernels — fwd/bwd split for the fused kron kernels (BENCH_kernels.json)
   * quant — int8/fp8 ket factor storage: bytes / error / gather latency
     (BENCH_quant_ket.json)
+  * serving — continuous-batching engine: chunked prefill vs token-by-token
+    prompt ingestion + stats assertions (BENCH_serving.json)
   * roofline — three-term roofline per dry-run cell (reads results/dryrun)
 
 ``--quick`` runs the CI smoke: paper tables + a small-shape kernel fwd/bwd
-pass (no JSON rewrite) — fast enough for every pull request.
+pass (no JSON rewrite) — fast enough for every pull request. ``serving
+--quick`` runs the reduced serving benchmark but still writes the JSON
+(uploaded as a CI artifact).
 """
 
 from __future__ import annotations
@@ -25,17 +29,23 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("section", nargs="?", default="all",
                     choices=["all", "timing", "kernels", "ablation", "roofline",
-                             "quant"])
+                             "quant", "serving"])
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: paper tables + small-shape kernel fwd/bwd")
+                    help="CI smoke: paper tables + small-shape kernel fwd/bwd; "
+                         "with the serving section, the reduced serving bench")
     args = ap.parse_args()
-    if args.quick and args.section != "all":
+    if args.quick and args.section not in ("all", "serving"):
         ap.error("--quick replaces the section sweep; drop one of the two")
 
     def report(line: str) -> None:
         print(line, flush=True)
 
     print("name,us_per_call,derived")
+
+    if args.section == "serving":
+        from benchmarks import serving
+        serving.run(report, json_path=serving.SERVING_JSON, quick=args.quick)
+        return
 
     from benchmarks import paper_tables
     # --quick (CI smoke) never rewrites checked-in JSON; the "quant" section
@@ -68,6 +78,9 @@ def main() -> None:
     if only in ("all", "roofline"):
         from benchmarks import roofline
         roofline.run(report)
+    if only == "all":  # full sweep: serving engine throughput too
+        from benchmarks import serving
+        serving.run(report, json_path=serving.SERVING_JSON)
 
 
 if __name__ == "__main__":

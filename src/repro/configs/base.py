@@ -120,6 +120,14 @@ class ModelConfig:
     attn_chunk: int = 1024    # flash-attention KV-chunk size
     ssm_fused_chunks: bool = False  # compute decay/drive per chunk (not whole-S)
 
+    # serving substrate (serve/engine.py + serve/cache.py). ``page_size`` is
+    # the token granularity of the paged KV-cache pools; ``prefill_chunk`` is
+    # how many prompt tokens one engine tick ingests through the chunked
+    # prefill path (⌈P/prefill_chunk⌉ ticks per P-token prompt). Both are
+    # serving-time knobs: training/init paths never read them.
+    page_size: int = 16
+    prefill_chunk: int = 16
+
     def __post_init__(self):
         if not self.layer_pattern:
             pattern = {

@@ -1,4 +1,5 @@
-"""Jit'd flash-attention op: Pallas forward, analytic backward via the oracle."""
+"""Jit'd flash-attention ops: Pallas forward, analytic backward via the
+oracle; plus the (inference-only) paged decode read."""
 
 from __future__ import annotations
 
@@ -7,11 +8,28 @@ import functools
 import jax
 
 from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
-from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.flash_attn.paged import paged_attention_pallas
+from repro.kernels.flash_attn.ref import attention_ref, paged_attention_ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, ptab, lens, *, use_kernel=None):
+    """Decode-step attention over paged KV pools (serve/cache.py layout).
+
+    q (B, H, Dh); pools (P, page_size, KVH, D); ptab (B, NP); lens (B,).
+    Inference-only (no VJP). use_kernel None = auto: the Pallas paged-read
+    leg on TPU, the XLA gather read elsewhere (interpret-mode Pallas is for
+    tests, not serving).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return paged_attention_pallas(q, k_pages, v_pages, ptab, lens,
+                                      interpret=not _on_tpu())
+    return paged_attention_ref(q, k_pages, v_pages, ptab, lens)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: paged-attention decode read.
+
+Single-query (decode-step) attention over the paged KV pools of
+serve/cache.py: K/V live as ``(num_pages, page_size, kv_heads, head_dim)``
+pools and each sequence's pages are scattered — the page table is a
+**scalar-prefetch** argument, so the K/V BlockSpec index maps dereference
+``ptab[b, j]`` to DMA exactly the pages a sequence owns, page-by-page, with
+online-softmax accumulation across pages. No gathered (B, S, KVH, Dh)
+intermediate is ever materialized (the XLA reference in ref.py does exactly
+that gather and serves as the oracle).
+
+Grid: (batch, kv_heads, logical_pages) with pages innermost (sequential on
+TPU); the (G = H/KVH query heads × Dv) output tile and per-(b, kvh) running
+(m, l) stats live in revisited VMEM blocks across page steps. Pages past a
+sequence's length are skipped via ``pl.when`` — their table entries point at
+the trash page and are never read.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30  # plain float: jnp constants would be captured by the kernel
+
+
+def _kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            ps, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lens_ref[b]
+
+    @pl.when(j * ps < length)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (ps, Dh)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, ps)
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(kpos < length, s, NEG)
+
+        m_old = m_ref[0, 0]  # (G, 1)
+        l_old = l_ref[0, 0]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.dot(p.astype(v_ref.dtype), v_ref[0, :, 0],
+                     preferred_element_type=jnp.float32)  # (G, Dv)
+        o_ref[0, 0] = o_ref[0, 0] * corr + pv
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, ptab, lens, *, interpret=True):
+    """q (B, H, Dh); k/v pools (P, ps, KVH, Dh/Dv); ptab (B, NP) page table;
+    lens (B,) valid tokens per sequence -> (B, H, Dv)."""
+    B, H, Dh = q.shape
+    _, ps, KVH, Dv = v_pages.shape
+    NP = ptab.shape[1]
+    G = H // KVH
+    scale = Dh ** -0.5
+    qr = q.reshape(B, KVH, G, Dh)
+
+    def kv_index(b, h, j, tab, _lens):
+        return (tab[b, j], 0, h, 0)
+
+    kernel = functools.partial(_kernel, ps=ps, scale=scale)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KVH, NP),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, tab, _lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, ps, 1, Dh), kv_index),
+                pl.BlockSpec((1, ps, 1, Dv), kv_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, G, Dv), lambda b, h, j, tab, _lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1), lambda b, h, j, tab, _lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1), lambda b, h, j, tab, _lens: (b, h, 0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KVH, G, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, KVH, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KVH, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ptab.astype(jnp.int32), lens.astype(jnp.int32), qr, k_pages, v_pages)
+    return out.reshape(B, H, Dv).astype(q.dtype)

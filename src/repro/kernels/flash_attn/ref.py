@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the flash-attention kernel: naive masked softmax."""
+"""Pure-jnp oracles for the flash-attention kernels: naive masked softmax
+(full-sequence) and the gather-based paged decode read."""
 
 from __future__ import annotations
 
@@ -24,3 +25,23 @@ def attention_ref(q, k, v, *, causal=True, window=0):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
     return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, ptab, lens):
+    """Gather-based paged decode read: q (B, H, Dh); pools (P, ps, KVH, D);
+    ptab (B, NP); lens (B,) -> (B, H, Dv). Materializes the per-sequence
+    logical KV view — the memory-hungry oracle the kernel must match."""
+    B, H, Dh = q.shape
+    _, ps, KVH, Dv = v_pages.shape
+    G = H // KVH
+    gk = k_pages[ptab].reshape(B, -1, KVH, Dh)  # (B, NP*ps, KVH, Dh)
+    gv = v_pages[ptab].reshape(B, -1, KVH, Dv)
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, Dh) * (Dh ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, gk.astype(jnp.float32))
+    pos = jnp.arange(gk.shape[1])
+    s = jnp.where((pos[None, :] < lens[:, None])[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, gv.astype(jnp.float32))
+    # all-masked rows (lens == 0) softmax to uniform; zero them explicitly
+    o = jnp.where((lens > 0)[:, None, None, None], o, 0.0)
+    return o.reshape(B, H, Dv).astype(q.dtype)

@@ -1,7 +1,14 @@
 """Meshed serving launcher: batched decode with sharded KV caches.
 
+Raw-step mode (default) times the jitted decode step over a dense or paged
+cache; ``--engine`` drives the full continuous-batching ServingEngine
+(chunked prefill + paged pools + page-budget scheduler) and prints its
+stats line.
+
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b --smoke \
-        --batch 8 --new-tokens 32 --mesh 1x1 [--quant int8]
+        --batch 8 --new-tokens 32 --mesh 1x1 [--quant int8] [--paged]
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
+        --engine --prompt-len 64 --prefill-chunk 16
 """
 
 from __future__ import annotations
@@ -11,6 +18,35 @@ import time
 
 import jax
 import jax.numpy as jnp
+
+
+def _run_engine(cfg, args) -> int:
+    from repro.models import model as MD
+    from repro.serve.engine import Request, ServingEngine
+
+    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+    eng = ServingEngine(
+        cfg, params, batch_slots=args.batch, max_len=args.max_len,
+        quant=args.quant, cache_mode="dense" if args.dense else "paged",
+        prefill_chunk=args.prefill_chunk or None,
+        prefill_mode=args.prefill_mode)
+    key = jax.random.PRNGKey(1)
+    for i in range(args.requests):
+        key, k = jax.random.split(key)
+        prompt = jax.random.randint(k, (args.prompt_len,), 0, cfg.vocab_size)
+        eng.submit(Request(uid=i, prompt=[int(t) for t in prompt],
+                           max_new_tokens=args.new_tokens))
+    ticks = eng.run_until_drained()
+    st = eng.stats()
+    pages = (f", pages free={st['free_pages']}/{st['page_capacity']}"
+             if st["free_pages"] is not None else "")
+    print(f"[serve:engine] {cfg.name} {eng.prefill_mode}/{eng.cache_mode}: "
+          f"{st['completed']} reqs in {ticks} ticks "
+          f"({st['prefill_ticks']} prefill + {st['decode_ticks']} decode), "
+          f"{st['prompt_tokens_per_sec']:.0f} prompt tok/s, "
+          f"{st['tokens_per_sec']:.0f} gen tok/s, "
+          f"p50={st['p50_latency_s']:.3f}s p95={st['p95_latency_s']:.3f}s{pages}")
+    return 0
 
 
 def main(argv=None):
@@ -30,10 +66,27 @@ def main(argv=None):
     p.add_argument("--mesh", default="1x1")
     p.add_argument("--quant", default="none", choices=["none", "int8", "fp8"],
                    help="post-training ket-factor quantization (wire format)")
+    p.add_argument("--paged", action="store_true",
+                   help="raw-step mode: paged KV-cache pools instead of dense")
+    p.add_argument("--dense", action="store_true",
+                   help="engine mode: dense slot caches instead of paged")
+    p.add_argument("--engine", action="store_true",
+                   help="drive the continuous-batching ServingEngine")
+    p.add_argument("--requests", type=int, default=8,
+                   help="engine mode: number of requests to submit")
+    p.add_argument("--prompt-len", type=int, default=32,
+                   help="engine mode: prompt tokens per request")
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="engine mode: prompt tokens per prefill tick (0 = config)")
+    p.add_argument("--prefill-mode", default="chunked",
+                   choices=["chunked", "stepwise"])
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     cfg = (get_smoke if args.smoke else get_config)(args.arch, dtype=jnp.float32)
+    if args.engine:
+        return _run_engine(cfg, args)
+
     dshape = tuple(int(x) for x in args.mesh.split("x"))
     mesh = make_mesh(dshape, ("data", "model") if len(dshape) == 2 else ("pod", "data", "model"))
 
@@ -42,7 +95,10 @@ def main(argv=None):
         if args.quant != "none":
             from repro.serve.engine import quantize_params
             params = quantize_params(params, args.quant)
-        cache = MD.init_cache(cfg, args.batch, args.max_len)
+        cache = MD.init_cache(cfg, args.batch, args.max_len, paged=args.paged)
+        if args.paged:
+            from repro.serve.cache import identity_ptab
+            cache = identity_ptab(cache, args.batch)
         shape = ShapeSpec("serve", args.max_len, args.batch, "decode")
         pspec = param_specs(cfg, mesh, jax.eval_shape(lambda: params))
         cspec = cache_specs(cfg, mesh, shape, jax.eval_shape(lambda: cache))
@@ -62,7 +118,8 @@ def main(argv=None):
         jax.block_until_ready(toks)
         dt = time.time() - t0
     total = args.batch * args.new_tokens
-    print(f"[serve] {cfg.name} mesh={mesh.shape}: {total} tok in {dt:.2f}s "
+    print(f"[serve] {cfg.name} mesh={mesh.shape} "
+          f"cache={'paged' if args.paged else 'dense'}: {total} tok in {dt:.2f}s "
           f"({total / dt:.0f} tok/s)")
     return 0
 

@@ -28,7 +28,17 @@ def flash_attention(
     window: int = 0,  # 0 = unlimited; >0 = local sliding window
     chunk: int = 1024,
     kv_valid_len: jax.Array | None = None,  # (B,) mask for padded caches
+    q_offset: jax.Array | None = None,  # (B,) absolute position of query 0
+    kv_pos: jax.Array | None = None,  # (B, Skv) absolute key positions; <0 invalid
 ) -> jax.Array:
+    """Chunked-softmax attention; never materializes the (Sq, Skv) matrix.
+
+    The positional args serve chunked prefill (serve/decode.py): ``q_offset``
+    shifts each sequence's query positions (queries are cache continuations
+    at per-slot offsets), and ``kv_pos`` overrides the implicit arange key
+    positions (ring-buffer caches carry out-of-order absolute positions).
+    Both default to the classic positions-from-zero behavior.
+    """
     B, Sq, H, Dh = q.shape
     _, Skv, KVH, _ = k.shape
     Dv = v.shape[-1]
@@ -41,8 +51,14 @@ def flash_attention(
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_pos is not None:  # padded keys: position -1 == always invalid
+            kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
     n_chunks = (Skv + pad) // C
-    qpos = jnp.arange(Sq)
+    # qpos: (1, Sq) or (B, Sq) when per-slot offsets are given
+    if q_offset is None:
+        qpos = jnp.arange(Sq)[None]
+    else:
+        qpos = q_offset[:, None] + jnp.arange(Sq)[None]
 
     # checkpoint: backward recomputes the (Sq, C) score tile per chunk instead
     # of saving it — without this, grad-of-scan stores the full S² matrix.
@@ -53,14 +69,19 @@ def flash_attention(
         vc = jax.lax.dynamic_slice_in_dim(v, c * C, C, axis=1)
         kpos = c * C + jnp.arange(C)
         s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kc, preferred_element_type=jnp.float32)
-        valid = (kpos[None, :] < Skv) & jnp.ones((Sq, 1), bool)
+        if kv_pos is None:
+            abs_k = kpos[None, None, :]  # (1, 1, C)
+            valid = (kpos < Skv)[None, None, :] & jnp.ones((1, Sq, 1), bool)
+        else:
+            abs_k = jax.lax.dynamic_slice_in_dim(kv_pos, c * C, C, axis=1)[:, None, :]
+            valid = (abs_k >= 0) & jnp.ones((1, Sq, 1), bool)  # (B, Sq, C)
         if causal:
-            valid &= kpos[None, :] <= qpos[:, None]
+            valid &= abs_k <= qpos[:, :, None]
         if window > 0:
-            valid &= kpos[None, :] > qpos[:, None] - window
-        mask = valid[None, None, None]  # (1,1,1,Sq,C)
+            valid &= abs_k > qpos[:, :, None] - window
         if kv_valid_len is not None:
-            mask = mask & (kpos[None, :] < kv_valid_len[:, None])[:, None, None, None, :]
+            valid &= abs_k < kv_valid_len[:, None, None]
+        mask = valid[:, None, None]  # (B|1, 1, 1, Sq, C)
         s = jnp.where(mask, s, NEG)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -228,6 +249,35 @@ def init_mla(key, cfg, dtype=None) -> dict:
     }
 
 
+def mla_latents(params, cfg, x, cos, sin):
+    """x (B, S, d) -> latent cache entries (c (B, S, L), k_rope (B, S, R)).
+
+    The single source of the w_dkv/kv_norm/w_krope projection — shared by
+    training-prefill cache capture, single-token decode, and chunked
+    prefill so the three paths cannot drift."""
+    dt = cfg.dtype
+    c = jnp.einsum("bsd,dl->bsl", x, params["w_dkv"].astype(dt))
+    c = rmsnorm(params["kv_norm"], c)
+    kr = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_krope"].astype(dt))[:, :, None, :],
+        cos, sin)[:, :, 0, :]
+    return c, kr
+
+
+def mla_absorbed_q(params, cfg, x, cos, sin):
+    """x (B, S, d) -> (q_abs (B, S, H, L), q_rope (B, S, H, R)).
+
+    Queries for the absorbed-matmul score against a latent cache:
+    score = q_abs·c + q_rope·k_rope at scale (head_dim + R)^-0.5."""
+    dt = cfg.dtype
+    Dh = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :Dh], q[..., Dh:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, params["w_uk"].astype(dt))
+    return q_abs, q_rope
+
+
 def mla_block(params, cfg, x, cos, sin, *, chunk: int = 1024):
     """Training/prefill MLA: latent c is up-projected; full softmax attention."""
     dt = cfg.dtype
@@ -236,11 +286,8 @@ def mla_block(params, cfg, x, cos, sin, *, chunk: int = 1024):
     q_nope, q_rope = q[..., :Dh], q[..., Dh:]
     q_rope = apply_rope(q_rope, cos, sin)
 
-    c = jnp.einsum("bsd,dl->bsl", x, params["w_dkv"].astype(dt))
-    c = rmsnorm(params["kv_norm"], c)
-    k_rope = apply_rope(
-        jnp.einsum("bsd,dr->bsr", x, params["w_krope"].astype(dt))[:, :, None, :], cos, sin
-    )  # (B,S,1,R) shared across heads
+    c, k_rope = mla_latents(params, cfg, x, cos, sin)
+    k_rope = k_rope[:, :, None, :]  # (B,S,1,R) shared across heads
     k_nope = jnp.einsum("bsl,lhk->bshk", c, params["w_uk"].astype(dt))
     v = jnp.einsum("bsl,lhk->bshk", c, params["w_uv"].astype(dt))
 
@@ -257,11 +304,9 @@ def mla_decode(params, cfg, x_tok, cache_c, cache_krope, cache_len, cos, sin):
     score = (q_nope·W_uk)·c + q_rope·k_rope; ctx = (Σ α c)·W_uv.
     """
     dt = cfg.dtype
-    H, Dh, R, L = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
-    q = jnp.einsum("bd,dhk->bhk", x_tok, params["wq"].astype(dt))
-    q_nope, q_rope = q[..., :Dh], q[..., Dh:]
-    q_rope = apply_rope(q_rope[:, None], cos, sin)[:, 0]
-    q_abs = jnp.einsum("bhk,lhk->bhl", q_nope, params["w_uk"].astype(dt))
+    Dh, R = cfg.head_dim, cfg.rope_head_dim
+    q_abs, q_rope = mla_absorbed_q(params, cfg, x_tok[:, None], cos, sin)
+    q_abs, q_rope = q_abs[:, 0], q_rope[:, 0]
 
     scale = (Dh + R) ** -0.5
     s = jnp.einsum("bhl,bsl->bhs", q_abs, cache_c, preferred_element_type=jnp.float32)
@@ -277,9 +322,5 @@ def mla_decode(params, cfg, x_tok, cache_c, cache_krope, cache_len, cos, sin):
 
 def mla_cache_step(params, cfg, x_tok, cos, sin):
     """New latent cache entries for one decoded token: (c (B,L), k_rope (B,R))."""
-    dt = cfg.dtype
-    c = jnp.einsum("bd,dl->bl", x_tok, params["w_dkv"].astype(dt))
-    c = rmsnorm(params["kv_norm"], c)
-    kr = jnp.einsum("bd,dr->br", x_tok, params["w_krope"].astype(dt))
-    kr = apply_rope(kr[:, None, None, :], cos, sin)[:, 0, 0]
-    return c, kr
+    c, kr = mla_latents(params, cfg, x_tok[:, None], cos, sin)
+    return c[:, 0], kr[:, 0]

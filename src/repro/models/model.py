@@ -11,7 +11,7 @@ from repro.models import transformer as T
 from repro.serve import decode as D
 
 __all__ = ["init_params", "loss_fn", "serve_step_fn", "init_cache", "input_specs",
-           "prefill_fn", "shape_is_applicable"]
+           "prefill_fn", "prefill_chunk_fn", "shape_is_applicable"]
 
 
 def init_params(key, cfg: ModelConfig) -> dict:
@@ -26,9 +26,21 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, **kw):
     return T.lm_loss(params, cfg, batch, **kw)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               paged: bool = False, num_pages: int | None = None,
+               page_size: int | None = None) -> dict:
+    """Decode cache pytree: dense slots by default, paged KV pools with
+    ``paged=True`` (serve/cache.py; num_pages counts the trash page)."""
     if cfg.family == "encdec":
+        if paged:
+            raise NotImplementedError("paged caches target LM decode paths")
         return ED.encdec_init_cache(cfg, batch, max_len)
+    if paged:
+        from repro.serve.cache import init_paged_cache, logical_pages
+        if num_pages is None:  # full capacity: every slot can reach max_len
+            num_pages = batch * logical_pages(max_len, page_size or cfg.page_size) + 1
+        return init_paged_cache(cfg, batch, max_len, num_pages=num_pages,
+                                page_size=page_size)
     return D.init_cache(cfg, batch, max_len)
 
 
@@ -36,6 +48,16 @@ def serve_step_fn(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
     if cfg.family == "encdec":
         return ED.encdec_serve_step(params, cfg, cache, tokens)
     return D.serve_step(params, cfg, cache, tokens)
+
+
+def prefill_chunk_fn(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                     lens: jax.Array):
+    """Chunked batched prefill (serve/decode.prefill_step): tokens (B, C)
+    at per-slot offsets, lens (B,) valid counts; -> (last-position logits,
+    new cache)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill targets LM decode paths")
+    return D.prefill_step(params, cfg, cache, tokens, lens)
 
 
 def prefill_fn(params, cfg: ModelConfig, batch: dict):

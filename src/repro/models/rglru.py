@@ -74,6 +74,31 @@ def rglru_init_cache(cfg, batch: int, dtype) -> dict:
     }
 
 
+def rglru_prefill_chunk(params, cfg, x_chunk, lens, cache):
+    """Chunk-parallel prefill continuing the decode state; ragged ``lens``
+    freeze the recurrence (a=1, drive=0) past each slot's valid prefix.
+    Returns (out (B, C, d), new cache); rows past lens_b are garbage."""
+    from repro.models.ssm import _state_after
+
+    C = x_chunk.shape[1]
+    u = jnp.einsum("bsd,de->bse", x_chunk, params["wx"].astype(cfg.dtype))
+    u2, _ = causal_depthwise_conv(
+        u, params["conv_w"].astype(cfg.dtype),
+        params["conv_b"].astype(cfg.dtype), state=cache["conv"])
+    a, drive = _gates(params, cfg, u2)
+    valid = (jnp.arange(C) < lens[:, None])[..., None]  # (B,C,1)
+    a = jnp.where(valid, a, 1.0)
+    drive = jnp.where(valid, drive, 0.0)
+    h_all, h_last = chunked_linear_scan(a, drive, cache["h"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x_chunk,
+                                  params["wy"].astype(cfg.dtype)))
+    y = h_all.astype(cfg.dtype) * gate
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(cfg.dtype))
+    window = jnp.concatenate([cache["conv"], u], axis=1)
+    new_conv = _state_after(window, lens, cfg.ssm_conv - 1)
+    return out, {"conv": new_conv, "h": h_last}
+
+
 def rglru_decode_step(params, cfg, x_tok, cache):
     """x_tok (B,d) -> (out (B,d), cache). O(1) per token."""
     u = jnp.einsum("bd,de->be", x_tok, params["wx"].astype(cfg.dtype))

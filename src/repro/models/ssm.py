@@ -100,6 +100,46 @@ def ssm_init_cache(cfg, batch: int, dtype) -> dict:
     }
 
 
+def _state_after(window: jax.Array, lens: jax.Array, keep: int) -> jax.Array:
+    """window (B, keep+C, D), lens (B,) -> the keep inputs ending at each
+    slot's last valid position: window[b, lens_b : lens_b+keep]. Exact conv
+    state for ragged chunks (a masked tail would smuggle zeros in)."""
+    return jax.vmap(
+        lambda w, s: jax.lax.dynamic_slice_in_dim(w, s, keep, axis=0)
+    )(window, lens)
+
+
+def ssm_prefill_chunk(params, cfg, x_chunk, lens, cache):
+    """Chunk-parallel prefill: x_chunk (B, C, d) continues the decode state.
+
+    Per-slot ragged lengths ``lens`` (B,): positions >= lens_b contribute
+    identity recurrence steps (a=1, b=0), so the final state equals the state
+    after exactly lens_b tokens — bitwise-compatible with feeding the valid
+    prefix alone. Returns (out (B, C, d), new cache); out rows past lens_b
+    are garbage and must be ignored by the caller.
+    """
+    di = cfg.d_inner
+    C = x_chunk.shape[1]
+    xz = jnp.einsum("bsd,de->bse", x_chunk, params["in_proj"].astype(cfg.dtype))
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_conv, _ = causal_depthwise_conv(
+        x_in, params["conv_w"].astype(cfg.dtype),
+        params["conv_b"].astype(cfg.dtype), state=cache["conv"])
+    x_conv = jax.nn.silu(x_conv)
+    a, b, Cm = _ssm_inputs(params, cfg, x_conv)
+    valid = (jnp.arange(C) < lens[:, None])[..., None, None]  # (B,C,1,1)
+    a = jnp.where(valid, a, 1.0)
+    b = jnp.where(valid, b, 0.0)
+    h_all, h_last = chunked_linear_scan(a, b, cache["h"])
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = y.astype(cfg.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(cfg.dtype))
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)
+    new_conv = _state_after(window, lens, cfg.ssm_conv - 1)
+    return out, {"conv": new_conv, "h": h_last}
+
+
 def ssm_decode_step(params, cfg, x_tok, cache):
     """x_tok (B, d), cache {conv, h} -> (out (B, d), new cache). O(1) per token."""
     di = cfg.d_inner

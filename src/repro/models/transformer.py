@@ -116,11 +116,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, cos, sin, *, want_cache: bool
         if cfg.mla:
             o = A.mla_block(p["attn"], cfg, h, cos, sin, chunk=attn_chunk)
             if want_cache:
-                c = jnp.einsum("bsd,dl->bsl", h, p["attn"]["w_dkv"].astype(cfg.dtype))
-                c = rmsnorm(p["attn"]["kv_norm"], c)
-                kr = A.apply_rope(
-                    jnp.einsum("bsd,dr->bsr", h, p["attn"]["w_krope"].astype(cfg.dtype))[:, :, None, :],
-                    cos, sin)[:, :, 0, :]
+                c, kr = A.mla_latents(p["attn"], cfg, h, cos, sin)
                 cache = {"c": c, "krope": kr}
         else:
             q, k, v = A.attention_qkv(p["attn"], cfg, h, cos, sin)

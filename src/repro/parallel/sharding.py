@@ -216,7 +216,11 @@ def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, batch_shape) -> 
 
 def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, cache_shape) -> dict:
     """Decode caches: batch over DP axes; KV/latent *sequence* over "model"
-    (flash-decoding layout); SSM/RG-LRU state width over "model"."""
+    (flash-decoding layout); SSM/RG-LRU state width over "model"; paged
+    pools split their *page* axis over "model" (pages are the unit of both
+    allocation and placement — the page table stays replicated so any shard
+    can resolve slot→page, and GSPMD inserts the cross-shard gather for the
+    reference read path)."""
     dp = batch_axes_for(mesh, shape.global_batch)
     tp = "model" if mesh.shape.get("model", 1) > 1 else None
     bdim = dp if dp else None
@@ -227,6 +231,12 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, cache_shape) -> 
         lead: tuple = (None,) if (p.startswith("groups/") or
                                   re.search(r"(self|cross)_[kv]$", p)) else ()
         base = p.rsplit("/", 1)[-1]
+        if base in ("k_pages", "v_pages", "c_pages", "krope_pages"):
+            # (..., num_pages, page_size, [KVH, Dh]) — page axis over model
+            rest = (None,) * (leaf.ndim - len(lead) - 1)
+            return P(*lead, tp, *rest)
+        if base == "ptab":  # (B, logical_pages): every shard resolves pages
+            return P(bdim)
         if base in ("k", "v", "c", "krope", "self_k", "self_v", "cross_k", "cross_v"):
             # (..., B, S, [KVH, Dh]) — sequence axis over model
             rest = (tp,) + (None,) * (leaf.ndim - len(lead) - 2)

@@ -1,0 +1,280 @@
+"""Serving cache substrate: dense slot caches + paged KV-cache pools.
+
+Two cache layouts share one cache-kind interface (serve/decode.py consumes
+either, branching on the presence of the ``"ptab"`` leaf):
+
+* **dense** — the training/prefill layout: every attention layer holds
+  ``(batch_slots, max_len, kv_heads, head_dim)`` K/V tensors, so memory is
+  ``batch_slots × max_len`` regardless of how many tokens are actually live.
+
+* **paged** — unbounded-attention layers hold ``(num_pages, page_size,
+  kv_heads, head_dim)`` *pools* plus a device-side page table ``ptab``
+  ``(batch_slots, ⌈max_len/page_size⌉)`` mapping each slot's logical page to
+  a physical pool row. Memory scales with live tokens: a host-side free-list
+  :class:`PageAllocator` hands pages out at admission and takes them back at
+  retirement. Pool row 0 is a reserved **trash page**: retired/idle slots
+  keep all-zero ptab rows, so their (masked, never-read) writes land there
+  instead of clobbering live pages. Stale data in a recycled page is never
+  read — reads mask by each slot's own position, and every position below it
+  was rewritten during the slot's prefill.
+
+Bounded-state kinds (SSM, RG-LRU conv/recurrent state, and the local-window
+attention ring buffer) stay dense under both layouts — their footprint is
+already O(state) or O(window) per slot, so paging buys nothing.
+
+Slot isolation is driven by an **explicit axis-tag pytree**
+(:func:`slot_axes`): each cache leaf is tagged with the axis that indexes
+batch slots (or NO_SLOT_AXIS for shared pool leaves), matched by leaf *path*
+like parallel/sharding.py — never by guessing which axis happens to equal
+``batch_slots``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "init_cache", "init_layer_cache", "init_paged_cache", "logical_pages",
+    "pages_needed", "gather_pages", "identity_ptab", "slot_axes", "reset_slot",
+    "PageAllocator", "NO_SLOT_AXIS", "PAGED_KINDS", "TRASH_PAGE",
+]
+
+# attention kinds whose KV/latent history grows with sequence length; only
+# these get paged pools ("local_attn" is a bounded ring buffer)
+PAGED_KINDS = ("attn", "moe_attn")
+# pool row 0 is never allocated: it absorbs the masked writes of idle slots
+TRASH_PAGE = 0
+# slot_axes tag for leaves with no per-slot axis (paged pools)
+NO_SLOT_AXIS = -1
+
+
+# ---------------------------------------------------------------------------
+# Dense layout (training/prefill layout; the pre-paging serving layout)
+# ---------------------------------------------------------------------------
+
+def _kv_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind == "local_attn":
+        return min(cfg.local_window, max_len)
+    return max_len
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> dict:
+    from repro.models import rglru as R
+    from repro.models import ssm as S
+
+    dt = cfg.dtype
+    S_ = _kv_len(cfg, kind, max_len)
+    if kind in ("attn", "local_attn"):
+        shp = (batch, S_, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "moe_attn":
+        if cfg.mla:
+            return {
+                "c": jnp.zeros((batch, S_, cfg.kv_lora_rank), dt),
+                "krope": jnp.zeros((batch, S_, cfg.rope_head_dim), dt),
+            }
+        shp = (batch, S_, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "ssm":
+        return S.ssm_init_cache(cfg, batch, dt)
+    if kind == "rglru":
+        return R.rglru_init_cache(cfg, batch, dt)
+    raise ValueError(kind)
+
+
+def _assemble(cfg: ModelConfig, batch: int, layer_fn) -> dict:
+    pattern = cfg.layer_pattern
+    n_groups = cfg.num_layers // len(pattern)
+    rem = cfg.num_layers % len(pattern)
+
+    def stacked(kind):
+        one = layer_fn(kind)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+
+    return {
+        "groups": [stacked(kind) for kind in pattern] if n_groups else [],
+        "rem": [layer_fn(pattern[i % len(pattern)]) for i in range(rem)],
+        # PER-SLOT positions: each batch slot decodes at its own offset, so a
+        # continuous-batching engine can admit a new request into a recycled
+        # slot without disturbing its neighbours (serve/engine.py).
+        "step": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return _assemble(cfg, batch,
+                     lambda kind: init_layer_cache(cfg, kind, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Paged layout
+# ---------------------------------------------------------------------------
+
+def logical_pages(max_len: int, page_size: int) -> int:
+    """Page-table width: logical pages covering one slot's max_len tokens."""
+    return -(-max_len // page_size)
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Physical pages a request of n_tokens total (prompt + budget) needs."""
+    return -(-n_tokens // page_size)
+
+
+def init_paged_layer_cache(cfg: ModelConfig, kind: str, batch: int,
+                           max_len: int, num_pages: int, page_size: int) -> dict:
+    dt = cfg.dtype
+    if kind in PAGED_KINDS:
+        if kind == "moe_attn" and cfg.mla:
+            return {
+                "c_pages": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dt),
+                "krope_pages": jnp.zeros((num_pages, page_size, cfg.rope_head_dim), dt),
+            }
+        shp = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+        return {"k_pages": jnp.zeros(shp, dt), "v_pages": jnp.zeros(shp, dt)}
+    return init_layer_cache(cfg, kind, batch, max_len)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     num_pages: int, page_size: int | None = None) -> dict:
+    """Paged cache pytree: pools for unbounded-attention kinds, dense state
+    for bounded kinds, plus the shared slot→page table ``ptab``.
+
+    ``ptab[b, j]`` is the pool row backing slot b's logical page j (tokens
+    ``j·page_size .. (j+1)·page_size``); 0 (TRASH_PAGE) marks unmapped.
+    The same table indexes every layer's pool — each layer owns pool row i
+    for the same logical page.
+    """
+    ps = page_size or cfg.page_size
+    cache = _assemble(
+        cfg, batch,
+        lambda kind: init_paged_layer_cache(cfg, kind, batch, max_len,
+                                            num_pages, ps))
+    cache["ptab"] = jnp.zeros((batch, logical_pages(max_len, ps)), jnp.int32)
+    return cache
+
+
+def identity_ptab(cache: dict, batch: int) -> dict:
+    """Allocator-bypassing page table for direct-step harnesses (launchers,
+    conformance oracles): slot b owns pool rows b·NP+1 .. (b+1)·NP, row 0
+    stays the trash page. The engine's PageAllocator produces the same
+    layout class, just with arbitrary row permutations."""
+    NP = cache["ptab"].shape[1]
+    rows = 1 + jnp.arange(batch * NP, dtype=jnp.int32).reshape(batch, NP)
+    cache["ptab"] = rows
+    return cache
+
+
+def gather_pages(pool: jax.Array, ptab: jax.Array) -> jax.Array:
+    """Materialize the logical per-slot view of a pool.
+
+    pool (P, ps, ...), ptab (B, NP) -> (B, NP·ps, ...). Logical position t of
+    slot b lands at index t; unmapped pages gather the trash page (masked by
+    the callers' valid-length masks).
+    """
+    g = pool[ptab]  # (B, NP, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# Slot isolation: explicit axis tags (no shape guessing)
+# ---------------------------------------------------------------------------
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _in_groups(path) -> bool:
+    return any(hasattr(p, "key") and str(p.key) == "groups" for p in path)
+
+
+def slot_axes(cache) -> dict:
+    """Parallel pytree of per-leaf slot-axis tags.
+
+    Pool leaves (``*_pages``) carry NO_SLOT_AXIS — they are shared across
+    slots and isolated via ``ptab`` instead. Dense leaves carry the explicit
+    batch axis: 0 at the top level / "rem", 1 under the stacked "groups"
+    (whose leading axis is the layer-group stack — the axis the old
+    shape-matching reset confused with batch whenever n_groups happened to
+    equal batch_slots).
+    """
+    def tag(path, leaf):
+        name = _leaf_name(path)
+        if name.endswith("_pages"):
+            return NO_SLOT_AXIS
+        if name in ("step", "ptab"):
+            return 0
+        if leaf.ndim == 0:
+            return NO_SLOT_AXIS
+        return 1 if _in_groups(path) else 0
+
+    return jax.tree_util.tree_map_with_path(tag, cache)
+
+
+def reset_slot(cache, axes, s: int):
+    """Zero slot ``s`` in every dense leaf; pool leaves are left alone (their
+    isolation is the page table, which IS zeroed via its axis-0 tag)."""
+    def reset(x, ax):
+        if ax == NO_SLOT_AXIS:
+            return x
+        idx = (slice(None),) * ax + (s,)
+        return x.at[idx].set(0)
+
+    return jax.tree_util.tree_map(reset, cache, axes)
+
+
+# ---------------------------------------------------------------------------
+# Host-side page allocator
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free-list allocator over pool rows 1..num_pages-1 (row 0 = trash).
+
+    Self-checking: freeing a page that isn't outstanding raises, so
+    double-free / leak bugs in the scheduler surface as exceptions rather
+    than silent cache corruption.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (row 0 is the trash page)")
+        self.capacity = num_pages - 1
+        self._free = list(range(num_pages - 1, 0, -1))  # pop() -> low ids first
+        self._outstanding: set[int] = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def outstanding_count(self) -> int:
+        return len(self._outstanding)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._outstanding.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._outstanding:
+                raise ValueError(f"double-free / foreign page {p}")
+            self._outstanding.remove(p)
+            self._free.append(p)
+
+    def check(self) -> None:
+        """Invariant: every page is exactly one of {free, outstanding}."""
+        assert len(self._free) + len(self._outstanding) == self.capacity, \
+            (len(self._free), len(self._outstanding), self.capacity)
+        assert not (set(self._free) & self._outstanding)

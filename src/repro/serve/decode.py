@@ -1,20 +1,29 @@
-"""Single-token decode with KV caches, including distributed flash-decoding.
+"""Decode + chunked prefill over dense or paged KV caches.
 
-Decode-time attention at 32k+ context is memory-bandwidth-bound on the KV
-cache. Most assigned archs have too few KV heads to shard across a 16-way
-model axis (MQA/GQA-2/8), so the cache is sharded along the *sequence* axis
-instead and attention uses the flash-decoding combine: each model shard
-computes partial softmax statistics (m, l, o) over its KV slice, then a
-3-scalar-per-head ``pmax``/``psum`` combine replaces any KV all-gather.
+Single-token decode (``serve_step``) supports two cache layouts behind one
+interface (the layout is detected from the cache pytree, see serve/cache.py):
+
+* **dense** — (B, S, ...) per-slot tensors, including the distributed
+  flash-decoding leg: at 32k+ context the cache is sharded along the
+  *sequence* axis over the model mesh axis and attention uses the 3-scalar
+  ``pmax``/``psum`` combine instead of any KV all-gather.
+* **paged** — (num_pages, page_size, ...) pools + a slot→page table; reads
+  go through the Pallas paged-read kernel on TPU (kernels/flash_attn/paged)
+  or the XLA gather reference elsewhere, writes scatter one token into the
+  slot's current page.
+
+Chunked prefill (``prefill_step``) consumes C prompt tokens per call through
+the full forward path — flash attention over [cache ∪ chunk] at per-slot
+position offsets, chunk-parallel SSM/RG-LRU scans continuing the decode
+state — so a P-token prompt warms its cache in ⌈P/C⌉ engine ticks instead
+of P (serve/engine.py).
 
 Cache layout mirrors the parameter layout: {"groups": [stacked per pattern
-position], "rem": [...]} so the decode step scans over layer groups exactly
-like the forward pass.
+position], "rem": [...]} so both steps scan over layer groups exactly like
+the forward pass.
 """
 
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, embedding_for
 from repro.core.embedding import embed_lookup
+from repro.kernels.flash_attn import ops as FOPS
 from repro.models import attention as A
 from repro.models import ffn as F
 from repro.models import moe as M
@@ -30,64 +40,15 @@ from repro.models import ssm as S
 from repro.models.common import out_proj, qkv_proj, rmsnorm, rope_angles
 from repro.models.transformer import lm_logits_last
 from repro.parallel import meshctx
+from repro.serve.cache import gather_pages
+from repro.serve.cache import init_cache  # noqa: F401  (compat re-export)
+from repro.serve.cache import init_layer_cache  # noqa: F401  (compat re-export)
 
 NEG = jnp.float32(-1e30)
 
 
 # ---------------------------------------------------------------------------
-# Cache construction
-# ---------------------------------------------------------------------------
-
-def _kv_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
-    if kind == "local_attn":
-        return min(cfg.local_window, max_len)
-    return max_len
-
-
-def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> dict:
-    dt = cfg.dtype
-    S_ = _kv_len(cfg, kind, max_len)
-    if kind in ("attn", "local_attn"):
-        shp = (batch, S_, cfg.num_kv_heads, cfg.head_dim)
-        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
-    if kind == "moe_attn":
-        if cfg.mla:
-            return {
-                "c": jnp.zeros((batch, S_, cfg.kv_lora_rank), dt),
-                "krope": jnp.zeros((batch, S_, cfg.rope_head_dim), dt),
-            }
-        shp = (batch, S_, cfg.num_kv_heads, cfg.head_dim)
-        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
-    if kind == "ssm":
-        return S.ssm_init_cache(cfg, batch, dt)
-    if kind == "rglru":
-        return R.rglru_init_cache(cfg, batch, dt)
-    raise ValueError(kind)
-
-
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
-    pattern = cfg.layer_pattern
-    n_groups = cfg.num_layers // len(pattern)
-    rem = cfg.num_layers % len(pattern)
-
-    def stacked(kind):
-        one = init_layer_cache(cfg, kind, batch, max_len)
-        return jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
-
-    return {
-        "groups": [stacked(kind) for kind in pattern] if n_groups else [],
-        "rem": [init_layer_cache(cfg, pattern[i % len(pattern)], batch, max_len)
-                for i in range(rem)],
-        # PER-SLOT positions: each batch slot decodes at its own offset, so a
-        # continuous-batching engine can admit a new request into a recycled
-        # slot without disturbing its neighbours (serve/engine.py).
-        "step": jnp.zeros((batch,), jnp.int32),
-    }
-
-
-# ---------------------------------------------------------------------------
-# Sharded KV write + flash-decoding attention
+# Sharded KV write + flash-decoding attention (dense layout)
 # ---------------------------------------------------------------------------
 
 def _model_axis_active(cfg: ModelConfig) -> bool:
@@ -159,11 +120,9 @@ def mla_decode_attention(cfg, p_attn, x_tok, cache_c, cache_krope, slot, valid_l
     """Absorbed MLA decode with a seq-sharded latent cache. slot/valid (B,)."""
     dt = cfg.dtype
     c_new, kr_new = A.mla_cache_step(p_attn, cfg, x_tok, cos, sin)
-    H, Dh, R_ = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
-    q = jnp.einsum("bd,dhk->bhk", x_tok, p_attn["wq"].astype(dt))
-    q_nope, q_rope = q[..., :Dh], q[..., Dh:]
-    q_rope = A.apply_rope(q_rope[:, None], cos, sin)[:, 0]
-    q_abs = jnp.einsum("bhk,lhk->bhl", q_nope, p_attn["w_uk"].astype(dt))
+    Dh, R_ = cfg.head_dim, cfg.rope_head_dim
+    q_abs, q_rope = A.mla_absorbed_q(p_attn, cfg, x_tok[:, None], cos, sin)
+    q_abs, q_rope = q_abs[:, 0], q_rope[:, 0]
     scale = (Dh + R_) ** -0.5
 
     def partial_attn(qa, qr, cc, ckr, vlen, pos_offset):
@@ -223,14 +182,80 @@ def mla_decode_attention(cfg, p_attn, x_tok, cache_c, cache_krope, slot, valid_l
 
 
 # ---------------------------------------------------------------------------
+# Paged write + read
+# ---------------------------------------------------------------------------
+
+def _page_write(pool, ptab, pos, new):
+    """pool (P, ps, ...) <- new (B, ...) at logical positions pos (B,).
+
+    Idle slots carry all-zero ptab rows, so their writes land in the trash
+    page (serve/cache.py) — colliding updates there are never read.
+    """
+    ps = pool.shape[1]
+    B = pos.shape[0]
+    pid = ptab[jnp.arange(B), pos // ps]  # (B,)
+    return pool.at[pid, pos % ps].set(new.astype(pool.dtype))
+
+
+def _scatter_chunk(leaf, positions, valid, new):
+    """leaf (B, S, ...) <- new (B, C, ...) at per-slot positions (B, C);
+    invalid lanes are redirected one past the end and dropped. The single
+    home of the drop-sentinel idiom for dense chunk writes (ring, full
+    attention, MLA latents)."""
+    S_ = leaf.shape[1]
+    idx = jnp.where(valid, positions, S_)
+    b_idx = jnp.arange(leaf.shape[0])[:, None]
+    return leaf.at[b_idx, idx].set(new.astype(leaf.dtype), mode="drop")
+
+
+def _page_write_chunk(pool, ptab, step, lens, new):
+    """pool <- new (B, C, ...) at logical positions step+i for i < lens;
+    the ragged tail is redirected to the trash page."""
+    ps = pool.shape[1]
+    B, C = new.shape[0], new.shape[1]
+    pos = step[:, None] + jnp.arange(C)  # (B, C)
+    valid = jnp.arange(C)[None] < lens[:, None]
+    pid = ptab[jnp.arange(B)[:, None], jnp.minimum(pos // ps, ptab.shape[1] - 1)]
+    pid = jnp.where(valid, pid, 0)
+    return pool.at[pid, pos % ps].set(new.astype(pool.dtype))
+
+
+def paged_kv_decode_attention(cfg, q, k_new, v_new, pool_k, pool_v, ptab, step):
+    """Paged decode read: write the new token into its slot's current page,
+    then attend over the slot's logical view.
+
+    TPU routes through the Pallas paged-read kernel (scalar-prefetched page
+    table, no gathered intermediate); elsewhere the XLA gather ref runs.
+    """
+    pool_k = _page_write(pool_k, ptab, step, k_new)
+    pool_v = _page_write(pool_v, ptab, step, v_new)
+    out = FOPS.paged_attention(q, pool_k, pool_v, ptab, step + 1,
+                               use_kernel=cfg.use_kernels)
+    return out.astype(q.dtype), pool_k, pool_v
+
+
+def paged_mla_decode_attention(cfg, p_attn, x_tok, pool_c, pool_krope, ptab, step, cos, sin):
+    """Absorbed MLA decode over paged latent pools (gather read)."""
+    c_new, kr_new = A.mla_cache_step(p_attn, cfg, x_tok, cos, sin)
+    pool_c = _page_write(pool_c, ptab, step, c_new)
+    pool_krope = _page_write(pool_krope, ptab, step, kr_new)
+    cc = gather_pages(pool_c, ptab)  # (B, NP*ps, L)
+    ckr = gather_pages(pool_krope, ptab)
+    out = A.mla_decode(p_attn, cfg, x_tok, cc, ckr, step + 1, cos, sin)
+    return out, pool_c, pool_krope
+
+
+# ---------------------------------------------------------------------------
 # Per-block decode step
 # ---------------------------------------------------------------------------
 
-def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r=None, sin_r=None):
+def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin,
+                 cos_r=None, sin_r=None, ptab=None):
     """x (B, d) one token at per-slot positions step (B,); returns (x, cache)."""
     dt = cfg.dtype
     h = rmsnorm(p["ln1"], x)
     tile = getattr(cfg, "linear_tile", None)
+    paged = "k_pages" in cache or "c_pages" in cache
     if kind in ("attn", "local_attn"):
         q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
         k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
@@ -240,32 +265,55 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r
             k = rmsnorm(p["attn"]["k_norm"], k)
         q = A.apply_rope(q[:, None], cos, sin)[:, 0]
         k = A.apply_rope(k[:, None], cos, sin)[:, 0]
-        W = cache["k"].shape[1]
-        if kind == "local_attn":
-            slot = step % W  # per-slot ring buffer
-            valid = jnp.minimum(step + 1, W)
+        if paged:  # full attention only; local_attn rings stay dense
+            o, pk, pv = paged_kv_decode_attention(
+                cfg, q, k, v, cache["k_pages"], cache["v_pages"], ptab, step)
+            new_cache = {"k_pages": pk, "v_pages": pv}
         else:
-            slot = step
-            valid = step + 1
-        o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"], slot, valid)
+            W = cache["k"].shape[1]
+            if kind == "local_attn":
+                slot = step % W  # per-slot ring buffer
+                valid = jnp.minimum(step + 1, W)
+            else:
+                slot = step
+                valid = step + 1
+            o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"],
+                                            slot, valid)
+            new_cache = {"k": ck, "v": cv}
         x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], cfg.mlp_type, dt,
                       dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
-        return x, {"k": ck, "v": cv}
+        return x, new_cache
     if kind == "moe_attn":
         if cfg.mla:
-            o, cc, ckr = mla_decode_attention(
-                cfg, p["attn"], h, cache["c"], cache["krope"], step, step + 1, cos_r, sin_r)
-            new_cache = {"c": cc, "krope": ckr}
+            if paged:
+                o, cc, ckr = paged_mla_decode_attention(
+                    cfg, p["attn"], h, cache["c_pages"], cache["krope_pages"],
+                    ptab, step, cos_r, sin_r)
+                new_cache = {"c_pages": cc, "krope_pages": ckr}
+            else:
+                o, cc, ckr = mla_decode_attention(
+                    cfg, p["attn"], h, cache["c"], cache["krope"], step, step + 1,
+                    cos_r, sin_r)
+                new_cache = {"c": cc, "krope": ckr}
         else:
             q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
             k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
             v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+            if cfg.qk_norm:  # must mirror training/prefill (attention_qkv)
+                q = rmsnorm(p["attn"]["q_norm"], q)
+                k = rmsnorm(p["attn"]["k_norm"], k)
             q = A.apply_rope(q[:, None], cos, sin)[:, 0]
             k = A.apply_rope(k[:, None], cos, sin)[:, 0]
-            o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"], step, step + 1)
+            if paged:
+                o, pk, pv = paged_kv_decode_attention(
+                    cfg, q, k, v, cache["k_pages"], cache["v_pages"], ptab, step)
+                new_cache = {"k_pages": pk, "v_pages": pv}
+            else:
+                o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"],
+                                                step, step + 1)
+                new_cache = {"k": ck, "v": cv}
             o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
-            new_cache = {"k": ck, "v": cv}
         x = x + o
         moe_out, _ = M.moe_block(p["moe"], cfg, rmsnorm(p["ln2"], x)[:, None])
         return x + moe_out[:, 0], new_cache
@@ -283,8 +331,10 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin, cos_r
 
 def serve_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
     """tokens (B,) -> (logits (B, vocab), new cache). One decode step at
-    per-slot positions cache["step"] (B,)."""
+    per-slot positions cache["step"] (B,). Cache layout (dense vs paged) is
+    detected from the pytree."""
     step = cache["step"]  # (B,)
+    ptab = cache.get("ptab")
     ecfg = embedding_for(cfg)
     x = embed_lookup(ecfg, params["embed"], tokens).astype(cfg.dtype)
     cos, sin = rope_angles(step[:, None], cfg.head_dim, cfg.rope_theta)  # (B,1,half)
@@ -298,7 +348,8 @@ def serve_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
             new_caches = []
             for pos_i, kind in enumerate(pattern):
                 x, nc = decode_block(per_group_params[pos_i], cfg, kind, x,
-                                     per_group_cache[pos_i], step, cos, sin, cos_r, sin_r)
+                                     per_group_cache[pos_i], step, cos, sin,
+                                     cos_r, sin_r, ptab)
                 new_caches.append(nc)
             return x, tuple(new_caches)
 
@@ -310,10 +361,196 @@ def serve_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
     for i, p_layer in enumerate(params["rem"]):
         kind = pattern[i % len(pattern)]
         x, nc = decode_block(p_layer, cfg, kind, x, cache["rem"][i], step, cos, sin,
-                             cos_r, sin_r)
+                             cos_r, sin_r, ptab)
         new_rem.append(nc)
 
     x = rmsnorm(params["final_norm"], x)
     logits = lm_logits_last(params, cfg, x)
     new_cache = {"groups": new_groups, "rem": new_rem, "step": step + 1}
+    if ptab is not None:
+        new_cache["ptab"] = ptab
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: C prompt tokens per call through the full forward path
+# ---------------------------------------------------------------------------
+
+def _chunk_attention(cfg, kind, p_attn, h, cache, ptab, step, lens, cos, sin):
+    """Attention for a prompt chunk h (B, C, d) continuing per-slot caches.
+
+    Full attention: scatter the chunk's K/V into the cache (fresh positions,
+    write-before-read is safe), then flash-attend over the slot's whole
+    logical view with per-slot query offsets. Local-window attention:
+    attend over [ring ∪ chunk] with explicit absolute key positions FIRST,
+    then scatter — the chunk may overwrite ring entries that earlier chunk
+    positions still need. Returns (o (B, C, H, Dh), new layer cache).
+    """
+    C = h.shape[1]
+    q, k, v = A.attention_qkv(p_attn, cfg, h, cos, sin)
+    pos = step[:, None] + jnp.arange(C)  # (B, C) absolute positions
+    valid = jnp.arange(C)[None] < lens[:, None]
+
+    if kind == "local_attn":  # dense ring buffer
+        ck, cv = cache["k"], cache["v"]
+        RS = ck.shape[1]
+        if C > RS:
+            raise ValueError(
+                f"prefill_chunk={C} exceeds the local-attention ring ({RS}); "
+                "clamp the chunk (serve/engine.py does) or shrink it")
+        # reconstruct each ring slot's absolute position: the largest
+        # p ≡ j (mod RS) with p < step_b; -1 marks never-written slots
+        j = jnp.arange(RS)[None]
+        base = step[:, None] - 1
+        ring_pos = base - ((base - j) % RS)
+        ring_pos = jnp.where((step[:, None] > 0) & (ring_pos >= 0), ring_pos, -1)
+        kv_pos = jnp.concatenate(
+            [ring_pos, jnp.where(valid, pos, -1)], axis=1)  # (B, RS+C)
+        k_cat = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
+        v_cat = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
+        o = A.flash_attention(q, k_cat, v_cat, causal=True,
+                              window=cfg.local_window, chunk=cfg.attn_chunk,
+                              q_offset=step, kv_pos=kv_pos)
+        ck = _scatter_chunk(ck, pos % RS, valid, k)
+        cv = _scatter_chunk(cv, pos % RS, valid, v)
+        return o, {"k": ck, "v": cv}
+
+    if "k_pages" in cache:  # paged full attention
+        pk = _page_write_chunk(cache["k_pages"], ptab, step, lens, k)
+        pv = _page_write_chunk(cache["v_pages"], ptab, step, lens, v)
+        gk, gv = gather_pages(pk, ptab), gather_pages(pv, ptab)
+        o = A.flash_attention(q, gk, gv, causal=True, chunk=cfg.attn_chunk,
+                              q_offset=step)
+        return o, {"k_pages": pk, "v_pages": pv}
+
+    ck = _scatter_chunk(cache["k"], pos, valid, k)  # dense full attention
+    cv = _scatter_chunk(cache["v"], pos, valid, v)
+    o = A.flash_attention(q, ck, cv, causal=True, chunk=cfg.attn_chunk,
+                          q_offset=step)
+    return o, {"k": ck, "v": cv}
+
+
+def _chunk_mla_attention(cfg, p_attn, h, cache, ptab, step, lens, cos_r, sin_r):
+    """Absorbed MLA over a chunk: scatter latents, then causal-masked scores
+    against the slot's logical latent view. h (B, C, d) -> (B, C, d)."""
+    dt = cfg.dtype
+    C = h.shape[1]
+    Dh, R_ = cfg.head_dim, cfg.rope_head_dim
+    c_new, kr_new = A.mla_latents(p_attn, cfg, h, cos_r, sin_r)
+
+    if "c_pages" in cache:
+        pc = _page_write_chunk(cache["c_pages"], ptab, step, lens, c_new)
+        pkr = _page_write_chunk(cache["krope_pages"], ptab, step, lens, kr_new)
+        cc, ckr = gather_pages(pc, ptab), gather_pages(pkr, ptab)
+        new_cache = {"c_pages": pc, "krope_pages": pkr}
+    else:
+        pos_w = step[:, None] + jnp.arange(C)
+        valid = jnp.arange(C)[None] < lens[:, None]
+        cc = _scatter_chunk(cache["c"], pos_w, valid, c_new)
+        ckr = _scatter_chunk(cache["krope"], pos_w, valid, kr_new)
+        new_cache = {"c": cc, "krope": ckr}
+
+    q_abs, q_rope = A.mla_absorbed_q(p_attn, cfg, h, cos_r, sin_r)
+    scale = (Dh + R_) ** -0.5
+
+    s = jnp.einsum("bchl,bsl->bhcs", q_abs, cc, preferred_element_type=jnp.float32)
+    s += jnp.einsum("bchr,bsr->bhcs", q_rope, ckr, preferred_element_type=jnp.float32)
+    s *= scale
+    kpos = jnp.arange(cc.shape[1])
+    qpos = step[:, None] + jnp.arange(C)
+    mask = kpos[None, None, :] <= qpos[:, :, None]  # (B, C, S)
+    s = jnp.where(mask[:, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_l = jnp.einsum("bhcs,bsl->bchl", p.astype(dt), cc)
+    ctx = jnp.einsum("bchl,lhk->bchk", ctx_l, p_attn["w_uv"].astype(dt))
+    return jnp.einsum("bchk,hkd->bcd", ctx, p_attn["wo"].astype(dt)), new_cache
+
+
+def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, ptab, step, lens,
+                  cos, sin, cos_r=None, sin_r=None):
+    """x (B, C, d) chunk continuing per-slot caches at offsets step (B,);
+    rows past lens_b are garbage (ignored downstream). Returns (x, cache)."""
+    dt = cfg.dtype
+    tile = getattr(cfg, "linear_tile", None)
+    h = rmsnorm(p["ln1"], x)
+    if kind in ("attn", "local_attn"):
+        o, new_cache = _chunk_attention(cfg, kind, p["attn"], h, cache, ptab,
+                                        step, lens, cos, sin)
+        x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), cfg.mlp_type, dt,
+                      dims=(cfg.d_model, cfg.d_ff), tile=tile)
+        return x, new_cache
+    if kind == "moe_attn":
+        if cfg.mla:
+            o, new_cache = _chunk_mla_attention(cfg, p["attn"], h, cache, ptab,
+                                                step, lens, cos_r, sin_r)
+        else:
+            o, new_cache = _chunk_attention(cfg, kind, p["attn"], h, cache, ptab,
+                                            step, lens, cos, sin)
+            o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+        x = x + o
+        moe_out, _ = M.moe_block(p["moe"], cfg, rmsnorm(p["ln2"], x))
+        return x + moe_out, new_cache
+    if kind == "ssm":
+        out, new_cache = S.ssm_prefill_chunk(p["ssm"], cfg, h, lens, cache)
+        return x + out, new_cache
+    if kind == "rglru":
+        out, new_cache = R.rglru_prefill_chunk(p["rec"], cfg, h, lens, cache)
+        x = x + out
+        x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "geglu", dt,
+                      dims=(cfg.d_model, cfg.d_ff), tile=tile)
+        return x, new_cache
+    raise ValueError(kind)
+
+
+def prefill_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                 lens: jax.Array):
+    """Chunked batched prefill: tokens (B, C) prompt chunks at per-slot
+    offsets cache["step"], per-slot valid lengths lens (B,) (0 = idle slot).
+
+    Returns (logits (B, vocab) at each slot's LAST VALID chunk position —
+    meaningful only for slots whose prompt ends in this chunk — and the new
+    cache with step advanced by lens). One call == one engine tick; a
+    P-token prompt prefills in ⌈P/C⌉ ticks.
+    """
+    step = cache["step"]  # (B,)
+    ptab = cache.get("ptab")
+    B, C = tokens.shape
+    ecfg = embedding_for(cfg)
+    x = embed_lookup(ecfg, params["embed"], tokens).astype(cfg.dtype)  # (B,C,d)
+    pos = step[:, None] + jnp.arange(C)  # (B, C)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)  # (B,C,half)
+    cos_r, sin_r = rope_angles(pos, cfg.rope_head_dim, cfg.rope_theta)
+    pattern = cfg.layer_pattern
+
+    new_groups = []
+    if params["groups"]:
+        def scan_body(x, xs):
+            per_group_params, per_group_cache = xs
+            new_caches = []
+            for pos_i, kind in enumerate(pattern):
+                x, nc = prefill_block(per_group_params[pos_i], cfg, kind, x,
+                                      per_group_cache[pos_i], ptab, step, lens,
+                                      cos, sin, cos_r, sin_r)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, stacked_new = jax.lax.scan(
+            scan_body, x, (tuple(params["groups"]), tuple(cache["groups"])))
+        new_groups = list(stacked_new)
+
+    new_rem = []
+    for i, p_layer in enumerate(params["rem"]):
+        kind = pattern[i % len(pattern)]
+        x, nc = prefill_block(p_layer, cfg, kind, x, cache["rem"][i], ptab, step,
+                              lens, cos, sin, cos_r, sin_r)
+        new_rem.append(nc)
+
+    x = rmsnorm(params["final_norm"], x)
+    last = jnp.clip(lens - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last]  # (B, d) each slot's last valid position
+    logits = lm_logits_last(params, cfg, x_last)
+    new_cache = {"groups": new_groups, "rem": new_rem, "step": step + lens}
+    if ptab is not None:
+        new_cache["ptab"] = ptab
     return logits, new_cache

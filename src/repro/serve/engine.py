@@ -1,28 +1,46 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine: chunked prefill + paged KV cache.
 
-Production serving substrate over the single-token ``serve_step``: a slot-
-based scheduler keeps a fixed decode batch full, admitting queued requests
-into free slots (prefill-by-decode for simplicity: prompt tokens are fed
-through the decode path to warm the slot's cache — exact for every cache
-kind, since stepwise decode == full forward, see tests/test_moe_and_serve).
+The scheduler keeps a fixed decode batch full over two jitted step
+functions (never retraced — admissions only touch host bookkeeping, the
+page table, and slot resets):
 
-Per-slot state lives in the *batched* cache tensors; admissions only write
-host-side bookkeeping + reset slot columns, so the jitted step function is
-never retraced. EOS or max-tokens retires a slot.
+* **prefill (mixed) ticks** — while any slot holds unconsumed prompt
+  tokens, one tick pushes a chunk of up to ``prefill_chunk`` tokens *per
+  prefilling slot* through ``serve/decode.prefill_step`` (full
+  chunk-parallel forward: flash attention over [cache ∪ chunk],
+  chunk-parallel SSM/RG-LRU scans), while slots already decoding ride the
+  same tick as length-1 chunks — prefill never starves in-flight decodes.
+  A P-token prompt warms its cache in ⌈P/prefill_chunk⌉ ticks; the last
+  chunk's final-position logits seed the first sampled token.
+* **decode ticks** — one token for every decoding slot through the
+  (cheaper, chunk-free) decode step, as before.
+
+Memory is governed by a **page budget**: with ``cache_mode="paged"``
+(default) unbounded-attention KV lives in ``(num_pages, page_size, ...)``
+pools (serve/cache.py) and admission *blocks FIFO* until the free list
+covers the request's worst case (⌈(prompt+max_new)/page_size⌉ pages —
+reservation up front means no mid-decode eviction). Retirement returns the
+pages and immediately re-points the slot's page-table row at the trash
+page. SSM/RG-LRU state and local-attention rings stay dense behind the
+same cache-kind interface.
+
+Slot isolation uses the explicit axis-tag pytree (serve/cache.slot_axes):
+each leaf is reset along its *tagged* batch axis — never by guessing which
+axis happens to equal ``batch_slots`` (stacked layer-group leaves carry a
+leading group-stack axis that such guessing confuses with batch).
 
 Serving-grade quantization: ``quantize_params`` / ``dequantize_params``
-(re-exported from core/quant) are the post-training calibration roundtrip —
-max-abs-calibrate every ket factor/leaf stack into the int8/fp8 wire format
-(dense arrays untouched), and expand back to floats. The engine accepts
-either representation: the model's apply paths dequantize on read (fused
-in-kernel on the Pallas path), so a quantized checkpoint decodes through
-the identical step function. Construct with ``quant="int8"|"fp8"`` to
-calibrate fp params at admission time.
+(re-exported from core/quant) are the post-training calibration roundtrip;
+construct with ``quant="int8"|"fp8"`` to calibrate fp params at admission.
+``prefill_mode="stepwise"`` keeps the legacy prefill-by-decode path (one
+prompt token per tick through the decode step) — the benchmark baseline
+and a conformance differential.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Optional
@@ -34,8 +52,23 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.quant import dequantize_params, quantize_params
 from repro.models import model as MD
+from repro.serve.cache import (PAGED_KINDS, PageAllocator, logical_pages,
+                               pages_needed, reset_slot, slot_axes)
 
 __all__ = ["Request", "ServingEngine", "quantize_params", "dequantize_params"]
+
+
+# module-level jitted entry points (cfg is a hashable frozen dataclass):
+# every engine over the same config shares one compilation cache instead of
+# re-tracing per instance
+@functools.partial(jax.jit, static_argnums=(0,))
+def _jit_step(cfg, params, cache, tokens):
+    return MD.serve_step_fn(params, cfg, cache, tokens)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _jit_prefill(cfg, params, cache, tokens, lens):
+    return MD.prefill_chunk_fn(params, cfg, cache, tokens, lens)
 
 
 @dataclasses.dataclass
@@ -53,7 +86,15 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 8,
                  max_len: int = 512, greedy: bool = True, seed: int = 0,
-                 quant: str = "none"):
+                 quant: str = "none", cache_mode: str = "paged",
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_mode: str = "chunked"):
+        if cache_mode not in ("paged", "dense"):
+            raise ValueError(cache_mode)
+        if prefill_mode not in ("chunked", "stepwise"):
+            raise ValueError(prefill_mode)
         self.cfg = cfg
         # post-training calibration: quantize ket factors to the wire format
         # once at admission; no-op for already-quantized or "none"
@@ -62,78 +103,184 @@ class ServingEngine:
         self.max_len = max_len
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
+        self.cache_mode = cache_mode
+        self.prefill_mode = prefill_mode
+        self.page_size = page_size or cfg.page_size
 
-        self.cache = MD.init_cache(cfg, batch_slots, max_len)
-        self._step = jax.jit(lambda p, c, t: MD.serve_step_fn(p, cfg, c, t))
+        chunk = prefill_chunk or cfg.prefill_chunk
+        if "local_attn" in cfg.layer_pattern:
+            # chunk scatter into a ring of RS slots must be collision-free
+            chunk = min(chunk, min(cfg.local_window, max_len))
+        self.prefill_chunk = max(1, chunk)
+
+        if cache_mode == "paged":
+            if num_pages is None:  # full capacity: every slot can reach max_len
+                num_pages = batch_slots * logical_pages(max_len, self.page_size) + 1
+            self.allocator: Optional[PageAllocator] = PageAllocator(num_pages)
+            self.cache = MD.init_cache(cfg, batch_slots, max_len, paged=True,
+                                       num_pages=num_pages,
+                                       page_size=self.page_size)
+        else:
+            self.allocator = None
+            self.cache = MD.init_cache(cfg, batch_slots, max_len)
+        self._axes = slot_axes(self.cache)
+        self._needs_pages = (self.allocator is not None
+                             and any(k in PAGED_KINDS for k in cfg.layer_pattern))
+
+        self._step = functools.partial(_jit_step, cfg)
+        self._prefill = functools.partial(_jit_prefill, cfg)
+
         # slot bookkeeping (host side)
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_pending: list[deque] = [deque() for _ in range(batch_slots)]
         self.slot_new: list[int] = [0] * batch_slots
+        self.slot_pages: list[list[int]] = [[] for _ in range(batch_slots)]
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
         self._cur_tokens = np.zeros((batch_slots,), np.int32)
+        self.prefill_ticks = 0
+        self.decode_ticks = 0
+        self._busy_s = 0.0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({len(req.prompt)}) + max_new({req.max_new_tokens}) "
+                f"exceeds max_len={self.max_len}")
+        if self._needs_pages and self._pages_for(req) > self.allocator.capacity:
+            raise ValueError(
+                f"request needs {self._pages_for(req)} pages but the pool "
+                f"only has {self.allocator.capacity}: it could never admit")
         req.submitted_at = time.time()
         self.queue.append(req)
 
+    def _pages_for(self, req: Request) -> int:
+        # worst-case reservation up front: admission blocks rather than a
+        # mid-decode allocation failing (no eviction/preemption machinery)
+        return pages_needed(len(req.prompt) + req.max_new_tokens, self.page_size)
+
     def _admit(self):
         for s in range(self.B):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                self.slot_req[s] = req
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            pages: list[int] = []
+            if self._needs_pages:
+                got = self.allocator.alloc(self._pages_for(req))
+                if got is None:
+                    return  # page budget exhausted: block FIFO (no skipping)
+                pages = got
+            self.queue.popleft()
+            self.slot_req[s] = req
+            self.slot_new[s] = 0
+            self.slot_pages[s] = pages
+            # engine-level cache isolation: zero the slot along the tagged
+            # axes (clears dense state, the step counter, and the ptab row)
+            self.cache = reset_slot(self.cache, self._axes, s)
+            if "ptab" in self.cache and pages:
+                row = np.zeros((self.cache["ptab"].shape[1],), np.int32)
+                row[:len(pages)] = pages
+                self.cache["ptab"] = self.cache["ptab"].at[s].set(jnp.asarray(row))
+            if self.prefill_mode == "chunked":
                 self.slot_pending[s] = deque(req.prompt)
-                self.slot_new[s] = 0
-                # engine-level cache isolation: zero the slot's columns
-                self.cache = jax.tree_util.tree_map(
-                    lambda x: self._reset_slot(x, s), self.cache)
-                self._cur_tokens[s] = self.slot_pending[s].popleft() \
-                    if self.slot_pending[s] else 0
+                self._cur_tokens[s] = 0
+            else:  # stepwise: first prompt token feeds the next decode tick
+                self.slot_pending[s] = deque(req.prompt)
+                self._cur_tokens[s] = self.slot_pending[s].popleft()
 
-    def _reset_slot(self, x, s):
-        # cache leaves have a batch dim somewhere in {0 (scalars excluded), 1}
-        if x.ndim == 0:
-            return x
-        for axis in range(x.ndim):
-            if x.shape[axis] == self.B:
-                idx = [slice(None)] * x.ndim
-                idx[axis] = s
-                return x.at[tuple(idx)].set(0)
-        return x
+    def _retire(self, s: int, req: Request):
+        req.finished_at = time.time()
+        self.done.append(req)
+        self.slot_req[s] = None
+        self._cur_tokens[s] = 0
+        if self.slot_pages[s]:
+            self.allocator.free(self.slot_pages[s])
+            self.slot_pages[s] = []
+        if "ptab" in self.cache:
+            # re-point the idle slot at the trash page NOW: its masked decode
+            # writes must not land in pages a future request may own
+            self.cache["ptab"] = self.cache["ptab"].at[s].set(0)
+
+    def _emit(self, s: int, req: Request, tok: int):
+        """Record one sampled token; retire on EOS / max-new."""
+        req.output.append(tok)
+        self.slot_new[s] += 1
+        finished = (self.slot_new[s] >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id))
+        if finished:
+            self._retire(s, req)
+        else:
+            self._cur_tokens[s] = tok
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(k, logits), np.int32)
 
     # ------------------------------------------------------------------
-    def step(self):
-        """One engine tick: one model step for the whole batch."""
-        self._admit()
+    def _prefill_tick(self):
+        """Mixed tick: prefilling slots consume up to C prompt tokens; slots
+        already decoding ride along as length-1 chunks (prefill_step is the
+        stepwise decode for C==1), so prefill pressure never stalls them."""
+        C = self.prefill_chunk
+        toks = np.zeros((self.B, C), np.int32)
+        lens = np.zeros((self.B,), np.int32)
+        was_decoding = [False] * self.B
+        for s in range(self.B):
+            if self.slot_req[s] is None:
+                continue
+            if self.slot_pending[s]:
+                n = min(C, len(self.slot_pending[s]))
+                for i in range(n):
+                    toks[s, i] = self.slot_pending[s].popleft()
+                lens[s] = n
+            else:
+                was_decoding[s] = True
+                toks[s, 0] = self._cur_tokens[s]
+                lens[s] = 1
+        logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(lens))
+        self.prefill_ticks += 1
+        nxt = self._sample(logits)
+        for s in range(self.B):
+            req = self.slot_req[s]
+            if req is None or lens[s] == 0:
+                continue  # idle slot
+            if not was_decoding[s] and self.slot_pending[s]:
+                continue  # still mid-prompt: logits row not meaningful yet
+            # piggybacked decode, or prompt done (first token samples here)
+            self._emit(s, req, int(nxt[s]))
+
+    def _decode_tick(self):
         toks = jnp.asarray(self._cur_tokens)
         logits, self.cache = self._step(self.params, self.cache, toks)
-        if self.greedy:
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        else:
-            self.key, k = jax.random.split(self.key)
-            nxt = np.asarray(jax.random.categorical(k, logits), np.int32)
-
+        self.decode_ticks += 1
+        nxt = self._sample(logits)
         for s in range(self.B):
             req = self.slot_req[s]
             if req is None:
                 continue
             if self.slot_pending[s]:
-                # still prefilling: feed the next prompt token, ignore sample
+                # stepwise prefill: feed the next prompt token, ignore sample
                 self._cur_tokens[s] = self.slot_pending[s].popleft()
                 continue
-            tok = int(nxt[s])
-            req.output.append(tok)
-            self.slot_new[s] += 1
-            finished = (self.slot_new[s] >= req.max_new_tokens
-                        or (req.eos_id is not None and tok == req.eos_id))
-            if finished:
-                req.finished_at = time.time()
-                self.done.append(req)
-                self.slot_req[s] = None
-                self._cur_tokens[s] = 0
-            else:
-                self._cur_tokens[s] = tok
+            self._emit(s, req, int(nxt[s]))
+
+    def step(self):
+        """One engine tick: one jitted model call for the whole batch."""
+        t0 = time.time()
+        self._admit()
+        prefilling = any(self.slot_req[s] is not None and self.slot_pending[s]
+                         for s in range(self.B))
+        if self.prefill_mode == "chunked" and prefilling:
+            self._prefill_tick()
+        else:
+            self._decode_tick()
+        self._busy_s += time.time() - t0
 
     def run_until_drained(self, max_ticks: int = 10_000):
         ticks = 0
@@ -143,8 +290,29 @@ class ServingEngine:
             ticks += 1
         return ticks
 
+    # ------------------------------------------------------------------
+    def page_stats(self) -> dict:
+        if self.allocator is None:
+            return {"free_pages": None, "page_capacity": None}
+        return {"free_pages": self.allocator.free_count,
+                "page_capacity": self.allocator.capacity}
+
     def stats(self) -> dict:
         lat = [r.finished_at - r.submitted_at for r in self.done if r.finished_at]
         toks = sum(len(r.output) for r in self.done)
-        return {"completed": len(self.done), "generated_tokens": toks,
-                "p50_latency_s": float(np.median(lat)) if lat else None}
+        prompt_toks = sum(len(r.prompt) for r in self.done)
+        busy = max(self._busy_s, 1e-9)
+        out = {
+            "completed": len(self.done),
+            "generated_tokens": toks,
+            "prompt_tokens": prompt_toks,
+            "p50_latency_s": float(np.median(lat)) if lat else None,
+            "p95_latency_s": float(np.percentile(lat, 95)) if lat else None,
+            "tokens_per_sec": toks / busy,
+            "prompt_tokens_per_sec": prompt_toks / busy,
+            "prefill_ticks": self.prefill_ticks,
+            "decode_ticks": self.decode_ticks,
+            "ticks": self.prefill_ticks + self.decode_ticks,
+        }
+        out.update(self.page_stats())
+        return out

@@ -1,5 +1,6 @@
-"""Flash-attention Pallas kernel vs naive-softmax oracle: shape/GQA/window
-sweeps in interpret mode + gradient agreement via the custom VJP."""
+"""Flash-attention Pallas kernels vs naive-softmax oracles: shape/GQA/window
+sweeps in interpret mode, gradient agreement via the custom VJP, and the
+paged-read decode kernel vs the gather-based reference."""
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attn.ops import flash_attention
-from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.flash_attn.paged import paged_attention_pallas
+from repro.kernels.flash_attn.ref import attention_ref, paged_attention_ref
 
 CASES = [
     # (B, Sq, Skv, H, KVH, Dh, causal, window, bq, bk)
@@ -69,3 +71,100 @@ def test_model_flash_matches_kernel():
     a = model_flash(q, k, v, causal=True, window=8, chunk=8)
     b = flash_attention(q, k, v, True, 8, 8, 8)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_model_flash_offset_positions_match_zero_based():
+    """q_offset/kv_pos generalization: shifting queries AND key positions by
+    a per-batch constant reproduces the zero-based masks exactly."""
+    from repro.models.attention import flash_attention as model_flash
+    key = jax.random.PRNGKey(7)
+    B, S = 2, 12
+    q = jax.random.normal(key, (B, S, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, 16))
+    base = model_flash(q, k, v, causal=True, window=5, chunk=8)
+    off = jnp.array([3, 40])
+    kv_pos = off[:, None] + jnp.arange(S)[None]
+    shifted = model_flash(q, k, v, causal=True, window=5, chunk=8,
+                          q_offset=off, kv_pos=kv_pos)
+    np.testing.assert_allclose(np.asarray(shifted), np.asarray(base),
+                               rtol=2e-5, atol=2e-6)
+    # kv_pos < 0 marks invalid keys: masking the first two keys equals
+    # attending over the suffix
+    kv_pos2 = jnp.where(jnp.arange(S)[None] < 2, -1, jnp.arange(S)[None])
+    kv_pos2 = jnp.broadcast_to(kv_pos2, (B, S))
+    masked = model_flash(q[:, 2:], k, v, causal=True, chunk=8,
+                         q_offset=jnp.array([2, 2]), kv_pos=kv_pos2)
+    suffix = model_flash(q[:, 2:], k[:, 2:], v[:, 2:], causal=True, chunk=8)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(suffix),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged-read decode kernel vs gather-based oracle
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # (B, H, KVH, Dh, page_size, num_pages, logical_pages, lens)
+    (2, 4, 2, 16, 4, 9, 4, (13, 16)),     # GQA-2, ragged last page
+    (3, 4, 1, 32, 8, 7, 2, (9, 16, 1)),   # MQA, single-token seq
+    (1, 8, 8, 64, 4, 5, 4, (15,)),        # MHA
+    (2, 6, 3, 16, 2, 17, 8, (0, 11)),     # idle slot (lens 0) + odd GQA
+]
+
+
+def _random_paged(key, B, KVH, Dh, ps, P, NP):
+    kp = jax.random.normal(jax.random.fold_in(key, 1), (P, ps, KVH, Dh))
+    vp = jax.random.normal(jax.random.fold_in(key, 2), (P, ps, KVH, Dh))
+    # each slot owns a disjoint random set of non-trash pages
+    perm = np.asarray(jax.random.permutation(jax.random.fold_in(key, 3), P - 1)) + 1
+    ptab = jnp.asarray(perm[:B * NP].reshape(B, NP), jnp.int32)
+    return kp, vp, ptab
+
+
+@pytest.mark.parametrize("B,H,KVH,Dh,ps,P,NP,lens", PAGED_CASES)
+def test_paged_kernel_matches_gather_ref(B, H, KVH, Dh, ps, P, NP, lens):
+    assert (P - 1) >= B * NP
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray(lens, jnp.int32)
+    out = paged_attention_pallas(q, kp, vp, ptab, lens, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, ptab, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_paged_ref_matches_dense_decode():
+    """The gather oracle itself equals single-query dense attention over the
+    assembled logical view (closing the loop back to attention_ref)."""
+    B, H, KVH, Dh, ps, P, NP = 2, 4, 2, 16, 4, 11, 3
+    key = jax.random.PRNGKey(12)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray([7, 12], jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, ptab, lens)
+    for b in range(B):
+        n = int(lens[b])
+        gk = kp[ptab[b]].reshape(-1, KVH, Dh)[:n][None]
+        gv = vp[ptab[b]].reshape(-1, KVH, Dh)[:n][None]
+        dense = attention_ref(q[b:b + 1, None], gk, gv, causal=False)[0, 0]
+        np.testing.assert_allclose(np.asarray(ref[b]), np.asarray(dense),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_paged_kernel_ignores_trash_page_contents():
+    """Unmapped table entries point at the trash page; poisoning it with
+    huge values must not perturb any sequence's output."""
+    B, H, KVH, Dh, ps, P, NP = 2, 2, 1, 16, 4, 9, 4
+    key = jax.random.PRNGKey(13)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, _ = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    ptab = jnp.asarray([[1, 2, 0, 0], [3, 4, 5, 0]], jnp.int32)
+    lens = jnp.asarray([6, 12], jnp.int32)
+    base = paged_attention_pallas(q, kp, vp, ptab, lens, interpret=True)
+    kp2 = kp.at[0].set(1e9)
+    vp2 = vp.at[0].set(1e9)
+    poisoned = paged_attention_pallas(q, kp2, vp2, ptab, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(poisoned), np.asarray(base),
+                               rtol=2e-6, atol=2e-7)

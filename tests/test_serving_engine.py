@@ -1,4 +1,5 @@
-"""Continuous-batching engine: correctness vs direct decode + scheduling."""
+"""Continuous-batching engine: correctness vs direct decode + scheduler
+invariants (tick accounting, page budget, slot isolation, random streams)."""
 
 import jax
 import jax.numpy as jnp
@@ -6,6 +7,7 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.models import model as MD
+from repro.serve.cache import NO_SLOT_AXIS, PageAllocator, slot_axes
 from repro.serve.engine import Request, ServingEngine
 
 
@@ -132,3 +134,240 @@ def test_engine_slot_reuse_matches_fresh_engine(setup):
 
     assert rb.output == rb_fresh.output
     assert ra.output == _direct_greedy(cfg, params, prompt_a, 5)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: tick accounting + stats
+# ---------------------------------------------------------------------------
+
+def test_prefill_completes_in_ceil_p_over_c_ticks(setup):
+    """A P-token prompt warms its cache in exactly ⌈P/prefill_chunk⌉ engine
+    ticks (acceptance); the remaining ticks are pure decode."""
+    cfg, params = setup
+    for P_, C in [(13, 4), (8, 4), (1, 4), (5, 16)]:
+        eng = ServingEngine(cfg, params, batch_slots=1, max_len=64,
+                            prefill_chunk=C)
+        req = Request(uid=1, prompt=list(range(1, P_ + 1)), max_new_tokens=3)
+        eng.submit(req)
+        ticks = eng.run_until_drained()
+        st = eng.stats()
+        expect_prefill = -(-P_ // min(C, eng.prefill_chunk))
+        assert st["prefill_ticks"] == expect_prefill, (P_, C, st)
+        # first token samples on the last prefill tick
+        assert st["decode_ticks"] == 3 - 1, (P_, C, st)
+        assert ticks == st["ticks"] == expect_prefill + 2
+        assert req.output == _direct_greedy(cfg, params, req.prompt, 3)
+
+
+def test_stats_fields(setup):
+    """stats() exposes p95 latency, throughput, and the prefill/decode tick
+    split alongside the page-budget gauges."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, prefill_chunk=4)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[i + 1, i + 2, i + 3, 7, 9],
+                           max_new_tokens=4))
+    eng.run_until_drained()
+    st = eng.stats()
+    assert st["completed"] == 3
+    assert st["generated_tokens"] == 12 and st["prompt_tokens"] == 15
+    assert st["p50_latency_s"] > 0 and st["p95_latency_s"] >= st["p50_latency_s"]
+    assert st["tokens_per_sec"] > 0 and st["prompt_tokens_per_sec"] > 0
+    assert st["prefill_ticks"] >= 2 and st["decode_ticks"] >= 3
+    assert st["ticks"] == st["prefill_ticks"] + st["decode_ticks"]
+    assert st["free_pages"] == st["page_capacity"] > 0  # all pages returned
+
+
+# ---------------------------------------------------------------------------
+# slot isolation: explicit axis tags (regression for the shape-guessing reset)
+# ---------------------------------------------------------------------------
+
+def test_slot_axes_tags(setup):
+    cfg, params = setup
+    paged = MD.init_cache(cfg, 2, 32, paged=True, page_size=4)
+    axes = slot_axes(paged)
+    assert axes["step"] == 0 and axes["ptab"] == 0
+    for g in axes["groups"]:
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert leaf == NO_SLOT_AXIS  # stacked attn pools: shared
+    dense = MD.init_cache(cfg, 2, 32)
+    daxes = slot_axes(dense)
+    for g in daxes["groups"]:
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert leaf == 1  # (n_groups, B, ...): batch axis tagged, not guessed
+
+
+def test_reset_slot_with_batch_slots_equal_to_group_count(setup):
+    """Regression: the old reset zeroed the FIRST axis whose size equals
+    batch_slots — with batch_slots == n_groups that's the layer-group stack
+    axis, wiping one layer's cache for EVERY slot. A mid-decode neighbour
+    must survive another slot's admission reset."""
+    cfg, params = setup
+    n_groups = cfg.num_layers // len(cfg.layer_pattern)
+    assert n_groups == 3  # the collision this test exercises
+    eng = ServingEngine(cfg, params, batch_slots=3, max_len=64,
+                        cache_mode="dense")
+    ra = Request(uid=1, prompt=[5, 17, 333], max_new_tokens=8)
+    eng.submit(ra)
+    for _ in range(4):  # prefill + a few decode ticks; slot 0 mid-request
+        eng.step()
+    rb = Request(uid=2, prompt=[42, 8], max_new_tokens=2)
+    eng.submit(rb)  # admits into slot 1 -> reset_slot(1) while slot 0 lives
+    eng.run_until_drained()
+    assert ra.output == _direct_greedy(cfg, params, ra.prompt, 8)
+    assert rb.output == _direct_greedy(cfg, params, rb.prompt, 2)
+
+
+def test_decode_rides_prefill_ticks(setup):
+    """A slot already decoding is not starved by another slot's long prefill:
+    it piggybacks every mixed tick as a length-1 chunk and keeps emitting."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, prefill_chunk=2)
+    ra = Request(uid=1, prompt=[5, 17], max_new_tokens=12)
+    eng.submit(ra)
+    eng.step()  # ra prefills (one chunk) and samples its first token
+    assert len(ra.output) == 1
+    rb = Request(uid=2, prompt=list(range(1, 21)), max_new_tokens=2)
+    eng.submit(rb)  # 20-token prompt -> 10 prefill ticks at chunk 2
+    for i in range(10):
+        before = len(ra.output)
+        eng.step()
+        assert len(ra.output) == before + 1, f"decode starved at prefill tick {i}"
+    eng.run_until_drained()
+    assert ra.output == _direct_greedy(cfg, params, ra.prompt, 12)
+    assert rb.output == _direct_greedy(cfg, params, rb.prompt, 2)
+
+
+# ---------------------------------------------------------------------------
+# page budget: admission blocking + accounting
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_invariants():
+    al = PageAllocator(6)  # 5 usable pages (row 0 = trash)
+    assert al.capacity == 5
+    a = al.alloc(3)
+    assert a is not None and 0 not in a
+    assert al.alloc(3) is None  # insufficient
+    b = al.alloc(2)
+    assert al.free_count == 0
+    al.free(a)
+    with pytest.raises(ValueError):
+        al.free(a)  # double-free raises
+    al.free(b)
+    al.check()
+    assert al.free_count == al.capacity
+
+
+def test_admission_blocks_on_page_budget(setup):
+    """With pages for only one request in flight, the queue drains strictly
+    one-at-a-time (FIFO), every request still completes, and the free list
+    returns to capacity (no leak)."""
+    cfg, params = setup
+    ps = 4
+    # budget: exactly one request's worth of pages (3 prompt + 5 new -> 2)
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=32, page_size=ps,
+                        num_pages=2 + 1, prefill_chunk=4)
+    reqs = [Request(uid=i, prompt=[i + 1, 7, 9], max_new_tokens=5)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    # only one slot admitted despite 2 free slots: pages cover one request
+    assert sum(r is not None for r in eng.slot_req) == 1
+    assert eng.allocator.free_count == 0
+    eng.run_until_drained()
+    assert [r.uid for r in eng.done] == [0, 1, 2]  # FIFO, exactly once
+    eng.allocator.check()
+    assert eng.allocator.free_count == eng.allocator.capacity
+    for r in reqs:
+        assert r.output == _direct_greedy(cfg, params, r.prompt, 5), r.uid
+
+
+def test_submit_rejects_over_capacity(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=1, prompt=[1] * 10, max_new_tokens=10))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=2, prompt=[], max_new_tokens=2))
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants under random arrival/eos/max-token streams
+# ---------------------------------------------------------------------------
+
+def _stream_invariants(cfg, params, cases, batch_slots, num_pages,
+                       prefill_chunk):
+    eng = ServingEngine(cfg, params, batch_slots=batch_slots, max_len=32,
+                        page_size=4, num_pages=num_pages,
+                        prefill_chunk=prefill_chunk)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n, eos_id=e)
+            for i, (p, n, e) in enumerate(cases)]
+    arrivals = iter(reqs)
+    # staggered arrivals: submit one request per tick until exhausted
+    pending = next(arrivals, None)
+    ticks = 0
+    while pending is not None or eng.queue or any(
+            r is not None for r in eng.slot_req):
+        if pending is not None:
+            eng.submit(pending)
+            pending = next(arrivals, None)
+        eng.step()
+        if eng.allocator is not None:
+            eng.allocator.check()  # never leaks or double-frees, every tick
+        ticks += 1
+        assert ticks < 10_000
+    # every request retires exactly once
+    assert sorted(r.uid for r in eng.done) == sorted(r.uid for r in reqs)
+    assert len(eng.done) == len(set(id(r) for r in eng.done))
+    if eng.allocator is not None:
+        assert eng.allocator.free_count == eng.allocator.capacity
+    # outputs equal a 1-slot reference engine run per request
+    for r in reqs:
+        ref = ServingEngine(cfg, params, batch_slots=1, max_len=32,
+                            page_size=4, prefill_chunk=prefill_chunk)
+        rr = Request(uid=r.uid, prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                     eos_id=r.eos_id)
+        ref.submit(rr)
+        ref.run_until_drained()
+        assert r.output == rr.output, r.uid
+
+
+def test_scheduler_invariants_deterministic(setup):
+    """Hand-picked stream: mixed prompt lengths, EOS early stops (including
+    an unreachable eos_id), contention on both slots and pages."""
+    cfg, params = setup
+    first = _direct_greedy(cfg, params, [9, 9], 8)
+    cases = [
+        ([1, 2, 3, 4, 5, 6, 7], 4, None),
+        ([9, 9], 8, first[2]),          # stops at the 3rd token
+        ([5], 1, None),                  # single-token everything
+        ([2, 4, 6, 8], 6, -1),           # eos never sampled
+        ([7, 7, 7, 7, 7, 7, 7, 7, 7], 2, None),
+    ]
+    _stream_invariants(cfg, params, cases, batch_slots=2, num_pages=7,
+                       prefill_chunk=4)
+
+
+def test_scheduler_invariants_fuzzed(setup):
+    """Hypothesis-driven random arrival/eos/max-token streams."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = setup
+
+    case = st.tuples(
+        st.lists(st.integers(0, cfg.vocab_size - 1), min_size=1, max_size=9),
+        st.integers(1, 6),
+        st.one_of(st.none(), st.integers(0, cfg.vocab_size - 1)),
+    )
+
+    @hyp.settings(max_examples=8, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(cases=st.lists(case, min_size=1, max_size=5),
+               batch_slots=st.integers(1, 3),
+               # ≥5: the largest request (9 prompt + 6 new) needs 4 pages + trash
+               pages=st.sampled_from((5, 9, 25)), chunk=st.sampled_from((1, 4)))
+    def run(cases, batch_slots, pages, chunk):
+        _stream_invariants(cfg, params, cases, batch_slots, pages, chunk)
+
+    run()
