@@ -1,0 +1,262 @@
+"""Throughput benchmark for the fused kron_matmul kernel — the first timing
+the ket linear layers have ever had (BENCH_ket_linears.json records only
+parameter counts).
+
+Per bench arch (PR 2's ket-linear targets, order 2 / rank 8, the widest
+d_model -> d_ff projection): interleaved-median wall clock for
+
+  * fwd — jit'd forward only (the serving-decode regime);
+  * fwd+bwd — jit'd ``value_and_grad`` (loss kept live: grad of a linear
+    loss lets XLA dead-code the forward and the split would undercount);
+
+for the fused kernel op (``kron_matmul``: rank-folded chain, t1 streaming,
+recomputing custom VJP) against the XLA chain path
+(``ketops.apply_matrix_factors``): untiled — the shipping serving default
+(``linear_tile=None``) — and t1-tiled at the kernel's own block (the
+pinned-tile train path).
+
+A serving-decode row times the int8 dequant-fused leg
+(``kron_matmul_quant``: payloads + scales into the kernel, no fp32 factor
+copies) against dequant-then-chain (up-front ``Q.as_f32`` expansion, the
+PR 3 behavior), and checks its max-abs error against the analytic PR 3
+bound (entrywise ``materialize_error_bound`` weighted by the activation
+L1 norm).
+
+Timings interleave round-robin and take medians — back-to-back blocks
+drift ~2x on shared CPUs (see benchmarks/timing.py). Results go to
+``BENCH_kron_matmul.json``; ``REPRO_RETUNE=1`` re-measures the
+``kron_matmul`` autotune-table entries first and persists the winners.
+Regenerate with ``PYTHONPATH=src python benchmarks/run.py kron_matmul``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_REPO_ROOT, "BENCH_kron_matmul.json")
+
+ORDER, RANK = 2, 8  # the PR 2 ket-linear table operating point
+
+# (arch, projection) rows: the widest ket projection of each bench arch
+_ARCH_ROWS = [("qwen3-1.7b", "ffn_wi"), ("granite-3-2b", "ffn_wi")]
+_TOKENS = 2048          # train-step token batch per timing call
+_DECODE_TOKENS = 256    # serving-decode batch for the int8 row
+_REPS = 5
+_QUICK = ("quick", 64, 96, 128, 4, 1)  # name, d_in, d_out, tokens, rank, reps
+
+# The committed JSON (full run) documents the >=1.5x acceptance ratio; the
+# in-run gate is looser so a noisy shared CI runner can't flake the build.
+_MIN_SPEEDUP = 1.15
+
+
+def _xs_factors(key, rank, q, t, d_in, order):
+    s = (1.0 / (math.sqrt(rank) * math.sqrt(d_in))) ** (1.0 / order)
+    return [
+        jax.random.normal(jax.random.fold_in(key, j), (rank, qj, tj)) * s
+        for j, (qj, tj) in enumerate(zip(q, t))
+    ]
+
+
+def _retune(rank, q, t, builder, dtype="float32"):
+    """Measure t1_block candidates for one kron_matmul shape and persist the
+    winner under the family's table key (payload-dtype-suffixed for quant)."""
+    from repro.kernels import autotune
+    backend = jax.default_backend()
+    t1 = t[0]
+    cands = [autotune.BlockConfig(256, d)
+             for d in (4, 8, 16, 32, 48, 64) if t1 % d == 0]
+    best, timings = autotune.measure(cands, builder, n=1, warmup=1)
+    table_path = os.environ.get(
+        "REPRO_AUTOTUNE_TABLE",
+        os.path.join(_REPO_ROOT, "src", "repro", "kernels",
+                     "autotune_table.json"))
+    autotune.update_table(
+        autotune.table_key("kron_matmul", backend, rank, q, t, dtype),
+        best, us=timings[best], save_path=table_path)
+    return best
+
+
+def _bench_shape(report, name, d_in, d_out, tokens, rank, order, reps,
+                 retune=False, proj="ffn_wi"):
+    """One arch row: kernel vs chain (untiled + tiled), fwd and fwd+bwd."""
+    from benchmarks.timing import _interleaved_us
+    from repro.core import ketops
+    from repro.core.kron import choose_factorization
+    from repro.kernels import autotune
+    from repro.kernels.kron_matmul import ops as mops
+
+    q = choose_factorization(d_in, order)
+    t = choose_factorization(d_out, order)
+    key = jax.random.PRNGKey(0)
+    factors = _xs_factors(key, rank, q, t, d_in, order)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (tokens, d_in))
+
+    if retune:
+        _retune(rank, q, t, lambda bc: (
+            lambda f=jax.jit(jax.value_and_grad(
+                lambda fs, xx: jnp.sum(mops.kron_matmul(
+                    fs, xx, d_out, bc.t1_block, bc.block_b) ** 2),
+                argnums=(0, 1))): f(factors, x)))
+        autotune.load_table(refresh=True)
+    bc = autotune.get_block_config("kron_matmul", rank, q, t)
+
+    def kernel_out(fs, xx):
+        return mops.kron_matmul(fs, xx, d_out, None, None)
+
+    def chain_out(fs, xx):
+        return ketops.apply_matrix_factors(fs, xx, d_out)
+
+    def chain_tiled_out(fs, xx):
+        return ketops.apply_matrix_factors(fs, xx, d_out, tile=bc.t1_block)
+
+    fns = {}
+    for label, f in [("kernel", kernel_out), ("chain", chain_out),
+                     ("chain_tiled", chain_tiled_out)]:
+        fwd = jax.jit(f)
+        vg = jax.jit(jax.value_and_grad(
+            lambda fs, xx, f=f: jnp.sum(f(fs, xx) ** 2), argnums=(0, 1)))
+        # jit traces at first call — compile BEFORE the timed loop
+        jax.block_until_ready(fwd(factors, x))
+        jax.block_until_ready(vg(factors, x))
+        fns[label] = (fwd, vg)
+
+    order_labels = list(fns)
+    fwd_us = dict(zip(order_labels, _interleaved_us(
+        [lambda lb=lb: fns[lb][0](factors, x) for lb in order_labels], reps)))
+    tot_us = dict(zip(order_labels, _interleaved_us(
+        [lambda lb=lb: fns[lb][1](factors, x) for lb in order_labels], reps)))
+
+    entry = {
+        "op": "kron_matmul", "arch": name, "proj": proj,
+        "backend": jax.default_backend(),
+        "shape": {"d_in": d_in, "d_out": d_out, "order": order, "rank": rank,
+                  "q_dims": list(q), "t_dims": list(t), "tokens": tokens},
+        "blocks": {"block_b": bc.block_b, "t1_block": bc.t1_block},
+        "fwd_us": {k: round(v, 1) for k, v in fwd_us.items()},
+        "fwd_bwd_us": {k: round(v, 1) for k, v in tot_us.items()},
+        "fwd_speedup_vs_chain": round(fwd_us["chain"] / fwd_us["kernel"], 2),
+        "fwd_bwd_speedup_vs_chain":
+            round(tot_us["chain"] / tot_us["kernel"], 2),
+        "fwd_bwd_speedup_vs_chain_tiled":
+            round(tot_us["chain_tiled"] / tot_us["kernel"], 2),
+    }
+    report(f"kron_matmul.{name},{tot_us['kernel']:.1f},"
+           f"fwd_speedup={entry['fwd_speedup_vs_chain']};"
+           f"fwd_bwd_speedup={entry['fwd_bwd_speedup_vs_chain']};"
+           f"vs_tiled={entry['fwd_bwd_speedup_vs_chain_tiled']};"
+           f"t1_block={bc.t1_block}")
+    return entry
+
+
+def _bench_decode_quant(report, name, d_in, d_out, tokens, rank, order, reps,
+                        mode="int8"):
+    """Serving-decode row: int8 dequant-fused kernel vs dequant-then-chain."""
+    from benchmarks.timing import _interleaved_us
+    from repro.core import quant as Q
+    from repro.core.kron import choose_factorization
+    from repro.kernels import common as KC
+    from repro.kernels.kron_matmul import ops as mops
+
+    q = choose_factorization(d_in, order)
+    t = choose_factorization(d_out, order)
+    key = jax.random.PRNGKey(1)
+    factors = _xs_factors(key, rank, q, t, d_in, order)
+    qf = [Q.quantize(f, mode) for f in factors]
+    x = jax.random.normal(jax.random.fold_in(key, 9), (tokens, d_in))
+    P = int(math.prod(q))
+
+    fused = jax.jit(lambda fs, ss, xx: mops.kron_matmul_quant(
+        fs, ss, xx, d_out, None, None))
+
+    def dequant_then_chain(fs, xx):
+        # the PR 3 behavior: full fp32 factor copies up front, untiled chain
+        f32 = [Q.as_f32(f) for f in fs]
+        x2 = (jnp.pad(xx, ((0, 0), (0, P - xx.shape[-1])))
+              if P > xx.shape[-1] else xx)
+        return KC.chain_forward(x2, f32)[:, :d_out]
+
+    dq = jax.jit(dequant_then_chain)
+    payloads = [f["q"] for f in qf]
+    scales = [f["scale"] for f in qf]
+    got = fused(payloads, scales, x)
+    jax.block_until_ready(got)
+    jax.block_until_ready(dq(qf, x))
+
+    # max-abs error vs the fp32 operator, against the analytic PR 3 bound:
+    # |Δy[b,o]| ≤ Σ_i |x[b,i]|·|ΔF[i,o]| ≤ max_b ‖x_b‖₁ · entrywise bound
+    ref = jax.jit(lambda fs, xx: KC.chain_forward(
+        jnp.pad(xx, ((0, 0), (0, P - xx.shape[-1])))
+        if P > xx.shape[-1] else xx, fs)[:, :d_out])(factors, x)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    bound = float(jnp.max(jnp.sum(jnp.abs(x), axis=-1))) * \
+        Q.materialize_error_bound({"factors": factors}, mode)
+
+    fused_us, dq_us = _interleaved_us(
+        [lambda: fused(payloads, scales, x), lambda: dq(qf, x)], reps)
+    entry = {
+        "op": "kron_matmul_quant", "arch": name, "quant": mode,
+        "backend": jax.default_backend(),
+        "shape": {"d_in": d_in, "d_out": d_out, "order": order, "rank": rank,
+                  "q_dims": list(q), "t_dims": list(t),
+                  "decode_tokens": tokens},
+        "fused_us": round(fused_us, 1),
+        "dequant_then_chain_us": round(dq_us, 1),
+        "speedup": round(dq_us / fused_us, 2),
+        "max_abs_err": err,
+        "err_bound": bound,
+    }
+    report(f"kron_matmul_quant.{name}.{mode},{fused_us:.1f},"
+           f"dequant_then_chain={dq_us:.1f};speedup={entry['speedup']};"
+           f"err={err:.2e};bound={bound:.2e}")
+    return entry
+
+
+def run(report, json_path=None, quick: bool = False):
+    retune = bool(os.environ.get("REPRO_RETUNE")) and not quick
+    if quick:
+        name, d_in, d_out, tokens, rank, reps = _QUICK
+        _bench_shape(report, name, d_in, d_out, tokens, rank, ORDER, reps)
+        _bench_decode_quant(report, name, d_in, d_out, tokens, rank, ORDER,
+                            reps)
+        return []
+
+    from repro.configs import get_config
+    entries = []
+    for arch, proj in _ARCH_ROWS:
+        cfg = get_config(arch)
+        entries.append(_bench_shape(
+            report, arch, cfg.d_model, cfg.d_ff, _TOKENS, RANK, ORDER, _REPS,
+            retune=retune, proj=proj))
+    dec_cfg = get_config(_ARCH_ROWS[-1][0])
+    dec = _bench_decode_quant(
+        report, _ARCH_ROWS[-1][0], dec_cfg.d_model, dec_cfg.d_ff,
+        _DECODE_TOKENS, RANK, ORDER, 2 * _REPS - 1)
+    entries.append(dec)
+
+    best = max(e["fwd_bwd_speedup_vs_chain"] for e in entries
+               if e["op"] == "kron_matmul")
+    assert best >= _MIN_SPEEDUP, (
+        f"kron_matmul fwd+bwd speedup {best} < {_MIN_SPEEDUP} — the fused "
+        "kernel regressed below the chain path")
+    assert dec["speedup"] > 1.0, (
+        f"int8 dequant-fused leg slower than dequant-then-chain: {dec}")
+    assert dec["max_abs_err"] <= dec["err_bound"], (
+        f"int8 error {dec['max_abs_err']} exceeds the analytic bound "
+        f"{dec['err_bound']}")
+
+    if json_path:
+        doc = {"generated": time.strftime("%Y-%m-%d %H:%M:%S"),
+               "backend": jax.default_backend(), "entries": entries}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        report(f"kron_matmul.json,0.0,"
+               f"written={os.path.relpath(json_path, _REPO_ROOT)}")
+    return entries

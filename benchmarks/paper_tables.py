@@ -19,6 +19,7 @@ from repro.core.embedding import EmbeddingConfig, embedding_num_params
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 KET_LINEAR_JSON = os.path.join(_ROOT, "BENCH_ket_linears.json")
 QUANT_KET_JSON = os.path.join(_ROOT, "BENCH_quant_ket.json")
+KRON_MATMUL_JSON = os.path.join(_ROOT, "BENCH_kron_matmul.json")
 
 
 def _row(name, cfg, regular_params):
@@ -269,6 +270,33 @@ def quant_ket_table(*, ids_per_timing: int = 4096, err_sample: int = 1024,
     return rows
 
 
+def kron_matmul_table(json_path=KRON_MATMUL_JSON):
+    """Fused kron_matmul kernel vs the XLA chain path — the ket-linear
+    throughput table (BENCH_kron_matmul.json, written by
+    ``benchmarks/run.py kron_matmul`` / benchmarks/ket_matmul.py). Returns
+    one row per recorded entry; [] when the JSON has not been generated."""
+    if not os.path.exists(json_path):
+        return []
+    with open(json_path) as f:
+        doc = json.load(f)
+    rows = []
+    for e in doc.get("entries", []):
+        if e["op"] == "kron_matmul":
+            rows.append({
+                "kind": "train", "arch": e["arch"], "shape": e["shape"],
+                "fwd_speedup": e["fwd_speedup_vs_chain"],
+                "fwd_bwd_speedup": e["fwd_bwd_speedup_vs_chain"],
+                "fwd_bwd_speedup_vs_tiled": e["fwd_bwd_speedup_vs_chain_tiled"],
+            })
+        else:
+            rows.append({
+                "kind": "decode", "arch": e["arch"], "quant": e["quant"],
+                "shape": e["shape"], "speedup": e["speedup"],
+                "max_abs_err": e["max_abs_err"], "err_bound": e["err_bound"],
+            })
+    return rows
+
+
 def quant_arch_table():
     """Per-assigned-arch embed+head stored bytes across quant modes — the
     serving-side space accounting (regular fp32 table vs ket fp32 vs ket
@@ -314,6 +342,16 @@ def run(report, json_path=None, quant_json_path=None):
                f"dense={r['dense_params']};ket={r['ket_params']};"
                f"saving={r['saving_rate']:.0f}x;"
                f"bytes={r['dense_bytes']}->{r['ket_bytes']}")
+    for r in kron_matmul_table():
+        if r["kind"] == "train":
+            report(f"kron_matmul_table.{r['arch']},0.0,"
+                   f"fwd_speedup={r['fwd_speedup']}x;"
+                   f"fwd_bwd_speedup={r['fwd_bwd_speedup']}x;"
+                   f"vs_tiled={r['fwd_bwd_speedup_vs_tiled']}x")
+        else:
+            report(f"kron_matmul_table.{r['arch']}.{r['quant']},0.0,"
+                   f"decode_speedup={r['speedup']}x;"
+                   f"err={r['max_abs_err']:.2e};bound={r['err_bound']:.2e}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"ket_linears": ket_rows}, f, indent=2)

@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract). Sections:
   * paper_tables — Tables 1–3 #Params/space-saving, exact reproduction
   * timing — lookup/CE/kernel/train-step microbenches (CPU wall clock)
   * kernels — fwd/bwd split for the fused kron kernels (BENCH_kernels.json)
+  * kron_matmul — fused ket-linear matmul vs the XLA chain path, fwd/bwd +
+    int8 dequant-fused serving-decode row (BENCH_kron_matmul.json)
   * quant — int8/fp8 ket factor storage: bytes / error / gather latency
     (BENCH_quant_ket.json)
   * serving — continuous-batching engine: chunked prefill vs token-by-token
@@ -28,13 +30,13 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("section", nargs="?", default="all",
-                    choices=["all", "timing", "kernels", "ablation", "roofline",
-                             "quant", "serving"])
+                    choices=["all", "timing", "kernels", "kron_matmul",
+                             "ablation", "roofline", "quant", "serving"])
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: paper tables + small-shape kernel fwd/bwd; "
                          "with the serving section, the reduced serving bench")
     args = ap.parse_args()
-    if args.quick and args.section not in ("all", "serving"):
+    if args.quick and args.section not in ("all", "serving", "kron_matmul"):
         ap.error("--quick replaces the section sweep; drop one of the two")
 
     def report(line: str) -> None:
@@ -45,6 +47,13 @@ def main() -> None:
     if args.section == "serving":
         from benchmarks import serving
         serving.run(report, json_path=serving.SERVING_JSON, quick=args.quick)
+        return
+
+    if args.section == "kron_matmul":
+        from benchmarks import ket_matmul
+        ket_matmul.run(report,
+                       json_path=None if args.quick else ket_matmul.BENCH_JSON,
+                       quick=args.quick)
         return
 
     from benchmarks import paper_tables
@@ -61,8 +70,9 @@ def main() -> None:
         return
 
     if args.quick:
-        from benchmarks import timing
+        from benchmarks import ket_matmul, timing
         timing.bench_kernel_fwd_bwd(report, quick=True)
+        ket_matmul.run(report, quick=True)
         return
 
     only = args.section
@@ -72,6 +82,9 @@ def main() -> None:
     if only == "kernels":
         from benchmarks import timing
         timing.bench_kernel_fwd_bwd(report, out_path=timing.BENCH_JSON)
+    if only == "all":
+        from benchmarks import ket_matmul
+        ket_matmul.run(report, json_path=ket_matmul.BENCH_JSON)
     if only in ("all", "ablation"):
         from benchmarks import ablation
         ablation.run(report)

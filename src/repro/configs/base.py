@@ -92,11 +92,22 @@ class ModelConfig:
     linear_kind: str = "dense"  # dense | ket
     linear_order: int = 2
     linear_rank: int = 8
-    # t1 column tile for the chain apply (bounds the (B, r, t1, Πq_rest)
-    # intermediate); None = resolved once by train.step.pin_kernel_blocks
+    # t1 column tile for the chain apply / kron_matmul kernel (bounds the
+    # (B, r, t1, Πq_rest) intermediate); None = resolved once by
+    # train.step.pin_kernel_blocks from the "kron_matmul" autotune family
     linear_tile: Optional[int] = None
+    # route ket linear projections through the fused kron_matmul kernel
+    # (Pallas on TPU, host executor elsewhere). Tri-state like use_kernels,
+    # but independent of it so the embedding/head kernels can stay on their
+    # default while the linears opt in (or vice versa). None = auto.
+    linear_use_kernel: Optional[bool] = None
+    # token-block size of the kron_matmul grid; None = autotuned
+    linear_block_b: Optional[int] = None
     # shard the ket factor stacks' rank axis over "model" (rank-parallel
-    # operator; factors are otherwise replicated like embedding factors)
+    # operator; factors are otherwise replicated like embedding factors).
+    # Rank sharding keeps the chain apply: the kron_matmul kernel is an
+    # opaque custom call under GSPMD, so kernels_enabled auto-resolves off
+    # under an ambient mesh (see repro/kernels.__init__).
     ket_shard_rank: bool = False
 
     # low-bit ket factor storage (serving): "none" | "int8" | "fp8".

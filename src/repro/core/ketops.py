@@ -316,6 +316,8 @@ def apply_matrix_factors(
     out_dim: int,
     *,
     tile: Optional[int] = None,
+    use_kernel: Optional[bool] = None,
+    block_b: Optional[int] = None,
 ) -> jax.Array:
     """``x (..., d_in) @ (Σ_k ⊗_j F_jk)`` -> ``(..., out_dim)``, spec-free.
 
@@ -323,41 +325,51 @@ def apply_matrix_factors(
     linear layers can call this on bare parameter pytrees. ``x`` is
     zero-padded up to ``prod q`` and the output sliced to ``out_dim``.
 
-    ``tile`` streams the first t-factor in column tiles (clamped to a
-    divisor of t_1): the chain's widest intermediate shrinks from
-    ``(B, r, t1, Πq_rest)`` to ``(B, r, tile, Πq_rest)``. Tiles are a
-    static Python loop — differentiable, jit-stable.
+    When ``use_kernel`` resolves on (``kernels_enabled`` — same tri-state as
+    ``apply_vector``), the whole op routes through the fused ``kron_matmul``
+    kernel (Pallas on TPU, the host executor of the identical tiled
+    algorithm elsewhere), with a dequant-fused forward leg when the params
+    carry the quantized wire format; ``tile``/``block_b`` become the
+    kernel's t1/token block sizes (None = autotuned).
 
-    Factors may be quantized ``{"q", "scale"}`` dicts — the stacks are KBs,
-    so the chain simply dequantizes them up front (not differentiable).
+    On the chain fallback, ``tile`` streams the first t-factor in column
+    tiles (clamped to the largest divisor of t_1 ≤ tile): the chain's widest
+    intermediate shrinks from ``(B, r, t1, Πq_rest)`` to
+    ``(B, r, tile, Πq_rest)``. Tiles are a static Python loop —
+    differentiable, jit-stable.
+
+    Factors may be quantized ``{"q", "scale"}`` dicts — each is dequantized
+    at its use point inside the chain step (never all up front), so peak
+    expanded-factor memory tracks one factor. Activations keep their dtype
+    (bf16 stays bf16); every contraction accumulates in fp32.
     """
-    from repro.kernels import common as KC
+    from repro.kernels import kernels_enabled
 
-    factors = [Q.as_f32(f) if Q.is_quantized(f) else f for f in factors]
-    q_dims = tuple(f.shape[1] for f in factors)
-    t_dims = tuple(f.shape[2] for f in factors)
-    P = math.prod(q_dims)
+    n_quant = sum(Q.is_quantized(f) for f in factors)
     lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    if P > x2.shape[-1]:
-        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+    x2 = x.reshape(-1, x.shape[-1])
 
-    t1 = t_dims[0]
-    if tile is not None and 0 < tile < t1:
-        while t1 % tile != 0:  # BlockSpec-style: tile must divide t_1
-            tile -= 1
-        f0, rest = factors[0], list(factors[1:])
-        outs = [
-            KC.chain_forward(x2, [f0[:, :, i * tile:(i + 1) * tile]] + rest)
-            for i in range(t1 // tile)
-        ]
-        # chain column order is mixed-radix over (t1, t2, ...): contiguous
-        # t1 tiles are contiguous column blocks
-        z = jnp.concatenate(outs, axis=-1)
-    else:
-        z = KC.chain_forward(x2, list(factors))
-    z = z[:, :out_dim]
-    return z.reshape(*lead, out_dim).astype(x.dtype)
+    # mixed quantized/plain stacks (partially calibrated checkpoints) only
+    # the per-factor chain handles — the kernel legs are all-or-nothing
+    if kernels_enabled(use_kernel) and n_quant in (0, len(factors)):
+        from repro.kernels.kron_matmul.ops import kron_matmul, kron_matmul_quant
+        if n_quant:
+            z = kron_matmul_quant([f["q"] for f in factors],
+                                  [f["scale"] for f in factors],
+                                  x2, out_dim, tile, block_b)
+        else:
+            z = kron_matmul(list(factors), x2, out_dim, tile, block_b)
+        return z.reshape(*lead, out_dim)
+
+    # chain fallback: quantized factors become (payload, scale) pairs that
+    # common.chain_forward expands one at a time, at their use point. The
+    # tiled chain itself has ONE home — the kernel's ref oracle — so the
+    # production fallback and the validation path can never diverge.
+    from repro.kernels.kron_matmul.ref import kron_matmul_ref
+    chain_factors = [(f["q"], f["scale"]) if Q.is_quantized(f) else f
+                     for f in factors]
+    z = kron_matmul_ref(chain_factors, x2, out_dim, tile=tile)
+    return z.reshape(*lead, out_dim)
 
 
 def apply_matrix(
@@ -371,6 +383,8 @@ def apply_matrix(
 
     Requires ``storage="factors"`` and ``use_layernorm=False`` (with LN off
     the operator is *exactly* Σ_k ⊗_j F_jk, so the chain matmul is exact).
+    Routes through the fused ``kron_matmul`` kernel when ``spec.use_kernel``
+    resolves on, exactly like ``apply_vector``.
     """
     if spec.storage != "factors":
         raise ValueError("apply_matrix needs whole-matrix ('factors') storage")
@@ -378,7 +392,8 @@ def apply_matrix(
         raise ValueError("apply_matrix requires a pure (LayerNorm-free) operator")
     return apply_matrix_factors(
         params["factors"], x, spec.out_dim,
-        tile=tile if tile is not None else spec.vocab_tile)
+        tile=tile if tile is not None else spec.vocab_tile,
+        use_kernel=spec.use_kernel, block_b=spec.block_b)
 
 
 # ---------------------------------------------------------------------------

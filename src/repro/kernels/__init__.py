@@ -6,9 +6,12 @@ kron_gather  — fused word2ketXS lookup (one-hot-matmul gather + kron tree),
 kron_logits  — fused Kronecker vocab head + online-softmax cross-entropy,
                with a dedicated backward kernel (second streaming pass
                applying the softmax−onehot cotangent)
+kron_matmul  — fused ket-linear matmul x·(Σ_k ⊗_j F_jk) (FFN/attention
+               projections under linear_kind="ket"), rank-folded chain,
+               dedicated backward + dequant-fused int8/fp8 forward leg
 flash_attn   — GQA-aware flash attention (causal / local window / bidir)
 common       — shared in-kernel math (one-hot iota gather, balanced-tree
-               fwd/bwd, factor-chain fwd/VJP)
+               fwd/bwd, factor-chain fwd/VJP, rank-folded chain fwd/VJP)
 autotune     — block_b / t1_block selection per (rank, q_dims, t_dims,
                backend) from a measured table or VMEM heuristic
 

@@ -1,7 +1,8 @@
 """Block-size selection for the kron Pallas kernels.
 
-Both fused ops are tiled by two knobs: ``block_b`` (tokens per grid step) and,
-for the CE kernel, ``t1_block`` (first-digit vocabulary columns per tile).
+The fused ops (kron_gather, kron_logits, kron_matmul) are tiled by two
+knobs: ``block_b`` (tokens per grid step) and, for the column-streamed
+kernels, ``t1_block`` (first-digit output columns per tile).
 The right values depend on (rank, q_dims, t_dims, backend) — the old
 hardcoded ``block_b=256, t1_block=16`` left 2–4× on the table at the paper's
 GLoVe shape and overflowed VMEM estimates at LM scale.
@@ -135,9 +136,10 @@ def heuristic_block_config(
     kron_gather: the tree holds ~2 levels of ``(block_b, rank, ≤P)`` nodes at
     once, and the backward sweep roughly doubles that (node + cotangent).
 
-    kron_logits: per step the chain's widest intermediate is
+    kron_logits / kron_matmul: per step the chain's widest intermediate is
     ``(block_b, rank, t1_block, prod q[1:])`` next to the
-    ``(block_b, t1_block·prod t[1:])`` logits tile and the ``(block_b, P)``
+    ``(block_b, t1_block·prod t[1:])`` output tile (CE logits tile /
+    matmul column tile — same footprint) and the ``(block_b, P)``
     activations; t1_block must divide t_1 (BlockSpec tiling).
     """
     budget = _BUDGET_BYTES.get(backend, _BUDGET_BYTES["cpu"])
@@ -147,7 +149,7 @@ def heuristic_block_config(
         block_b = _pow2_floor(max(8, budget // max(per_token, 1)))
         return BlockConfig(block_b=int(min(512, max(8, block_b))))
 
-    if op == "kron_logits":
+    if op in ("kron_logits", "kron_matmul"):
         t1, t_rest = t_dims[0], int(math.prod(t_dims[1:]))
         q_rest = int(math.prod(q_dims[1:]))
         block_b = 128 if backend == "tpu" else 256

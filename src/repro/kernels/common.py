@@ -23,6 +23,56 @@ import jax.numpy as jnp
 LN_EPS = 1e-5
 
 
+def largest_divisor_leq(n: int, k: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``k`` (``1 ≤ k``; ``k ≥ n`` -> n).
+
+    O(√n) divisor enumeration — the tile-clamping rule every column-tiled
+    consumer (ketops ``apply_matrix_factors``, the kron_logits/kron_matmul
+    kernels) shares, replacing the old O(t1) decrement loop.
+    """
+    if k <= 0:
+        raise ValueError(f"tile clamp needs k >= 1, got {k}")
+    if k >= n:
+        return n
+    best = 1
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            if i <= k and i > best:
+                best = i
+            j = n // i
+            if j <= k and j > best:
+                best = j
+        i += 1
+    return best
+
+
+def as_f32_factor(f) -> jax.Array:
+    """Factor-at-use dequant: a plain array casts to fp32; a quantized
+    ``(payload, scale)`` pair dequantizes here, at its consumption point, so
+    the chain never holds more than one expanded fp32 factor copy."""
+    if isinstance(f, tuple):
+        payload, scale = f
+        return payload.astype(jnp.float32) * scale
+    return f.astype(jnp.float32)
+
+
+def factor_dims(factors) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """(q_dims, t_dims) of a factor list whose entries are ``(rank, q, t)``
+    arrays or quantized ``(payload, scale)`` pairs."""
+    shapes = [(f[0].shape if isinstance(f, tuple) else f.shape) for f in factors]
+    return tuple(s[1] for s in shapes), tuple(s[2] for s in shapes)
+
+
+def slice_factor_t(f, sl: slice):
+    """Slice a factor's t axis; quantized ``(payload, scale)`` pairs slice
+    the payload and keep the ``(rank, 1, 1)`` scale. The one home of the
+    wire-format-aware tile slice (ketops chain, kron_matmul kernel + ref)."""
+    if isinstance(f, tuple):
+        return (f[0][:, :, sl], f[1])
+    return f[:, :, sl]
+
+
 def one_hot(idx: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
     """(B,) int -> (B, n) one-hot via broadcasted iota (MXU-friendly)."""
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
@@ -193,27 +243,122 @@ def tree_backward(
 # Kronecker factor chain (fwd + analytic VJP)
 # ---------------------------------------------------------------------------
 
-def chain_forward(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
-    """``x (B, P)`` fp32 → logits ``(B, prod t)`` via the factor chain.
+def chain_forward(x: jax.Array, factors: Sequence) -> jax.Array:
+    """``x (B, P)`` → logits ``(B, prod t)`` fp32 via the factor chain.
 
     Column order is ``(t_1, …, t_n)`` row-major, matching mixed-radix ids.
     Factors may be tiles (e.g. F_1 pre-sliced along t_1) — only their own
-    shapes matter.
+    shapes matter — and may be quantized ``(payload, scale)`` pairs
+    (dequantized at their use point, see :func:`as_f32_factor`). ``x`` keeps
+    its dtype on the way in; every contraction accumulates in fp32.
     """
-    q_dims = tuple(f.shape[1] for f in factors)
+    q_dims, _ = factor_dims(factors)
     n = len(factors)
     b = x.shape[0]
     z = x.reshape((b,) + q_dims)
     for i, f in enumerate(factors):
         if i == 0:
-            z = jnp.einsum("bq...,rqt->brt...", z, f.astype(jnp.float32),
+            z = jnp.einsum("bq...,rqt->brt...", z, as_f32_factor(f),
                            preferred_element_type=jnp.float32)
         else:
-            z = jnp.einsum("brq...,rqt->brt...", z, f.astype(jnp.float32),
+            z = jnp.einsum("brq...,rqt->brt...", z, as_f32_factor(f),
                            preferred_element_type=jnp.float32)
         z = jnp.moveaxis(z, 2, 2 + (n - 1))
     z = jnp.sum(z, axis=1)  # rank
     return z.reshape(b, -1)
+
+
+def chain_fused_forward(x: jax.Array, factors: Sequence) -> jax.Array:
+    """:func:`chain_forward` with the rank sum folded into the last
+    contraction.
+
+    The plain chain carries the rank axis to the very end and reduces it in
+    a separate pass — its widest tensor is ``(B, r, t_1, Πq_rest)`` and the
+    final step runs as r thin batched GEMMs. Folding ``Σ_r`` into the last
+    einsum turns that step into ONE fat GEMM
+    ``(B·Πt_{<n}, r·q_n) @ (r·q_n, t_n)`` and never materializes the
+    ``(B, r, Πt)`` pre-sum tensor — the kron_matmul kernel's core trick
+    (measured ~2× fwd on the bench arch shapes). Same output, bitwise-close
+    (fp32 accumulation either way).
+    """
+    q_dims, _ = factor_dims(factors)
+    n = len(factors)
+    b = x.shape[0]
+    z = x.reshape((b,) + q_dims)
+    if n == 1:
+        # single factor: fold the rank sum straight into the one GEMM
+        return jnp.einsum("bq,rqt->bt", z, as_f32_factor(factors[0]),
+                          preferred_element_type=jnp.float32)
+    for i, f in enumerate(factors[:-1]):
+        spec = "bq...,rqt->brt..." if i == 0 else "brq...,rqt->brt..."
+        z = jnp.einsum(spec, z, as_f32_factor(f),
+                       preferred_element_type=jnp.float32)
+        z = jnp.moveaxis(z, 2, 2 + (n - 1))
+    # layout here: (B, r, q_n, t_1..t_{n-1}); contract q_n AND the rank axis
+    z = jnp.einsum("brq...,rqt->b...t", z, as_f32_factor(factors[-1]),
+                   preferred_element_type=jnp.float32)
+    return z.reshape(b, -1)
+
+
+def chain_fused_vjp(
+    x: jax.Array,
+    factors: Sequence,
+    d_out: jax.Array,
+) -> tuple[jax.Array, list[jax.Array]]:
+    """Analytic VJP of :func:`chain_fused_forward`: ``(dx, [dF_j])``.
+
+    Mirrors :func:`chain_vjp` but keeps the rank fold: the output cotangent
+    ``(B, Πt)`` is never broadcast to ``(B, r, Πt)`` — the last factor's
+    backward contractions are the transposed fat GEMMs of the forward
+    (``dz = g·F_nᵀ``, ``dF_n = z_{n-1}ᵀ·g``), and the remaining factors run
+    the standard reverse sweep. Chain intermediates are recomputed, not
+    saved (same rematerialization budget as the forward kernel).
+    """
+    q_dims, t_dims = factor_dims(factors)
+    n = len(factors)
+    b = x.shape[0]
+    f32 = [as_f32_factor(f) for f in factors]
+
+    if n == 1:
+        d = d_out  # (B, t_1)
+        rank = f32[0].shape[0]
+        # y = Σ_r x·F_r: every rank slice sees the same cotangent
+        df = jnp.einsum("bq,bt->qt", x.reshape(b, -1).astype(jnp.float32), d,
+                        preferred_element_type=jnp.float32)
+        dfs = [jnp.broadcast_to(df[None], f32[0].shape)]
+        dx = jnp.einsum("bt,qt->bq", d, jnp.sum(f32[0], axis=0),
+                        preferred_element_type=jnp.float32)
+        return dx, dfs
+
+    zs = []
+    z = x.reshape((b,) + q_dims)
+    for i, f in enumerate(f32[:-1]):
+        zs.append(z)
+        spec = "bq...,rqt->brt..." if i == 0 else "brq...,rqt->brt..."
+        z = jnp.einsum(spec, z, f, preferred_element_type=jnp.float32)
+        z = jnp.moveaxis(z, 2, 2 + (n - 1))
+    # z layout: (B, r, q_n, t_1..t_{n-1}) — the fused last step's input
+    dfactors: list = [None] * n
+    d = d_out.reshape((b,) + t_dims)  # (B, t_1..t_n), no rank broadcast
+    dfactors[n - 1] = jnp.einsum("brq...,b...t->rqt", z, d,
+                                 preferred_element_type=jnp.float32)
+    d = jnp.einsum("b...t,rqt->brq...", d, f32[-1],
+                   preferred_element_type=jnp.float32)
+    # d is now in the post-step-(n−2) layout; the rest is chain_vjp's sweep
+    for i in range(n - 2, -1, -1):
+        d_moved = jnp.moveaxis(d, 2 + (n - 1), 2)  # t_i back to axis 2
+        if i == 0:
+            dfactors[0] = jnp.einsum("bq...,brt...->rqt", zs[0], d_moved,
+                                     preferred_element_type=jnp.float32)
+            d = jnp.einsum("brt...,rqt->bq...", d_moved, f32[i],
+                           preferred_element_type=jnp.float32)
+        else:
+            dfactors[i] = jnp.einsum("brq...,brt...->rqt", zs[i], d_moved,
+                                     preferred_element_type=jnp.float32)
+            d = jnp.einsum("brt...,rqt->brq...", d_moved, f32[i],
+                           preferred_element_type=jnp.float32)
+    dx = d.reshape(b, -1)
+    return dx, dfactors
 
 
 def chain_vjp(

@@ -1,0 +1,298 @@
+"""Pallas TPU kernels: fused ket-linear matmul ``y = x · (Σ_k ⊗_j F_jk)``
+(fwd + bwd), plus the host executors of the same tiled algorithm.
+
+This is the kron_logits streaming pattern with the CE head cut off — the op
+that every ket linear layer (``linear_kind="ket"``: FFN wi/wg/wo, attention
+qkv/out) runs on both the train and serving-decode hot paths.
+
+Grid ``(token_blocks, t1_blocks)``; per step:
+
+  * the activation block ``(block_b, P)`` is revisited across the t1 axis;
+  * ``F_1`` streams in ``(rank, q_1, t1_block)`` column tiles (BlockSpec);
+    the remaining factors are pinned whole in VMEM — they are KBs;
+  * the tile's output columns come from the **rank-folded** factor chain
+    (``common.chain_fused_forward``): the last contraction folds the rank
+    sum into one fat ``(B·Πt_{<n}, r·q_n) @ (r·q_n, t_n)`` GEMM, so the
+    ``(block_b, rank, Πt)`` pre-sum tensor never exists and the widest live
+    intermediate is the ``(block_b, rank, t1_block, Πq_rest)`` chain tile.
+
+Backward (:func:`kron_matmul_bwd_pallas`) walks the SAME grid a second
+time: per step it recomputes the tile's chain intermediates from
+``(x, F-tiles)`` (nothing is saved but the primal inputs) and pushes the
+output-cotangent tile through the rank-folded chain VJP
+(``common.chain_fused_vjp``) — ``dx`` accumulates across t1 tiles into the
+revisited ``(block_b, P)`` block, ``dF_1`` accumulates into the ``j``-th t1
+slice of a constant-resident ``(rank, q_1, t_1)`` block via a dynamic
+store, and the non-streamed factors accumulate into constant-resident
+blocks (the kron_logits accumulation pattern verbatim).
+
+The dequant-fused leg reads int8/fp8 payloads with their per-rank
+``(rank, 1, 1)`` scales pinned in VMEM and dequantizes per block inside the
+kernel — quantized factor stacks stream from HBM at 1 byte/param and never
+round-trip as fp32 copies.
+
+Off-TPU the public op (``ops.kron_matmul``) routes BOTH directions through
+the host executors below — the identical tile loop and rank-folded
+contractions as one fused XLA computation (no grid emulation). The
+interpret-mode Pallas kernels stay the validation target
+(tests/test_kron_matmul.py pins pallas ≡ host ≡ dense oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+
+def _fwd_kernel(x_ref, *refs, q_dims, t_dims, t1_block, quantized):
+    n = len(q_dims)
+    if quantized:
+        factor_refs, scale_refs, out_ref = refs[:n], refs[n:2 * n], refs[2 * n]
+    else:
+        factor_refs, scale_refs, out_ref = refs[:n], None, refs[n]
+    x = x_ref[...].astype(jnp.float32)  # (Bblk, P)
+    factors = []
+    for j, f_ref in enumerate(factor_refs):
+        f = f_ref[...].astype(jnp.float32)
+        if scale_refs is not None:  # in-VMEM dequant, (rank,1,1) broadcast
+            f = f * scale_refs[j][...].astype(jnp.float32)
+        factors.append(f)
+    out_ref[...] = C.chain_fused_forward(x, factors).astype(out_ref.dtype)
+
+
+def _bwd_kernel(x_ref, g_ref, *refs, q_dims, t_dims, t1_block):
+    n = len(q_dims)
+    factor_refs, (dx_ref, df0_ref, *dfrest_refs) = refs[:n], refs[n:]
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.float32)  # (Bblk, P)
+    g = g_ref[...].astype(jnp.float32)  # (Bblk, t1_block·Πt_rest); 0 on pads
+    factors = [f_ref[...] for f_ref in factor_refs]  # [f0 tile, rest…]
+
+    dx, dfs = C.chain_fused_vjp(x, factors, g)
+
+    @pl.when(j == 0)
+    def _dx_init():
+        dx_ref[...] = dx
+
+    @pl.when(j > 0)
+    def _dx_acc():
+        dx_ref[...] += dx
+
+    # dF_1 lives whole in VMEM across the grid; each step touches its t1 slice
+    @pl.when((i == 0) & (j == 0))
+    def _df0_zero():
+        df0_ref[...] = jnp.zeros_like(df0_ref)
+
+    idx0 = (slice(None), slice(None), pl.dslice(j * t1_block, t1_block))
+    pl.store(df0_ref, idx0, pl.load(df0_ref, idx0) + dfs[0])
+
+    for df_ref, df in zip(dfrest_refs, dfs[1:]):
+        @pl.when((i == 0) & (j == 0))
+        def _init(df_ref=df_ref, df=df):
+            df_ref[...] = df
+
+        @pl.when((i > 0) | (j > 0))
+        def _acc(df_ref=df_ref, df=df):
+            df_ref[...] += df
+
+
+def _prep(factors, x, block_b, t1_block):
+    """Shared fwd/bwd padding + tile-size resolution (x already (B, d_in))."""
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    P = int(math.prod(q_dims))
+    x2 = x
+    if P > x2.shape[-1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+    B = x2.shape[0]
+    bpad = -B % block_b
+    if bpad:
+        x2 = jnp.pad(x2, ((0, bpad), (0, 0)))
+    t1 = t_dims[0]
+    blk = C.largest_divisor_leq(t1, min(t1_block, t1))
+    return x2, B, q_dims, t_dims, P, blk, t1 // blk
+
+
+def kron_matmul_pallas(
+    factors: Sequence[jax.Array],
+    x: jax.Array,  # (B, d_in)
+    *,
+    t1_block: int = 16,
+    block_b: int = 256,
+    interpret: bool = True,
+    scales: Optional[Sequence[jax.Array]] = None,
+) -> jax.Array:
+    """``x @ (Σ_k ⊗_j F_jk)`` -> ``(B, prod t)`` fp32; caller slices columns.
+
+    With ``scales`` the factors are int8/fp8 payloads and the per-rank
+    dequant is fused into the kernel body (serving fast path).
+    """
+    x2, B, q_dims, t_dims, P, blk, nt = _prep(factors, x, block_b, t1_block)
+    nb = x2.shape[0] // block_b
+    t_rest = int(math.prod(t_dims[1:]))
+    tile_cols = blk * t_rest
+
+    kernel = functools.partial(
+        _fwd_kernel, q_dims=q_dims, t_dims=t_dims, t1_block=blk,
+        quantized=scales is not None,
+    )
+    f0 = factors[0]
+    in_specs = [
+        pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+        pl.BlockSpec((f0.shape[0], q_dims[0], blk), lambda i, j: (0, 0, j)),
+        *[
+            pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0))  # pinned in VMEM
+            for f in factors[1:]
+        ],
+    ]
+    inputs = [x2, f0, *factors[1:]]
+    if scales is not None:  # (rank, 1, 1) per factor, pinned like the factors
+        inputs += list(scales)
+        in_specs += [pl.BlockSpec(s.shape, lambda i, j: (0, 0, 0))
+                     for s in scales]
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb, nt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, tile_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x2.shape[0], nt * tile_cols),
+                                       jnp.float32),
+        interpret=interpret,
+    )(*inputs)
+    return out[:B]
+
+
+def kron_matmul_bwd_pallas(
+    factors: Sequence[jax.Array],
+    x: jax.Array,  # (B, d_in)
+    g: jax.Array,  # (B, prod t) output cotangent, zeros past out_dim
+    *,
+    t1_block: int = 16,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, list[jax.Array]]:
+    """Dedicated backward: ``(dL/dx (B, P), [dL/dF_j])``, all fp32."""
+    rank = factors[0].shape[0]
+    x2, B, q_dims, t_dims, P, blk, nt = _prep(factors, x, block_b, t1_block)
+    nb = x2.shape[0] // block_b
+    t_rest = int(math.prod(t_dims[1:]))
+    tile_cols = blk * t_rest
+    bpad = x2.shape[0] - B
+    g32 = jnp.pad(g.astype(jnp.float32), ((0, bpad), (0, 0)))  # pad rows inert
+
+    kernel = functools.partial(
+        _bwd_kernel, q_dims=q_dims, t_dims=t_dims, t1_block=blk,
+    )
+    f0 = factors[0]
+    dx, df0, *dfrest = pl.pallas_call(
+        kernel,
+        grid=(nb, nt),
+        in_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, tile_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((rank, q_dims[0], blk), lambda i, j: (0, 0, j)),
+            *[
+                pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0))
+                for f in factors[1:]
+            ],
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec(f0.shape, lambda i, j: (0, 0, 0)),
+            *[
+                pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0))
+                for f in factors[1:]
+            ],
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            *[jax.ShapeDtypeStruct(f.shape, jnp.float32) for f in factors],
+        ],
+        interpret=interpret,
+    )(x2, g32, f0, *factors[1:])
+    return dx[:B], [df0, *dfrest]
+
+
+# ---------------------------------------------------------------------------
+# Host executors — the same tiled algorithm as one fused XLA computation
+# ---------------------------------------------------------------------------
+
+def kron_matmul_host(
+    factors: Sequence,
+    x: jax.Array,  # (B, d_in)
+    *,
+    t1_block: int = 16,
+) -> jax.Array:
+    """Host (non-Pallas) executor of the SAME forward algorithm.
+
+    Off-TPU the interpret-mode grid emulation costs more than the math; this
+    runs the identical t1-tiled, rank-folded chain (shared ``common``
+    helpers) as a statically unrolled loop inside one XLA computation — the
+    widest intermediate stays the per-tile ``(B, r, t1_block, Πq_rest)``
+    chain tile, cache-resident instead of round-tripping through RAM.
+    Factors may be quantized ``(payload, scale)`` pairs (dequant at use).
+    Returns ``(B, prod t)`` fp32; the caller slices columns.
+    """
+    q_dims, t_dims = C.factor_dims(factors)
+    P = int(math.prod(q_dims))
+    x2 = x
+    if P > x2.shape[-1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+    t1 = t_dims[0]
+    blk = C.largest_divisor_leq(t1, min(t1_block, t1))
+    if blk == t1:
+        return C.chain_fused_forward(x2, list(factors))
+    f0, rest = factors[0], list(factors[1:])
+    outs = [
+        C.chain_fused_forward(
+            x2, [C.slice_factor_t(f0, slice(i * blk, (i + 1) * blk))] + rest)
+        for i in range(t1 // blk)
+    ]
+    # chain column order is mixed-radix over (t1, t2, …): contiguous t1
+    # tiles are contiguous column blocks
+    return jnp.concatenate(outs, axis=-1)
+
+
+def kron_matmul_bwd_host(
+    factors: Sequence[jax.Array],
+    x: jax.Array,  # (B, d_in)
+    g: jax.Array,  # (B, prod t) output cotangent, zeros past out_dim
+    *,
+    t1_block: int = 16,
+) -> tuple[jax.Array, list[jax.Array]]:
+    """Host executor of the dedicated backward: per t1 tile, recompute the
+    chain intermediates and run the rank-folded VJP; ``dx`` and the
+    non-streamed ``dF_j`` accumulate across tiles, ``dF_1`` concatenates its
+    column tiles. Returns ``(dx (B, P), [dF_j])``, all fp32."""
+    q_dims, t_dims = C.factor_dims(factors)
+    P = int(math.prod(q_dims))
+    x2 = x.astype(jnp.float32)
+    if P > x2.shape[-1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+    g32 = g.astype(jnp.float32)
+    t1 = t_dims[0]
+    blk = C.largest_divisor_leq(t1, min(t1_block, t1))
+    if blk == t1:
+        return C.chain_fused_vjp(x2, list(factors), g32)
+    t_rest = int(math.prod(t_dims[1:]))
+    f0, rest = factors[0], list(factors[1:])
+    dx = jnp.zeros_like(x2)
+    df0_tiles = []
+    dfrest = None
+    for i in range(t1 // blk):
+        gi = g32[:, i * blk * t_rest:(i + 1) * blk * t_rest]
+        dxi, dfs = C.chain_fused_vjp(
+            x2, [C.slice_factor_t(f0, slice(i * blk, (i + 1) * blk))] + rest, gi)
+        dx = dx + dxi
+        df0_tiles.append(dfs[0])
+        dfrest = (dfs[1:] if dfrest is None
+                  else [a + b for a, b in zip(dfrest, dfs[1:])])
+    return dx, [jnp.concatenate(df0_tiles, axis=2), *(dfrest or [])]

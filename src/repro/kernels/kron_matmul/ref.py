@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the fused ket-linear matmul kernel.
+
+``kron_matmul_ref`` is the plain (rank-carrying) factor chain — exactly the
+XLA path ket linears ran before the kernel existed, and the backward
+fallback under ``REPRO_KRON_BWD=ref`` (its jax.vjp IS the chain VJP).
+``kron_matmul_dense_ref`` materializes Σ_k ⊗_j F_jk and runs one dense
+matmul — an independent oracle with no chain code path (test scale only).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kron as K
+from repro.kernels import common as C
+
+
+def kron_matmul_ref(
+    factors: Sequence,
+    x: jax.Array,  # (B, d_in)
+    out_dim: int,
+    *,
+    tile: Optional[int] = None,
+) -> jax.Array:
+    """``x @ (Σ_k ⊗_j F_jk)`` -> ``(B, out_dim)`` via the plain factor chain
+    (optionally t1-tiled). Differentiable; factors may be quantized
+    ``(payload, scale)`` pairs (dequantized at use, not differentiable)."""
+    q_dims, t_dims = C.factor_dims(factors)
+    P = int(math.prod(q_dims))
+    x2 = x
+    if P > x2.shape[-1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+    t1 = t_dims[0]
+    if tile is not None and 0 < tile < t1:
+        blk = C.largest_divisor_leq(t1, tile)
+        f0, rest = factors[0], list(factors[1:])
+        sliced = [C.slice_factor_t(f0, slice(i * blk, (i + 1) * blk))
+                  for i in range(t1 // blk)]
+        z = jnp.concatenate(
+            [C.chain_forward(x2, [s] + rest) for s in sliced], axis=-1)
+    else:
+        z = C.chain_forward(x2, list(factors))
+    return z[:, :out_dim].astype(x.dtype)
+
+
+def kron_matmul_dense_ref(
+    factors: Sequence[jax.Array],
+    x: jax.Array,  # (B, d_in)
+    out_dim: int,
+) -> jax.Array:
+    """Independent dense oracle: materialize F and matmul (test scale only)."""
+    rank = factors[0].shape[0]
+    F = sum(K.kron_matrix([f[k].astype(jnp.float32) for f in factors])
+            for k in range(rank))  # (prod q, prod t)
+    P = F.shape[0]
+    x2 = x.astype(jnp.float32)
+    if P > x2.shape[-1]:
+        x2 = jnp.pad(x2, ((0, 0), (0, P - x2.shape[-1])))
+    return (x2 @ F)[:, :out_dim].astype(x.dtype)

@@ -9,8 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (apply_rope, dense_init, linear_init, out_proj,
-                                 qkv_proj, rmsnorm)
+from repro.models.common import (apply_rope, dense_init, linear_init,
+                                 linear_opts, out_proj, qkv_proj, rmsnorm)
 
 NEG = jnp.float32(-1e30)
 
@@ -195,10 +195,10 @@ def _maybe_qk_norm(cfg, params, q, k):
 def attention_qkv(params, cfg, x, cos, sin, *, rope: bool = True):
     """x (B,S,d) -> q (B,S,H,Dh), k,v (B,S,KVH,Dh), rope+qknorm applied."""
     dt = cfg.dtype
-    tile = getattr(cfg, "linear_tile", None)
-    q = qkv_proj(params["wq"], x, dt, cfg.num_heads, cfg.head_dim, tile=tile)
-    k = qkv_proj(params["wk"], x, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
-    v = qkv_proj(params["wv"], x, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+    opts = linear_opts(cfg)
+    q = qkv_proj(params["wq"], x, dt, cfg.num_heads, cfg.head_dim, **opts)
+    k = qkv_proj(params["wk"], x, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
+    v = qkv_proj(params["wv"], x, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
     q, k = _maybe_qk_norm(cfg, params, q, k)
     if rope:
         q = apply_rope(q, cos, sin)
@@ -209,7 +209,7 @@ def attention_qkv(params, cfg, x, cos, sin, *, rope: bool = True):
 def attention_out(params, cfg, o):
     """o (..., H, Dh) -> (..., d_model) through wo (dense or ket)."""
     return out_proj(params["wo"], o, cfg.dtype, cfg.d_model,
-                    tile=getattr(cfg, "linear_tile", None))
+                    **linear_opts(cfg))
 
 
 def attention_block(params, cfg, x, cos, sin, *, local: bool = False,
@@ -224,7 +224,7 @@ def cross_attention_block(params, cfg, x, enc_k, enc_v, chunk: int = 1024):
     """Decoder cross-attention: q from x, k/v precomputed from encoder."""
     dt = cfg.dtype
     q = qkv_proj(params["wq"], x, dt, cfg.num_heads, cfg.head_dim,
-                 tile=getattr(cfg, "linear_tile", None))
+                 **linear_opts(cfg))
     out = flash_attention(q, enc_k, enc_v, causal=False, chunk=chunk)
     return attention_out(params, cfg, out)
 

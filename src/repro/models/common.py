@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 __all__ = ["rmsnorm", "init_rmsnorm", "dense_init", "apply_rope", "rope_angles",
            "softcap", "linear_init", "linear_apply", "qkv_proj", "out_proj",
-           "is_ket_param"]
+           "is_ket_param", "linear_opts"]
 
 
 def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
@@ -62,30 +62,52 @@ def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, *,
     return ketops.init(key, spec)
 
 
-def linear_apply(p, x: jax.Array, dtype, d_out: int, *, tile=None) -> jax.Array:
-    """x (..., d_in) @ p -> (..., d_out); p is a 2-D dense array or ket dict."""
+def linear_opts(cfg) -> dict:
+    """The ket-linear apply knobs of a ModelConfig, as ``linear_apply`` /
+    ``qkv_proj`` / ``out_proj`` / ``ffn`` kwargs: the t1 column tile plus the
+    kron_matmul kernel routing (tri-state ``use_kernel``, token block)."""
+    return {
+        "tile": getattr(cfg, "linear_tile", None),
+        "use_kernel": getattr(cfg, "linear_use_kernel", None),
+        "block_b": getattr(cfg, "linear_block_b", None),
+    }
+
+
+def linear_apply(p, x: jax.Array, dtype, d_out: int, *, tile=None,
+                 use_kernel=None, block_b=None) -> jax.Array:
+    """x (..., d_in) @ p -> (..., d_out); p is a 2-D dense array or ket dict.
+
+    ``use_kernel``/``block_b`` route ket params through the fused
+    ``kron_matmul`` kernel (core/ketops ``apply_matrix_factors`` resolution);
+    dense params ignore them.
+    """
     if is_ket_param(p):
         from repro.core import ketops
         return ketops.apply_matrix_factors(
-            p["factors"], x.astype(dtype), d_out, tile=tile)
+            p["factors"], x.astype(dtype), d_out, tile=tile,
+            use_kernel=use_kernel, block_b=block_b)
     return jnp.einsum("...i,io->...o", x, p.astype(dtype))
 
 
-def qkv_proj(p, x: jax.Array, dtype, n_heads: int, head_dim: int, *, tile=None) -> jax.Array:
+def qkv_proj(p, x: jax.Array, dtype, n_heads: int, head_dim: int, *, tile=None,
+             use_kernel=None, block_b=None) -> jax.Array:
     """x (..., d) -> (..., n_heads, head_dim). Dense p: (d, n_heads, head_dim);
     ket p: factors covering d -> n_heads·head_dim."""
     if is_ket_param(p):
-        y = linear_apply(p, x, dtype, n_heads * head_dim, tile=tile)
+        y = linear_apply(p, x, dtype, n_heads * head_dim, tile=tile,
+                         use_kernel=use_kernel, block_b=block_b)
         return y.reshape(*x.shape[:-1], n_heads, head_dim)
     return jnp.einsum("...d,dhk->...hk", x, p.astype(dtype))
 
 
-def out_proj(p, o: jax.Array, dtype, d_model: int, *, tile=None) -> jax.Array:
+def out_proj(p, o: jax.Array, dtype, d_model: int, *, tile=None,
+             use_kernel=None, block_b=None) -> jax.Array:
     """o (..., H, Dh) -> (..., d_model). Dense p: (H, Dh, d); ket p: factors
     covering H·Dh -> d."""
     if is_ket_param(p):
         o2 = o.reshape(*o.shape[:-2], o.shape[-2] * o.shape[-1])
-        return linear_apply(p, o2, dtype, d_model, tile=tile)
+        return linear_apply(p, o2, dtype, d_model, tile=tile,
+                            use_kernel=use_kernel, block_b=block_b)
     return jnp.einsum("...hk,hkd->...d", o, p.astype(dtype))
 
 

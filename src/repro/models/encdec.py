@@ -18,7 +18,8 @@ from repro.core.embedding import embed_lookup, init_embedding
 from repro.core.logits import head_ce_loss, head_logits, init_head
 from repro.models import attention as A
 from repro.models import ffn as F
-from repro.models.common import init_rmsnorm, out_proj, qkv_proj, rmsnorm
+from repro.models.common import (init_rmsnorm, linear_opts, out_proj,
+                                 qkv_proj, rmsnorm)
 
 __all__ = ["init_encdec", "encdec_loss", "encdec_init_cache", "encdec_serve_step",
            "encode", "sinusoid"]
@@ -89,7 +90,7 @@ def encode(params, cfg, frames):
         o = A.flash_attention(q, k, v, causal=False)
         x = x + A.attention_out(p["attn"], cfg, o)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "gelu", cfg.dtype,
-                      dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
+                      dims=(cfg.d_model, cfg.d_ff), **linear_opts(cfg))
         return x, None
 
     x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
@@ -105,17 +106,17 @@ def _dec_block(p, cfg, x, enc_kv=None, self_kv=None):
     hx = rmsnorm(p["ln_x"], x)
     x = x + A.cross_attention_block(p["cross_attn"], cfg, hx, *enc_kv)
     x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "gelu", cfg.dtype,
-                  dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
+                  dims=(cfg.d_model, cfg.d_ff), **linear_opts(cfg))
     return x, (k, v)
 
 
 def _cross_kv(p, cfg, enc_states):
     dt = cfg.dtype
-    tile = getattr(cfg, "linear_tile", None)
+    opts = linear_opts(cfg)
     k = qkv_proj(p["cross_attn"]["wk"], enc_states, dt, cfg.num_kv_heads,
-                 cfg.head_dim, tile=tile)
+                 cfg.head_dim, **opts)
     v = qkv_proj(p["cross_attn"]["wv"], enc_states, dt, cfg.num_kv_heads,
-                 cfg.head_dim, tile=tile)
+                 cfg.head_dim, **opts)
     return k, v
 
 
@@ -178,21 +179,21 @@ def encdec_serve_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
     def body(x, xs):
         p, sk, sv, ck, cv = xs
         h = rmsnorm(p["ln1"], x)
-        tile = getattr(cfg, "linear_tile", None)
-        q = qkv_proj(p["self_attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
-        k = qkv_proj(p["self_attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
-        v = qkv_proj(p["self_attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+        opts = linear_opts(cfg)
+        q = qkv_proj(p["self_attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, **opts)
+        k = qkv_proj(p["self_attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
+        v = qkv_proj(p["self_attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
         sk = jax.lax.dynamic_update_slice_in_dim(sk, k[:, None], step, axis=1)
         sv = jax.lax.dynamic_update_slice_in_dim(sv, v[:, None], step, axis=1)
         B = q.shape[0]
         o = A.decode_attention(q, sk, sv, jnp.full((B,), step + 1))
-        x = x + out_proj(p["self_attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+        x = x + out_proj(p["self_attn"]["wo"], o, dt, cfg.d_model, **opts)
         hx = rmsnorm(p["ln_x"], x)
-        qx = qkv_proj(p["cross_attn"]["wq"], hx, dt, cfg.num_heads, cfg.head_dim, tile=tile)
+        qx = qkv_proj(p["cross_attn"]["wq"], hx, dt, cfg.num_heads, cfg.head_dim, **opts)
         ox = A.decode_attention(qx, ck, cv, jnp.full((B,), ck.shape[1]))
-        x = x + out_proj(p["cross_attn"]["wo"], ox, dt, cfg.d_model, tile=tile)
+        x = x + out_proj(p["cross_attn"]["wo"], ox, dt, cfg.d_model, **opts)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "gelu", dt,
-                      dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
+                      dims=(cfg.d_model, cfg.d_ff), **opts)[:, 0]
         return x, (sk, sv)
 
     x, (new_sk, new_sv) = jax.lax.scan(

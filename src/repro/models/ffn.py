@@ -36,17 +36,20 @@ def _dims(params: dict, dims) -> tuple[int, int]:
 
 
 def ffn(params: dict, x: jax.Array, mlp_type: str, dtype, dims=None,
-        tile=None) -> jax.Array:
+        tile=None, use_kernel=None, block_b=None) -> jax.Array:
     """x (..., d_model) -> (..., d_model). ``dims=(d_model, d_ff)`` is
-    required for ket params (factor products overcover the logical dims)."""
+    required for ket params (factor products overcover the logical dims).
+    ``tile``/``use_kernel``/``block_b`` are the ket-linear apply knobs
+    (``models.common.linear_opts``)."""
     d_model, d_ff = _dims(params, dims)
-    h = linear_apply(params["wi"], x, dtype, d_ff, tile=tile)
+    kw = dict(tile=tile, use_kernel=use_kernel, block_b=block_b)
+    h = linear_apply(params["wi"], x, dtype, d_ff, **kw)
     if mlp_type == "swiglu":
-        g = linear_apply(params["wg"], x, dtype, d_ff, tile=tile)
+        g = linear_apply(params["wg"], x, dtype, d_ff, **kw)
         h = jax.nn.silu(g) * h
     elif mlp_type == "geglu":
-        g = linear_apply(params["wg"], x, dtype, d_ff, tile=tile)
+        g = linear_apply(params["wg"], x, dtype, d_ff, **kw)
         h = jax.nn.gelu(g) * h
     else:
         h = jax.nn.gelu(h)
-    return linear_apply(params["wo"], h, dtype, d_model, tile=tile)
+    return linear_apply(params["wo"], h, dtype, d_model, **kw)

@@ -26,7 +26,8 @@ from repro.models import ffn as F
 from repro.models import moe as M
 from repro.models import rglru as R
 from repro.models import ssm as S
-from repro.models.common import init_rmsnorm, rmsnorm, rope_angles
+from repro.models.common import (init_rmsnorm, linear_opts, rmsnorm,
+                                 rope_angles)
 
 KINDS_WITH_FFN = {"attn", "local_attn", "rglru"}
 
@@ -105,7 +106,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, cos, sin, *, want_cache: bool
         o = A.flash_attention(q, k, v, causal=True, window=window, chunk=attn_chunk)
         x = x + A.attention_out(p["attn"], cfg, o)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), cfg.mlp_type, cfg.dtype,
-                      dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
+                      dims=(cfg.d_model, cfg.d_ff), **linear_opts(cfg))
         if want_cache:
             if kind == "local_attn":  # ring buffer: last `window` positions
                 W = min(cfg.local_window, k.shape[1])
@@ -138,7 +139,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, cos, sin, *, want_cache: bool
         if want_cache:
             cache = _rglru_prefill_cache(p["rec"], cfg, h)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "geglu", cfg.dtype,
-                      dims=(cfg.d_model, cfg.d_ff), tile=cfg.linear_tile)
+                      dims=(cfg.d_model, cfg.d_ff), **linear_opts(cfg))
     else:
         raise ValueError(kind)
     return x, aux, cache

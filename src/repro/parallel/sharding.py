@@ -62,7 +62,14 @@ def _rules(cfg: ModelConfig, mesh: Mesh):
     # ket linear factor stacks (rank, q_j, t_j): replicated like the
     # embedding factors (they are KBs), or rank-parallel over "model" when
     # opted in — the chain matmul is batched over rank, so rank sharding
-    # turns the final rank sum into one small all-reduce.
+    # turns the final rank sum into one small all-reduce. The fused
+    # kron_matmul kernel folds that rank sum into its last GEMM, which
+    # contracts the whole rank axis locally: per-shard it yields the same
+    # partial sums, so the GSPMD all-reduce story is unchanged — but the
+    # kernel itself is an opaque custom call with no partitioning rule, so
+    # kernels_enabled(None) auto-resolves OFF under an ambient mesh and
+    # rank-sharded runs ride the chain apply unless they wrap the op in
+    # shard_map and opt in with linear_use_kernel=True explicitly.
     ket_rank_ok = getattr(cfg, "ket_shard_rank", False) and \
         getattr(cfg, "linear_rank", 1) % tp == 0
     KET = P("model", None, None) if ket_rank_ok else P()

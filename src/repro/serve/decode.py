@@ -37,7 +37,8 @@ from repro.models import ffn as F
 from repro.models import moe as M
 from repro.models import rglru as R
 from repro.models import ssm as S
-from repro.models.common import out_proj, qkv_proj, rmsnorm, rope_angles
+from repro.models.common import (linear_opts, out_proj, qkv_proj, rmsnorm,
+                                 rope_angles)
 from repro.models.transformer import lm_logits_last
 from repro.parallel import meshctx
 from repro.serve.cache import gather_pages
@@ -254,12 +255,12 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin,
     """x (B, d) one token at per-slot positions step (B,); returns (x, cache)."""
     dt = cfg.dtype
     h = rmsnorm(p["ln1"], x)
-    tile = getattr(cfg, "linear_tile", None)
+    opts = linear_opts(cfg)
     paged = "k_pages" in cache or "c_pages" in cache
     if kind in ("attn", "local_attn"):
-        q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
-        k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
-        v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+        q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, **opts)
+        k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
+        v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
         if cfg.qk_norm:
             q = rmsnorm(p["attn"]["q_norm"], q)
             k = rmsnorm(p["attn"]["k_norm"], k)
@@ -280,9 +281,9 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin,
             o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"],
                                             slot, valid)
             new_cache = {"k": ck, "v": cv}
-        x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+        x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, **opts)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], cfg.mlp_type, dt,
-                      dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
+                      dims=(cfg.d_model, cfg.d_ff), **opts)[:, 0]
         return x, new_cache
     if kind == "moe_attn":
         if cfg.mla:
@@ -297,9 +298,9 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin,
                     cos_r, sin_r)
                 new_cache = {"c": cc, "krope": ckr}
         else:
-            q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, tile=tile)
-            k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
-            v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, tile=tile)
+            q = qkv_proj(p["attn"]["wq"], h, dt, cfg.num_heads, cfg.head_dim, **opts)
+            k = qkv_proj(p["attn"]["wk"], h, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
+            v = qkv_proj(p["attn"]["wv"], h, dt, cfg.num_kv_heads, cfg.head_dim, **opts)
             if cfg.qk_norm:  # must mirror training/prefill (attention_qkv)
                 q = rmsnorm(p["attn"]["q_norm"], q)
                 k = rmsnorm(p["attn"]["k_norm"], k)
@@ -313,7 +314,7 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin,
                 o, ck, cv = kv_decode_attention(cfg, q, k, v, cache["k"], cache["v"],
                                                 step, step + 1)
                 new_cache = {"k": ck, "v": cv}
-            o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+            o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, **opts)
         x = x + o
         moe_out, _ = M.moe_block(p["moe"], cfg, rmsnorm(p["ln2"], x)[:, None])
         return x + moe_out[:, 0], new_cache
@@ -324,7 +325,7 @@ def decode_block(p, cfg: ModelConfig, kind: str, x, cache, step, cos, sin,
         out, new_cache = R.rglru_decode_step(p["rec"], cfg, h, cache)
         x = x + out
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x)[:, None], "geglu", dt,
-                      dims=(cfg.d_model, cfg.d_ff), tile=tile)[:, 0]
+                      dims=(cfg.d_model, cfg.d_ff), **opts)[:, 0]
         return x, new_cache
     raise ValueError(kind)
 
@@ -471,14 +472,14 @@ def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, ptab, step, lens,
     """x (B, C, d) chunk continuing per-slot caches at offsets step (B,);
     rows past lens_b are garbage (ignored downstream). Returns (x, cache)."""
     dt = cfg.dtype
-    tile = getattr(cfg, "linear_tile", None)
+    opts = linear_opts(cfg)
     h = rmsnorm(p["ln1"], x)
     if kind in ("attn", "local_attn"):
         o, new_cache = _chunk_attention(cfg, kind, p["attn"], h, cache, ptab,
                                         step, lens, cos, sin)
-        x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+        x = x + out_proj(p["attn"]["wo"], o, dt, cfg.d_model, **opts)
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), cfg.mlp_type, dt,
-                      dims=(cfg.d_model, cfg.d_ff), tile=tile)
+                      dims=(cfg.d_model, cfg.d_ff), **opts)
         return x, new_cache
     if kind == "moe_attn":
         if cfg.mla:
@@ -487,7 +488,7 @@ def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, ptab, step, lens,
         else:
             o, new_cache = _chunk_attention(cfg, kind, p["attn"], h, cache, ptab,
                                             step, lens, cos, sin)
-            o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, tile=tile)
+            o = out_proj(p["attn"]["wo"], o, dt, cfg.d_model, **opts)
         x = x + o
         moe_out, _ = M.moe_block(p["moe"], cfg, rmsnorm(p["ln2"], x))
         return x + moe_out, new_cache
@@ -498,7 +499,7 @@ def prefill_block(p, cfg: ModelConfig, kind: str, x, cache, ptab, step, lens,
         out, new_cache = R.rglru_prefill_chunk(p["rec"], cfg, h, lens, cache)
         x = x + out
         x = x + F.ffn(p["ffn"], rmsnorm(p["ln2"], x), "geglu", dt,
-                      dims=(cfg.d_model, cfg.d_ff), tile=tile)
+                      dims=(cfg.d_model, cfg.d_ff), **opts)
         return x, new_cache
     raise ValueError(kind)
 

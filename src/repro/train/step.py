@@ -50,18 +50,26 @@ def pin_kernel_blocks(cfg: ModelConfig) -> ModelConfig:
             updates["head_block_b"] = bc.block_b
         if cfg.head_vocab_tile is None:
             updates["head_vocab_tile"] = bc.t1_block
-    if cfg.linear_kind == "ket" and cfg.linear_tile is None:
-        # Tile the ket linears' chain apply like the CE head tiles its t1
-        # axis. Resolve for the widest projection (d_model -> d_ff, or
-        # -> H·Dh when the arch has no dense FFN); apply_matrix clamps the
-        # tile to a divisor of each layer's own t_1.
+    if cfg.linear_kind == "ket" and (
+            cfg.linear_tile is None or cfg.linear_block_b is None):
+        # Resolve the ket linears' tiles from the kron_matmul kernel family
+        # (one table serves both the kernel grid and the chain fallback's t1
+        # streaming). Resolve for the widest projection (d_model -> d_ff, or
+        # -> H·Dh when the arch has no dense FFN); apply_matrix_factors
+        # clamps the tile to a divisor of each layer's own t_1. Quantized
+        # factors tune under their payload dtype's own table key.
         from repro.core import kron as K
         d_out = cfg.d_ff if cfg.d_ff else cfg.num_heads * cfg.head_dim
+        dt = ("float32" if cfg.quant == "none"
+              else jnp.dtype(Q.payload_dtype(cfg.quant)).name)
         bc = autotune.get_block_config(
-            "kron_logits", cfg.linear_rank,
+            "kron_matmul", cfg.linear_rank,
             K.choose_factorization(cfg.d_model, cfg.linear_order),
-            K.choose_factorization(d_out, cfg.linear_order))
-        updates["linear_tile"] = bc.t1_block
+            K.choose_factorization(d_out, cfg.linear_order), dtype=dt)
+        if cfg.linear_tile is None:
+            updates["linear_tile"] = bc.t1_block
+        if cfg.linear_block_b is None:
+            updates["linear_block_b"] = bc.block_b
     return dataclasses.replace(cfg, **updates) if updates else cfg
 
 

@@ -1,7 +1,10 @@
 """Serving numerical conformance: paged-vs-dense caches and chunked-prefill
 vs token-by-token vs full-forward differentials over the
 linear_kind {dense, ket} × quant {none, int8} × cache-kind
-{attn, local_attn, mla, ssm} matrix, plus engine-level equivalence."""
+{attn, local_attn, mla, ssm} matrix — including cells that pin the
+kron_matmul-kernel-routed ket linear path (linear_use_kernel=True: the host
+executor off-TPU, the Pallas kernel on TPU) — plus engine-level
+equivalence."""
 
 import jax
 import jax.numpy as jnp
@@ -27,16 +30,24 @@ KINDS = {
     "ssm": dict(family="ssm", num_heads=4, num_kv_heads=4),
 }
 
-CELLS = [("dense", "none"), ("ket", "none"), ("dense", "int8"), ("ket", "int8")]
+# (linear_kind, quant, linear_use_kernel): the kernel=True cells route every
+# ket projection through the fused kron_matmul op (custom-VJP host executor
+# off-TPU — the same tiled algorithm as the TPU kernel), so paged/chunked
+# conformance pins the kernel-routed path, not just the chain
+CELLS = [("dense", "none", None), ("ket", "none", None),
+         ("dense", "int8", None), ("ket", "int8", None),
+         ("ket", "none", True), ("ket", "int8", True)]
 
 
-def _cfg(kind: str, linear_kind: str, quant: str) -> ModelConfig:
+def _cfg(kind: str, linear_kind: str, quant: str,
+         use_kernel=None) -> ModelConfig:
     base = dict(
         name=f"conf-{kind}", num_layers=2, d_model=32, d_ff=96, vocab_size=64,
         head_dim=8, embedding_kind="word2ketxs", embedding_rank=4,
         head_kind="kron", head_rank=4, dtype=jnp.float32,
         param_dtype=jnp.float32, remat="none", linear_kind=linear_kind,
-        linear_rank=4, quant=quant)
+        linear_rank=4, quant=quant, linear_use_kernel=use_kernel,
+        linear_tile=2, linear_block_b=8)
     base.update(KINDS[kind])
     return ModelConfig(**base)
 
@@ -65,16 +76,16 @@ def _chunked_prefill(cfg, params, cache, toks, C):
     return logits, cache, ticks
 
 
-@pytest.mark.parametrize("linear_kind,quant", CELLS)
+@pytest.mark.parametrize("linear_kind,quant,use_kernel", CELLS)
 @pytest.mark.parametrize("kind", list(KINDS))
-def test_conformance_matrix(kind, linear_kind, quant):
+def test_conformance_matrix(kind, linear_kind, quant, use_kernel):
     """One cell of the serving conformance matrix:
     (a) dense token-by-token decode == full forward at every position;
     (b) paged decode == dense decode;
     (c) chunked prefill (paged, ragged last chunk) reaches the same
         last-position logits in ⌈P/C⌉ calls, and the post-prefill decode
         continuation matches the stepwise continuation."""
-    cfg = _cfg(kind, linear_kind, quant)
+    cfg = _cfg(kind, linear_kind, quant, use_kernel)
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
     B, T, C = 2, 7, 3
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
