@@ -64,6 +64,60 @@ def _drain(cfg, params, req_makers, *, prefill_mode, batch_slots, max_len,
     return eng, wall
 
 
+def _page_pressure_row(cfg, params, report, quick: bool) -> dict:
+    """Fault-tolerance acceptance row: under a page pool sized for ~1.5
+    requests plus seeded external page holds, optimistic admission must
+    sustain strictly more concurrent in-flight requests than worst-case
+    reservation, with identical outputs (no conformance regression), zero
+    failures, and a clean allocator. Also asserts the robustness gauges
+    (step_p50_s/p95, preemption/retry/quarantine counters) that stats()
+    grew alongside the preemption scheduler."""
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.faultinject import FaultInjector
+
+    n_req = 3 if quick else 6
+    peaks, stats, outs = {}, {}, {}
+    for admission in ("reserve", "optimistic"):
+        # same seeded pressure schedule for both admission policies
+        inj = FaultInjector.seeded(11, horizon=600, p_hold=0.08,
+                                   max_hold_pages=1, max_hold_ticks=3)
+        eng = ServingEngine(cfg, params, batch_slots=2, max_len=32,
+                            page_size=4, num_pages=4, prefill_chunk=4,
+                            admission=admission, injector=inj)
+        reqs = [Request(uid=i, prompt=[(7 * i + j) % 97 + 1 for j in range(3)],
+                        max_new_tokens=5) for i in range(n_req)]
+        for r in reqs:
+            eng.submit(r)
+        peak = ticks = 0
+        while (eng.queue or any(s is not None for s in eng.slot_req)) \
+                and ticks < 4_000:
+            eng.step()
+            eng.check()  # allocator/ptab invariants audited every tick
+            peak = max(peak, sum(s is not None for s in eng.slot_req))
+            ticks += 1
+        eng.release_held()
+        st = eng.stats()
+        assert st["completed"] == n_req and st["failed"] == 0, st
+        assert st["free_pages"] == st["page_capacity"], st
+        assert st["step_p50_s"] is not None and st["step_p95_s"] is not None
+        for gauge in ("preemptions", "retries", "quarantines", "stragglers",
+                      "stalled_ticks"):
+            assert isinstance(st[gauge], int), gauge
+        peaks[admission], stats[admission] = peak, st
+        outs[admission] = [r.output for r in reqs]
+        report(f"serving_pressure_{admission},,peak_in_flight={peak} "
+               f"preemptions={st['preemptions']} ticks={st['ticks']} "
+               f"stalled={st['stalled_ticks']}")
+    assert outs["optimistic"] == outs["reserve"], \
+        "admission policy changed decoded outputs"
+    assert peaks["optimistic"] > peaks["reserve"], (
+        f"optimistic admission must sustain strictly more concurrent "
+        f"requests under page pressure; peaks={peaks}")
+    assert stats["reserve"]["preemptions"] == 0  # reservation never preempts
+    return {"peak_in_flight": peaks,
+            "optimistic": stats["optimistic"], "reserve": stats["reserve"]}
+
+
 def run(report, json_path=None, quick: bool = False):
     from repro.configs import get_smoke
     from repro.models import model as MD
@@ -126,6 +180,8 @@ def run(report, json_path=None, quick: bool = False):
         f"chunked prefill must ingest prompts >=3x faster than the "
         f"token-by-token seed path; measured {speedup:.2f}x")
 
+    pressure = _page_pressure_row(cfg, params, report, quick)
+
     if json_path:
         payload = {
             "config": {"arch": cfg.name, "requests": n_req,
@@ -139,6 +195,7 @@ def run(report, json_path=None, quick: bool = False):
                         "prompt_tok_per_s": tput["chunked"],
                         **{k: v for k, v in st_c.items()}},
             "prefill_speedup": speedup,
+            "page_pressure": pressure,
         }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)

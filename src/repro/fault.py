@@ -1,0 +1,82 @@
+"""Shared fault-tolerance hooks: preemption handling + straggler watchdog.
+
+Used by both the training loop (train/loop.py) and the serving engine
+(serve/engine.py):
+
+* Preemption: SIGTERM/SIGINT sets a flag; the consumer reacts at its next
+  step/tick boundary (training checkpoints and exits; the engine stops
+  admitting and drains in-flight requests). Maps to Borg/K8s eviction and
+  TPU maintenance events.
+* Stragglers: a per-step wall-clock watchdog. On a training pod the common
+  source is a slow input host; because the synthetic pipeline is
+  counter-based and stateless, ANY host can regenerate a late shard's batch,
+  so mitigation is a deterministic substitution rather than a barrier stall.
+  In the serving engine a straggling tick is an SLO signal (and, under fault
+  injection, the detection channel for injected slow ticks). Either way the
+  watchdog records step-time p50/p95 so regressions show up in metrics.
+
+``train/fault.py`` re-exports both classes for backwards compatibility.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+
+__all__ = ["PreemptionHandler", "StragglerWatchdog"]
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._requested = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handle)
+            except (ValueError, OSError):  # non-main thread / restricted env
+                pass
+
+    def _handle(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def request(self) -> None:
+        """Programmatic preemption: same flag the signal handler sets (the
+        engine's drain entry point; tests use it instead of os.kill)."""
+        self._requested = True
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+class StragglerWatchdog:
+    """Tracks step durations; flags steps slower than `factor` x rolling median."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor = factor
+        self.window = window
+        self.durations: list[float] = []
+        self.straggler_steps: list[int] = []
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        self.durations.append(duration_s)
+        hist = self.durations[-self.window:]
+        med = sorted(hist)[len(hist) // 2]
+        slow = len(hist) >= 5 and duration_s > self.factor * med
+        if slow:
+            self.straggler_steps.append(step)
+        return slow
+
+    def stats(self) -> dict:
+        if not self.durations:
+            return {}
+        h = sorted(self.durations)
+        return {
+            "step_p50_s": h[len(h) // 2],
+            "step_p95_s": h[int(len(h) * 0.95)],
+            "stragglers": len(self.straggler_steps),
+        }

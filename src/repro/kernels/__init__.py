@@ -22,13 +22,40 @@ oracle used for validation and as the backward fallback).
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 
+# Op-layer kill switch (REPRO_KRON_BWD=ref-style): when forced off, EVERY
+# fused-kernel route resolves to the reference path, even where a config
+# explicitly opted in with use_kernel=True. This is the degradation ladder's
+# last rung — the serving engine flips it when a Pallas call raises so any
+# code traced afterwards (new engines, retried steps under a replaced
+# config) stays on the ref kernels. NOTE: already-compiled jit functions are
+# NOT retraced by flipping this; callers that need an immediate switch must
+# also change a static argument (the engine swaps its ModelConfig).
+_force_off = os.environ.get("REPRO_KERNELS", "auto")  # "auto" | "off"
+if _force_off not in ("auto", "off"):
+    raise ValueError(f"REPRO_KERNELS={_force_off!r} — expected 'auto' or 'off'")
+
+
+def set_kernels_forced_off(off: bool) -> None:
+    """Force every kernel route to the reference paths (degraded mode)."""
+    global _force_off
+    _force_off = "off" if off else "auto"
+
+
+def kernels_forced_off() -> bool:
+    return _force_off == "off"
+
 
 def kernels_enabled(flag: Optional[bool] = None) -> bool:
     """Resolve a config's ``use_kernel`` tri-state.
+
+    Forced-off mode (``REPRO_KERNELS=off`` or :func:`set_kernels_forced_off`,
+    the fault-degradation switch) wins over everything, including an
+    explicit ``use_kernel=True``.
 
     None = auto: the kernels engage on TPU **only when no multi-device mesh
     is ambient**. Inside a GSPMD program a bare ``pallas_call`` is an opaque
@@ -40,6 +67,8 @@ def kernels_enabled(flag: Optional[bool] = None) -> bool:
     but not the default for the pure-jnp reference paths that CPU unit
     tests exercise.
     """
+    if _force_off == "off":
+        return False
     if flag is not None:
         return flag
     if jax.default_backend() != "tpu":

@@ -29,24 +29,33 @@ def _run_engine(cfg, args) -> int:
         cfg, params, batch_slots=args.batch, max_len=args.max_len,
         quant=args.quant, cache_mode="dense" if args.dense else "paged",
         prefill_chunk=args.prefill_chunk or None,
-        prefill_mode=args.prefill_mode)
+        prefill_mode=args.prefill_mode, admission=args.admission,
+        num_pages=args.num_pages or None,
+        handle_signals=True)  # SIGTERM drains instead of dropping requests
     key = jax.random.PRNGKey(1)
     for i in range(args.requests):
         key, k = jax.random.split(key)
         prompt = jax.random.randint(k, (args.prompt_len,), 0, cfg.vocab_size)
         eng.submit(Request(uid=i, prompt=[int(t) for t in prompt],
-                           max_new_tokens=args.new_tokens))
-    ticks = eng.run_until_drained()
+                           max_new_tokens=args.new_tokens,
+                           deadline_s=args.deadline_s or None))
+    res = eng.run_until_drained()
     st = eng.stats()
     pages = (f", pages free={st['free_pages']}/{st['page_capacity']}"
              if st["free_pages"] is not None else "")
-    print(f"[serve:engine] {cfg.name} {eng.prefill_mode}/{eng.cache_mode}: "
-          f"{st['completed']} reqs in {ticks} ticks "
+    fault = (f", failed={st['failed']}" if st["failed"] else "") + \
+        (f", preempted={st['preemptions']}" if st["preemptions"] else "") + \
+        ("" if res.drained else f", UNDRAINED stranded={res.stranded}") + \
+        (" [degraded]" if st["degraded"] else "")
+    lat = ("p50=n/a p95=n/a" if st["p50_latency_s"] is None else
+           f"p50={st['p50_latency_s']:.3f}s p95={st['p95_latency_s']:.3f}s")
+    print(f"[serve:engine] {cfg.name} {eng.prefill_mode}/{eng.cache_mode}"
+          f"/{eng.admission}: {st['completed']} reqs in {res.ticks} ticks "
           f"({st['prefill_ticks']} prefill + {st['decode_ticks']} decode), "
           f"{st['prompt_tokens_per_sec']:.0f} prompt tok/s, "
-          f"{st['tokens_per_sec']:.0f} gen tok/s, "
-          f"p50={st['p50_latency_s']:.3f}s p95={st['p95_latency_s']:.3f}s{pages}")
-    return 0
+          f"{st['tokens_per_sec']:.0f} gen tok/s, {lat}"
+          f"{pages}{fault}")
+    return 0 if res.drained else 1
 
 
 def main(argv=None):
@@ -80,6 +89,14 @@ def main(argv=None):
                    help="engine mode: prompt tokens per prefill tick (0 = config)")
     p.add_argument("--prefill-mode", default="chunked",
                    choices=["chunked", "stepwise"])
+    p.add_argument("--admission", default="optimistic",
+                   choices=["optimistic", "reserve"],
+                   help="engine mode: incremental page growth with "
+                        "youngest-slot preemption, or worst-case reservation")
+    p.add_argument("--num-pages", type=int, default=0,
+                   help="engine mode: page-pool size (0 = full capacity)")
+    p.add_argument("--deadline-s", type=float, default=0.0,
+                   help="engine mode: per-request TTL (0 = none)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 

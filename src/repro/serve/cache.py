@@ -256,6 +256,12 @@ class PageAllocator:
     def outstanding_count(self) -> int:
         return len(self._outstanding)
 
+    @property
+    def outstanding(self) -> frozenset[int]:
+        """Snapshot of the allocated page ids (engine.check() reconciles
+        this against per-slot ownership + externally held pages)."""
+        return frozenset(self._outstanding)
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 

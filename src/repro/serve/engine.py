@@ -1,4 +1,5 @@
-"""Continuous-batching serving engine: chunked prefill + paged KV cache.
+"""Continuous-batching serving engine: chunked prefill + paged KV cache,
+with fault-tolerant scheduling.
 
 The scheduler keeps a fixed decode batch full over two jitted step
 functions (never retraced — admissions only touch host bookkeeping, the
@@ -15,19 +16,54 @@ page table, and slot resets):
 * **decode ticks** — one token for every decoding slot through the
   (cheaper, chunk-free) decode step, as before.
 
-Memory is governed by a **page budget**: with ``cache_mode="paged"``
-(default) unbounded-attention KV lives in ``(num_pages, page_size, ...)``
-pools (serve/cache.py) and admission *blocks FIFO* until the free list
-covers the request's worst case (⌈(prompt+max_new)/page_size⌉ pages —
-reservation up front means no mid-decode eviction). Retirement returns the
-pages and immediately re-points the slot's page-table row at the trash
-page. SSM/RG-LRU state and local-attention rings stay dense behind the
-same cache-kind interface.
+Memory is governed by a **page budget** (serve/cache.py pools) under one of
+two admission policies:
 
-Slot isolation uses the explicit axis-tag pytree (serve/cache.slot_axes):
-each leaf is reset along its *tagged* batch axis — never by guessing which
-axis happens to equal ``batch_slots`` (stacked layer-group leaves carry a
-leading group-stack axis that such guessing confuses with batch).
+* ``admission="optimistic"`` (default with chunked prefill) — a request
+  admits as soon as the free list covers its *first chunk*; pages are then
+  allocated incrementally, right before each tick writes into them. On pool
+  exhaustion the engine **preempts the youngest slot**: its pages return to
+  the free list and the request requeues at the *front* of the queue with
+  its already-generated tokens as a resumable prefix (greedy decode replays
+  the prefix exactly, so a preempted-then-resumed request emits the same
+  stream as an uninterrupted run). Only strictly-younger slots are ever
+  preempted on behalf of an older one, so FIFO completion order is
+  preserved and the oldest request always progresses; if even preempting
+  every younger slot cannot cover a slot's next write (external pressure,
+  ``hold_pages``), the slot **stalls** for the tick (lens 0 through the
+  mixed tick — its state does not advance).
+* ``admission="reserve"`` — the worst case ⌈(prompt+max_new)/page_size⌉ is
+  reserved up front and admission blocks FIFO until it fits: no preemption
+  machinery, the pre-fault-tolerance behavior (and the only policy for
+  ``prefill_mode="stepwise"``, whose batched decode tick cannot express a
+  per-slot stall).
+
+Request lifecycle robustness (see docs/serving.md "Fault model"):
+
+* **deadlines** — ``Request.deadline_s`` is a TTL from submission; expired
+  requests fail with reason ``"deadline"`` whether queued or mid-decode.
+  ``cancel(uid)`` fails one request on demand.
+* **step failures** — every jitted model call runs under bounded
+  retry-with-backoff; when retries exhaust, the engine *degrades*: the
+  op-layer kernel switch flips to the reference paths
+  (``repro.kernels.set_kernels_forced_off``, the ``REPRO_KERNELS=off``
+  switch) and the config is swapped to a kernel-free clone (forcing a
+  retrace), then the call retries on the degraded rung. If even the ref
+  path fails, every in-flight and queued request fails with a recorded
+  reason — never silently lost.
+* **non-finite logits** — an emitting slot whose logits are not finite is
+  **quarantined**: requeued once (replaying its prefix), failed with reason
+  ``"nonfinite_logits"`` on the second strike. The garbage token is never
+  emitted.
+* **drain** — SIGTERM/SIGINT (opt-in ``handle_signals=True``, shared
+  ``repro.fault.PreemptionHandler``) or ``request_drain()`` stops
+  admissions; ``run_until_drained`` finishes in-flight requests and fails
+  whatever is still queued with reason ``"drained"``.
+
+``check()`` audits the allocator free list, per-slot page ownership, and
+the device page table against each other after any tick; the chaos suite
+(tests/test_serving_fault.py + serve/faultinject.py) drives all of the
+above on seeded schedules.
 
 Serving-grade quantization: ``quantize_params`` / ``dequantize_params``
 (re-exported from core/quant) are the post-training calibration roundtrip;
@@ -43,7 +79,7 @@ import dataclasses
 import functools
 import time
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,11 +87,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.quant import dequantize_params, quantize_params
+from repro.fault import PreemptionHandler, StragglerWatchdog
 from repro.models import model as MD
-from repro.serve.cache import (PAGED_KINDS, PageAllocator, logical_pages,
-                               pages_needed, reset_slot, slot_axes)
+from repro.serve.cache import (PAGED_KINDS, TRASH_PAGE, PageAllocator,
+                               logical_pages, pages_needed, reset_slot,
+                               slot_axes)
 
-__all__ = ["Request", "ServingEngine", "quantize_params", "dequantize_params"]
+__all__ = ["Request", "ServingEngine", "DrainResult", "EngineStepError",
+           "quantize_params", "dequantize_params"]
 
 
 # module-level jitted entry points (cfg is a hashable frozen dataclass):
@@ -71,16 +110,39 @@ def _jit_prefill(cfg, params, cache, tokens, lens):
     return MD.prefill_chunk_fn(params, cfg, cache, tokens, lens)
 
 
+class EngineStepError(RuntimeError):
+    """A model call failed beyond the retry budget AND the degraded rung."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None  # TTL from submission; None = none
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     finished_at: Optional[float] = None
+    status: str = "new"  # new | queued | running | done | failed
+    fail_reason: Optional[str] = None
+    preemptions: int = 0
+    # quarantine strikes: one requeue is forgiven, the second failure is
+    # attributed to the request (persistently non-finite model state)
+    nonfinite_strikes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainResult:
+    """Outcome of ``run_until_drained`` — never silently truncated: if the
+    tick budget ran out with work still in flight, ``drained`` is False and
+    ``stranded`` names the requests left behind (also surfaced by
+    ``stats()["stranded"]``)."""
+
+    ticks: int
+    drained: bool
+    stranded: tuple[int, ...] = ()  # uids still queued or in-flight
 
 
 class ServingEngine:
@@ -90,11 +152,20 @@ class ServingEngine:
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefill_mode: str = "chunked"):
+                 prefill_mode: str = "chunked",
+                 admission: str = "optimistic",
+                 max_step_retries: int = 2,
+                 retry_backoff_s: float = 0.02,
+                 injector=None,
+                 clock: Optional[Callable[[], float]] = None,
+                 handle_signals: bool = False,
+                 watchdog_factor: float = 10.0):
         if cache_mode not in ("paged", "dense"):
             raise ValueError(cache_mode)
         if prefill_mode not in ("chunked", "stepwise"):
             raise ValueError(prefill_mode)
+        if admission not in ("optimistic", "reserve"):
+            raise ValueError(admission)
         self.cfg = cfg
         # post-training calibration: quantize ket factors to the wire format
         # once at admission; no-op for already-quantized or "none"
@@ -126,6 +197,13 @@ class ServingEngine:
         self._axes = slot_axes(self.cache)
         self._needs_pages = (self.allocator is not None
                              and any(k in PAGED_KINDS for k in cfg.layer_pattern))
+        # the batched decode tick cannot stall a single slot (its step
+        # counter advances for the whole batch), so optimistic admission —
+        # whose exhaustion handling needs per-slot stalls — requires the
+        # ragged mixed tick. Without pages there is nothing to run out of.
+        if prefill_mode == "stepwise" or not self._needs_pages:
+            admission = "reserve"
+        self.admission = admission
 
         self._step = functools.partial(_jit_step, cfg)
         self._prefill = functools.partial(_jit_prefill, cfg)
@@ -133,50 +211,124 @@ class ServingEngine:
         # slot bookkeeping (host side)
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_pending: list[deque] = [deque() for _ in range(batch_slots)]
-        self.slot_new: list[int] = [0] * batch_slots
         self.slot_pages: list[list[int]] = [[] for _ in range(batch_slots)]
+        # tokens written into the slot's cache so far (mirrors cache["step"])
+        self.slot_pos: list[int] = [0] * batch_slots
+        # admission sequence number: smallest = oldest (preemption victims
+        # are always the youngest)
+        self.slot_seq: list[int] = [0] * batch_slots
+        self._admit_seq = 0
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
+        self.failed: list[Request] = []
         self._cur_tokens = np.zeros((batch_slots,), np.int32)
         self.prefill_ticks = 0
         self.decode_ticks = 0
+        self.stalled_ticks = 0
         self._busy_s = 0.0
+        self._tick = 0
 
+        # fault tolerance
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self._injector = injector
+        self._clock = clock or time.time
+        self.watchdog = StragglerWatchdog(factor=watchdog_factor)
+        self._preempt_handler = PreemptionHandler() if handle_signals else None
+        self._draining = False
+        self._held_pages: list[int] = []
+        self._last_drain: Optional[DrainResult] = None
+        self.degraded = False
+        self.degrade_reason: Optional[str] = None
+        self.preemptions = 0
+        self.retries = 0
+        self.quarantines = 0
+
+    # ------------------------------------------------------------------
+    # submission + lifecycle
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         if not req.prompt:
             raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            # a 0-budget request admits a slot that can never retire under
+            # chunked prefill (no emission ever happens)
+            raise ValueError(f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
+        if req.eos_id is not None and req.eos_id < 0:
+            raise ValueError(f"eos_id must be a token id (>= 0), got {req.eos_id}")
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {req.deadline_s}")
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt({len(req.prompt)}) + max_new({req.max_new_tokens}) "
                 f"exceeds max_len={self.max_len}")
-        if self._needs_pages and self._pages_for(req) > self.allocator.capacity:
+        if self._needs_pages and self._pages_worst_case(req) > self.allocator.capacity:
             raise ValueError(
-                f"request needs {self._pages_for(req)} pages but the pool "
+                f"request needs {self._pages_worst_case(req)} pages but the pool "
                 f"only has {self.allocator.capacity}: it could never admit")
-        req.submitted_at = time.time()
+        req.submitted_at = self._clock()
+        req.status = "queued"
         self.queue.append(req)
 
-    def _pages_for(self, req: Request) -> int:
-        # worst-case reservation up front: admission blocks rather than a
-        # mid-decode allocation failing (no eviction/preemption machinery)
+    def cancel(self, uid: int) -> bool:
+        """Fail one request (queued or in-flight) with reason "cancelled"."""
+        for req in self.queue:
+            if req.uid == uid:
+                self.queue.remove(req)
+                self._fail(req, "cancelled")
+                return True
+        for s in range(self.B):
+            req = self.slot_req[s]
+            if req is not None and req.uid == uid:
+                self._fail(req, "cancelled", slot=s)
+                return True
+        return False
+
+    def request_drain(self):
+        """Stop admitting; ``run_until_drained`` finishes in-flight work and
+        fails the rest with reason "drained" (the SIGTERM path)."""
+        self._draining = True
+
+    def _pages_worst_case(self, req: Request) -> int:
         return pages_needed(len(req.prompt) + req.max_new_tokens, self.page_size)
 
+    def _resume_prompt(self, req: Request) -> list[int]:
+        """The prefix a (re)admitted request must prefill: its prompt plus
+        everything already generated. Greedy decode replays the generated
+        tokens bit-exactly, so resumption is invisible in the output."""
+        return list(req.prompt) + list(req.output)
+
+    # ------------------------------------------------------------------
+    # admission + page growth + preemption
+    # ------------------------------------------------------------------
+    def _first_tick_pages(self, req: Request) -> int:
+        """Optimistic admission price: pages covering the first tick's
+        tokens only (the rest allocates as the sequence grows)."""
+        prefix = len(req.prompt) + len(req.output)
+        return pages_needed(min(self.prefill_chunk, prefix), self.page_size)
+
     def _admit(self):
+        if self._draining:
+            return
         for s in range(self.B):
             if self.slot_req[s] is not None or not self.queue:
                 continue
             req = self.queue[0]
             pages: list[int] = []
             if self._needs_pages:
-                got = self.allocator.alloc(self._pages_for(req))
+                want = (self._pages_worst_case(req) if self.admission == "reserve"
+                        else self._first_tick_pages(req))
+                got = self.allocator.alloc(want)
                 if got is None:
                     return  # page budget exhausted: block FIFO (no skipping)
                 pages = got
             self.queue.popleft()
+            self._admit_seq += 1
             self.slot_req[s] = req
-            self.slot_new[s] = 0
+            self.slot_seq[s] = self._admit_seq
             self.slot_pages[s] = pages
+            self.slot_pos[s] = 0
+            req.status = "running"
             # engine-level cache isolation: zero the slot along the tagged
             # axes (clears dense state, the step counter, and the ptab row)
             self.cache = reset_slot(self.cache, self._axes, s)
@@ -184,17 +336,62 @@ class ServingEngine:
                 row = np.zeros((self.cache["ptab"].shape[1],), np.int32)
                 row[:len(pages)] = pages
                 self.cache["ptab"] = self.cache["ptab"].at[s].set(jnp.asarray(row))
+            prefix = self._resume_prompt(req)
             if self.prefill_mode == "chunked":
-                self.slot_pending[s] = deque(req.prompt)
+                self.slot_pending[s] = deque(prefix)
                 self._cur_tokens[s] = 0
             else:  # stepwise: first prompt token feeds the next decode tick
-                self.slot_pending[s] = deque(req.prompt)
+                self.slot_pending[s] = deque(prefix)
                 self._cur_tokens[s] = self.slot_pending[s].popleft()
 
-    def _retire(self, s: int, req: Request):
-        req.finished_at = time.time()
-        self.done.append(req)
+    def _tokens_this_tick(self, s: int) -> int:
+        if self.slot_pending[s]:
+            n = len(self.slot_pending[s])
+            return min(self.prefill_chunk, n) if self.prefill_mode == "chunked" else 1
+        return 1  # decoding: one token
+
+    def _grow(self) -> set[int]:
+        """Optimistic mode: make sure every live slot owns the pages its
+        next tick will write into, preempting strictly-younger slots on
+        exhaustion. Returns the slots that must stall this tick."""
+        stalled: set[int] = set()
+        if self.admission != "optimistic":
+            return stalled
+        order = sorted((s for s in range(self.B) if self.slot_req[s] is not None),
+                       key=lambda s: self.slot_seq[s])
+        for s in order:
+            if self.slot_req[s] is None:
+                continue  # preempted by an older slot earlier in this pass
+            need = pages_needed(self.slot_pos[s] + self._tokens_this_tick(s),
+                                self.page_size) - len(self.slot_pages[s])
+            if need <= 0:
+                continue
+            while not self.allocator.can_alloc(need):
+                victim = self._youngest_live_slot(younger_than=self.slot_seq[s])
+                if victim is None:
+                    break
+                self._preempt(victim, "page_pressure")
+            got = self.allocator.alloc(need)
+            if got is None:
+                stalled.add(s)  # external pressure: wait, don't corrupt
+                continue
+            base = len(self.slot_pages[s])
+            self.slot_pages[s].extend(got)
+            ptab = self.cache["ptab"]
+            for j, p in enumerate(got):
+                ptab = ptab.at[s, base + j].set(p)
+            self.cache["ptab"] = ptab
+        return stalled
+
+    def _youngest_live_slot(self, younger_than: int) -> Optional[int]:
+        cands = [s for s in range(self.B)
+                 if self.slot_req[s] is not None and self.slot_seq[s] > younger_than]
+        return max(cands, key=lambda s: self.slot_seq[s]) if cands else None
+
+    def _release_slot(self, s: int):
         self.slot_req[s] = None
+        self.slot_pending[s].clear()
+        self.slot_pos[s] = 0
         self._cur_tokens[s] = 0
         if self.slot_pages[s]:
             self.allocator.free(self.slot_pages[s])
@@ -202,13 +399,146 @@ class ServingEngine:
         if "ptab" in self.cache:
             # re-point the idle slot at the trash page NOW: its masked decode
             # writes must not land in pages a future request may own
-            self.cache["ptab"] = self.cache["ptab"].at[s].set(0)
+            self.cache["ptab"] = self.cache["ptab"].at[s].set(TRASH_PAGE)
 
+    def _preempt(self, s: int, reason: str):
+        """Evict slot ``s`` and requeue its request at the FRONT of the
+        queue with its generated tokens as a resumable prefix. Preempted
+        requests were admitted before anything still queued, so the front
+        slot preserves FIFO completion order."""
+        req = self.slot_req[s]
+        assert req is not None
+        req.preemptions += 1
+        req.status = "queued"
+        self.preemptions += 1
+        self._release_slot(s)
+        self.queue.appendleft(req)
+
+    def _retire(self, s: int, req: Request):
+        req.finished_at = self._clock()
+        req.status = "done"
+        self.done.append(req)
+        self._release_slot(s)
+
+    def _fail(self, req: Request, reason: str, slot: Optional[int] = None):
+        req.status = "failed"
+        req.fail_reason = reason
+        req.finished_at = self._clock()
+        self.failed.append(req)
+        if slot is not None:
+            self._release_slot(slot)
+
+    def _quarantine(self, s: int):
+        """Non-finite logits for an emitting slot: requeue once (the prefix
+        replays through a reset cache), fail on the second strike. The
+        garbage token is never emitted."""
+        req = self.slot_req[s]
+        self.quarantines += 1
+        if req.nonfinite_strikes >= 1:
+            self._fail(req, "nonfinite_logits", slot=s)
+            return
+        req.nonfinite_strikes += 1
+        req.preemptions += 1
+        req.status = "queued"
+        self._release_slot(s)
+        self.queue.appendleft(req)
+
+    def _expire(self):
+        now = self._clock()
+
+        def expired(req: Request) -> bool:
+            return (req.deadline_s is not None
+                    and now - req.submitted_at > req.deadline_s)
+
+        for req in [r for r in self.queue if expired(r)]:
+            self.queue.remove(req)
+            self._fail(req, "deadline")
+        for s in range(self.B):
+            req = self.slot_req[s]
+            if req is not None and expired(req):
+                self._fail(req, "deadline", slot=s)
+
+    # ------------------------------------------------------------------
+    # page pressure hooks (fault injection / benchmarks)
+    # ------------------------------------------------------------------
+    def hold_pages(self, n: int) -> int:
+        """Steal up to ``n`` pages from the free list (external pressure:
+        a co-tenant, a shrinking pool). Returns how many were taken."""
+        if self.allocator is None or n <= 0:
+            return 0
+        got = self.allocator.alloc(min(n, self.allocator.free_count))
+        if not got:
+            return 0
+        self._held_pages.extend(got)
+        return len(got)
+
+    def release_held(self) -> int:
+        """Return every held page to the free list."""
+        n = len(self._held_pages)
+        if n:
+            self.allocator.free(self._held_pages)
+            self._held_pages = []
+        return n
+
+    # ------------------------------------------------------------------
+    # model-call fault envelope
+    # ------------------------------------------------------------------
+    def _model_call(self, thunk):
+        """Run one jitted model call under the degradation ladder: bounded
+        retry-with-backoff, then kernel degradation (ref paths + retraced
+        config), then fail-everything. ``thunk`` re-reads ``self._step`` /
+        ``self._prefill`` so a degraded config takes effect on retry."""
+        attempts = 0
+        while True:
+            try:
+                if self._injector is not None:
+                    self._injector.before_model_call(self)
+                return thunk()
+            except Exception as e:  # noqa: BLE001 — every failure is handled
+                attempts += 1
+                if attempts <= self.max_step_retries:
+                    self.retries += 1
+                    time.sleep(self.retry_backoff_s * (2 ** (attempts - 1)))
+                    continue
+                if not self.degraded:
+                    self._degrade(f"step failure: {e!r}")
+                    attempts = 0
+                    continue
+                raise EngineStepError(
+                    f"model call failed beyond retries and degraded mode: {e!r}"
+                ) from e
+
+    def _degrade(self, reason: str):
+        """Drop to the reference kernel paths: flip the op-layer switch so
+        anything traced from here on avoids Pallas, and swap in a
+        kernel-free config clone (a new static jit key — the poisoned
+        compiled executable is never reused)."""
+        from repro import kernels as KR
+        KR.set_kernels_forced_off(True)
+        self.cfg = dataclasses.replace(self.cfg, use_kernels=False,
+                                       linear_use_kernel=False)
+        self._step = functools.partial(_jit_step, self.cfg)
+        self._prefill = functools.partial(_jit_prefill, self.cfg)
+        self.degraded = True
+        self.degrade_reason = reason
+
+    def _fail_all_in_flight(self, reason: str):
+        for s in range(self.B):
+            req = self.slot_req[s]
+            if req is not None:
+                self._fail(req, reason, slot=s)
+        while self.queue:
+            self._fail(self.queue.popleft(), reason)
+
+    # ------------------------------------------------------------------
+    # ticks
+    # ------------------------------------------------------------------
     def _emit(self, s: int, req: Request, tok: int):
-        """Record one sampled token; retire on EOS / max-new."""
+        """Record one sampled token; retire on EOS / max-new. The finish
+        check counts the request's TOTAL output (it may have accumulated
+        across preemptions), not tokens since the last admission."""
         req.output.append(tok)
-        self.slot_new[s] += 1
-        finished = (self.slot_new[s] >= req.max_new_tokens
+        finished = (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id))
         if finished:
             self._retire(s, req)
@@ -221,17 +551,34 @@ class ServingEngine:
         self.key, k = jax.random.split(self.key)
         return np.asarray(jax.random.categorical(k, logits), np.int32)
 
-    # ------------------------------------------------------------------
-    def _prefill_tick(self):
+    def _guarded_emit(self, logits, emitting: list[int]):
+        """Sample and emit for ``emitting`` slots, quarantining any slot
+        whose logits row is not finite (max over the vocab catches both NaN
+        and ±inf in one cheap (B,) transfer)."""
+        if self._injector is not None:
+            logits = self._injector.corrupt_logits(self, logits, emitting)
+        nxt = self._sample(logits)
+        finite = np.isfinite(np.asarray(jnp.max(logits, axis=-1)))
+        for s in emitting:
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            if not finite[s]:
+                self._quarantine(s)
+            else:
+                self._emit(s, req, int(nxt[s]))
+
+    def _prefill_tick(self, stalled: set[int] = frozenset()):
         """Mixed tick: prefilling slots consume up to C prompt tokens; slots
         already decoding ride along as length-1 chunks (prefill_step is the
-        stepwise decode for C==1), so prefill pressure never stalls them."""
+        stepwise decode for C==1), so prefill pressure never stalls them.
+        Stalled slots keep lens 0 — their cache state does not advance."""
         C = self.prefill_chunk
         toks = np.zeros((self.B, C), np.int32)
         lens = np.zeros((self.B,), np.int32)
         was_decoding = [False] * self.B
         for s in range(self.B):
-            if self.slot_req[s] is None:
+            if self.slot_req[s] is None or s in stalled:
                 continue
             if self.slot_pending[s]:
                 n = min(C, len(self.slot_pending[s]))
@@ -242,68 +589,154 @@ class ServingEngine:
                 was_decoding[s] = True
                 toks[s, 0] = self._cur_tokens[s]
                 lens[s] = 1
-        logits, self.cache = self._prefill(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(lens))
+        if not lens.any():  # every live slot stalled: no model call
+            self.stalled_ticks += 1
+            return
+        logits, self.cache = self._model_call(
+            lambda: self._prefill(self.params, self.cache,
+                                  jnp.asarray(toks), jnp.asarray(lens)))
         self.prefill_ticks += 1
-        nxt = self._sample(logits)
+        emitting = []
         for s in range(self.B):
             req = self.slot_req[s]
             if req is None or lens[s] == 0:
-                continue  # idle slot
+                continue  # idle or stalled slot
+            self.slot_pos[s] += int(lens[s])
             if not was_decoding[s] and self.slot_pending[s]:
                 continue  # still mid-prompt: logits row not meaningful yet
             # piggybacked decode, or prompt done (first token samples here)
-            self._emit(s, req, int(nxt[s]))
+            emitting.append(s)
+        self._guarded_emit(logits, emitting)
 
     def _decode_tick(self):
         toks = jnp.asarray(self._cur_tokens)
-        logits, self.cache = self._step(self.params, self.cache, toks)
+        logits, self.cache = self._model_call(
+            lambda: self._step(self.params, self.cache, toks))
         self.decode_ticks += 1
-        nxt = self._sample(logits)
+        emitting = []
         for s in range(self.B):
             req = self.slot_req[s]
             if req is None:
                 continue
+            self.slot_pos[s] += 1
             if self.slot_pending[s]:
                 # stepwise prefill: feed the next prompt token, ignore sample
                 self._cur_tokens[s] = self.slot_pending[s].popleft()
                 continue
-            self._emit(s, req, int(nxt[s]))
+            emitting.append(s)
+        self._guarded_emit(logits, emitting)
 
     def step(self):
-        """One engine tick: one jitted model call for the whole batch."""
+        """One engine tick: one jitted model call for the whole batch (or a
+        pure bookkeeping tick when everything live is stalled)."""
         t0 = time.time()
-        self._admit()
-        prefilling = any(self.slot_req[s] is not None and self.slot_pending[s]
-                         for s in range(self.B))
-        if self.prefill_mode == "chunked" and prefilling:
-            self._prefill_tick()
-        else:
-            self._decode_tick()
-        self._busy_s += time.time() - t0
+        tick = self._tick
+        self._tick += 1
+        try:
+            if self._injector is not None:
+                self._injector.on_tick(self, tick)
+            if self._preempt_handler is not None and self._preempt_handler.preempted:
+                self._draining = True
+            self._expire()
+            self._admit()
+            stalled = self._grow()
+            live = [s for s in range(self.B) if self.slot_req[s] is not None]
+            if not live:
+                self.stalled_ticks += 1  # queue blocked on pages, or empty
+            else:
+                prefilling = any(self.slot_pending[s] for s in live)
+                if self.prefill_mode == "chunked" and (prefilling or stalled):
+                    self._prefill_tick(stalled)
+                else:
+                    self._decode_tick()
+        except EngineStepError as e:
+            # the model cannot run even on the degraded rung: account for
+            # every request rather than losing them
+            self._fail_all_in_flight(f"step_failed: {e}")
+        dt = time.time() - t0
+        self._busy_s += dt
+        self.watchdog.observe(tick, dt)
 
-    def run_until_drained(self, max_ticks: int = 10_000):
+    def _has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> DrainResult:
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and ticks < max_ticks:
+        while self._has_work() and ticks < max_ticks:
+            if self._draining and not any(r is not None for r in self.slot_req):
+                break  # drained: only queued (never-admitted) work remains
             self.step()
             ticks += 1
-        return ticks
+        if self._draining:
+            while self.queue:
+                self._fail(self.queue.popleft(), "drained")
+        stranded = tuple(r.uid for r in self.queue) + tuple(
+            r.uid for r in self.slot_req if r is not None)
+        res = DrainResult(ticks=ticks, drained=not self._has_work(),
+                          stranded=stranded)
+        self._last_drain = res
+        return res
 
     # ------------------------------------------------------------------
+    # invariants + stats
+    # ------------------------------------------------------------------
+    def check(self):
+        """Invariant audit (chaos suite runs this after every tick):
+
+        * allocator: free ∪ outstanding partitions the pool;
+        * slot page lists are disjoint, never contain the trash page, and
+          together with externally held pages equal the outstanding set;
+        * the device page table mirrors the host lists exactly — live rows
+          are their slot's pages then trash, idle rows all trash (pinned);
+        * every live slot owns the pages its written tokens occupy.
+        """
+        if self.allocator is not None:
+            self.allocator.check()
+            seen: set[int] = set()
+            for s in range(self.B):
+                pages = self.slot_pages[s]
+                assert TRASH_PAGE not in pages, f"slot {s} owns the trash page"
+                for p in pages:
+                    assert p not in seen, f"page {p} owned by two slots"
+                    seen.add(p)
+                if self.slot_req[s] is None:
+                    assert not pages, f"idle slot {s} still holds pages"
+                else:
+                    assert len(pages) >= pages_needed(self.slot_pos[s],
+                                                      self.page_size), \
+                        (s, self.slot_pos[s], pages)
+            held = set(self._held_pages)
+            assert not (seen & held), "held pages overlap slot pages"
+            assert seen | held == self.allocator.outstanding, \
+                (seen, held, self.allocator.outstanding)
+        if "ptab" in self.cache:
+            ptab = np.asarray(self.cache["ptab"])
+            for s in range(self.B):
+                k = len(self.slot_pages[s])
+                assert list(ptab[s, :k]) == self.slot_pages[s], \
+                    (s, ptab[s], self.slot_pages[s])
+                assert (ptab[s, k:] == TRASH_PAGE).all(), (s, ptab[s])
+
     def page_stats(self) -> dict:
         if self.allocator is None:
-            return {"free_pages": None, "page_capacity": None}
+            return {"free_pages": None, "page_capacity": None, "held_pages": 0}
         return {"free_pages": self.allocator.free_count,
-                "page_capacity": self.allocator.capacity}
+                "page_capacity": self.allocator.capacity,
+                "held_pages": len(self._held_pages)}
 
     def stats(self) -> dict:
         lat = [r.finished_at - r.submitted_at for r in self.done if r.finished_at]
         toks = sum(len(r.output) for r in self.done)
         prompt_toks = sum(len(r.prompt) for r in self.done)
         busy = max(self._busy_s, 1e-9)
+        last = self._last_drain
         out = {
             "completed": len(self.done),
+            "failed": len(self.failed),
+            "fail_reasons": {r.uid: r.fail_reason for r in self.failed},
+            "queued": len(self.queue),
+            "in_flight": sum(r is not None for r in self.slot_req),
+            "stranded": 0 if last is None or last.drained else len(last.stranded),
             "generated_tokens": toks,
             "prompt_tokens": prompt_toks,
             "p50_latency_s": float(np.median(lat)) if lat else None,
@@ -312,7 +745,16 @@ class ServingEngine:
             "prompt_tokens_per_sec": prompt_toks / busy,
             "prefill_ticks": self.prefill_ticks,
             "decode_ticks": self.decode_ticks,
+            "stalled_ticks": self.stalled_ticks,
             "ticks": self.prefill_ticks + self.decode_ticks,
+            "preemptions": self.preemptions,
+            "retries": self.retries,
+            "quarantines": self.quarantines,
+            "degraded": self.degraded,
+            "step_p50_s": None,
+            "step_p95_s": None,
+            "stragglers": 0,
         }
+        out.update(self.watchdog.stats())
         out.update(self.page_stats())
         return out

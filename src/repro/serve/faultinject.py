@@ -1,0 +1,184 @@
+"""Deterministic fault injection for the serving engine.
+
+The chaos suite (tests/test_serving_fault.py) needs *reproducible* disasters:
+page-pool pressure, non-finite logits, step exceptions, slow ticks, and
+eviction signals, all landing at known engine ticks. A
+:class:`FaultInjector` carries a schedule of :class:`FaultEvent`\\ s — either
+hand-written or generated from a seed (:meth:`FaultInjector.seeded`) — and
+the engine consults it at three points:
+
+* ``on_tick(engine, tick)`` — start of every engine tick: apply page
+  pressure (``engine.hold_pages`` / ``engine.release_held``), sleep through
+  a slow tick (the straggler watchdog's detection channel), arm pending
+  NaN/step-error events, or request a drain (simulated SIGTERM).
+* ``before_model_call(engine)`` — raises :class:`InjectedFault` while a
+  ``step_error`` event has remaining consecutive failures (exercises the
+  retry → degrade ladder).
+* ``corrupt_logits(engine, logits, emit_slots)`` — overwrites the logits
+  row(s) of emitting slot(s) with NaN (exercises the quarantine path). A
+  pending NaN event waits for the next tick that actually emits, so seeded
+  schedules always land.
+
+Everything is host-side and derived only from the schedule (no wall-clock
+randomness), so a given ``(seed, horizon, rates)`` triple replays the exact
+same fault stream. :class:`VirtualClock` is the matching deterministic time
+source for deadline/TTL tests — pass it as the engine's ``clock``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultEvent", "FaultInjector", "InjectedFault", "VirtualClock",
+           "EVENT_KINDS"]
+
+EVENT_KINDS = ("page_hold", "page_release", "nan_logits", "step_error",
+               "slow_tick", "sigterm")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``before_model_call`` in place of a real kernel failure."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    kind / arg semantics:
+      * ``page_hold``    — steal ``arg`` pages from the engine's allocator
+                           (clamped to what's free) until ``page_release``;
+      * ``page_release`` — return every held page;
+      * ``nan_logits``   — poison the logits of the next *emitting* slot(s):
+                           ``arg < 0`` hits every emitting slot, else the
+                           ``arg``-th (mod count) emitting slot;
+      * ``step_error``   — the next ``max(1, arg)`` model calls raise
+                           :class:`InjectedFault` (consecutive, so ``arg``
+                           larger than the engine's retry budget forces the
+                           degradation rung);
+      * ``slow_tick``    — sleep ``arg`` milliseconds (straggler);
+      * ``sigterm``      — call ``engine.request_drain()`` (eviction).
+    """
+
+    tick: int
+    kind: str
+    arg: int = 0
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class VirtualClock:
+    """Deterministic ``clock`` for deadline tests: ``now()`` only moves when
+    the test says so."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    __call__ = now
+
+
+class FaultInjector:
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self._by_tick: dict[int, list[FaultEvent]] = defaultdict(list)
+        for ev in events:
+            self._by_tick[ev.tick].append(ev)
+        self.events = tuple(events)
+        # armed state
+        self._step_failures_left = 0
+        self._nan_pending = False
+        self._nan_target = -1
+        # observability: what actually landed
+        self.injected = {k: 0 for k in EVENT_KINDS}
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def seeded(cls, seed: int, *, horizon: int = 128, p_nan: float = 0.0,
+               p_step_error: float = 0.0, p_slow: float = 0.0,
+               p_hold: float = 0.0, max_hold_pages: int = 4,
+               max_hold_ticks: int = 6, max_consecutive_failures: int = 1,
+               slow_ms: int = 3, sigterm_at: Optional[int] = None
+               ) -> "FaultInjector":
+        """Build a schedule from a seed: same (seed, horizon, rates) ==
+        same fault stream, independent of wall clock or engine state."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        release_at = -1
+        for t in range(horizon):
+            if t == release_at:
+                events.append(FaultEvent(t, "page_release"))
+                release_at = -1
+            if release_at < 0 and rng.random() < p_hold:
+                events.append(FaultEvent(
+                    t, "page_hold", int(rng.integers(1, max_hold_pages + 1))))
+                release_at = t + int(rng.integers(1, max_hold_ticks + 1))
+            if rng.random() < p_nan:
+                events.append(FaultEvent(t, "nan_logits", -1))
+            if rng.random() < p_step_error:
+                events.append(FaultEvent(
+                    t, "step_error",
+                    int(rng.integers(1, max_consecutive_failures + 1))))
+            if rng.random() < p_slow:
+                events.append(FaultEvent(t, "slow_tick", slow_ms))
+        if release_at >= 0:
+            events.append(FaultEvent(release_at, "page_release"))
+        if sigterm_at is not None:
+            events.append(FaultEvent(sigterm_at, "sigterm"))
+        return cls(events)
+
+    # ------------------------------------------------------------------
+    # engine hooks
+    # ------------------------------------------------------------------
+    def on_tick(self, engine, tick: int) -> None:
+        for ev in self._by_tick.get(tick, ()):
+            if ev.kind == "page_hold":
+                if engine.hold_pages(ev.arg):
+                    self.injected["page_hold"] += 1
+            elif ev.kind == "page_release":
+                if engine.release_held():
+                    self.injected["page_release"] += 1
+            elif ev.kind == "slow_tick":
+                time.sleep(ev.arg / 1e3)
+                self.injected["slow_tick"] += 1
+            elif ev.kind == "sigterm":
+                engine.request_drain()
+                self.injected["sigterm"] += 1
+            elif ev.kind == "step_error":
+                self._step_failures_left += max(1, ev.arg)
+            elif ev.kind == "nan_logits":
+                self._nan_pending = True
+                self._nan_target = ev.arg
+
+    def before_model_call(self, engine) -> None:
+        if self._step_failures_left > 0:
+            self._step_failures_left -= 1
+            self.injected["step_error"] += 1
+            raise InjectedFault("injected step failure")
+
+    def corrupt_logits(self, engine, logits, emit_slots: Sequence[int]):
+        """Poison emitting-slot logits rows with NaN; a pending event holds
+        until some slot actually emits (mid-prompt rows are never read, so
+        corrupting them would be undetectable by design)."""
+        if not self._nan_pending or not emit_slots:
+            return logits
+        self._nan_pending = False
+        self.injected["nan_logits"] += 1
+        if self._nan_target < 0:
+            targets = list(emit_slots)
+        else:
+            targets = [emit_slots[self._nan_target % len(emit_slots)]]
+        for s in targets:
+            logits = logits.at[s].set(jnp.nan)
+        return logits

@@ -16,7 +16,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig, batch_at
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault import PreemptionHandler, StragglerWatchdog
+from repro.fault import PreemptionHandler, StragglerWatchdog
 from repro.train.step import TrainConfig, init_state, make_train_step
 
 __all__ = ["LoopConfig", "train_loop"]

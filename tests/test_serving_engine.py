@@ -53,11 +53,11 @@ def test_engine_batches_multiple_requests(setup):
             for i in range(5)]  # 5 requests through 2 slots
     for r in reqs:
         eng.submit(r)
-    ticks = eng.run_until_drained()
+    res = eng.run_until_drained()
     st = eng.stats()
     assert st["completed"] == 5
     assert st["generated_tokens"] == 20
-    assert ticks < 40
+    assert res.drained and res.ticks < 40
     # batched outputs equal isolated single-request outputs
     for r in reqs:
         assert r.output == _direct_greedy(cfg, params, r.prompt, 4), r.uid
@@ -149,13 +149,13 @@ def test_prefill_completes_in_ceil_p_over_c_ticks(setup):
                             prefill_chunk=C)
         req = Request(uid=1, prompt=list(range(1, P_ + 1)), max_new_tokens=3)
         eng.submit(req)
-        ticks = eng.run_until_drained()
+        res = eng.run_until_drained()
         st = eng.stats()
         expect_prefill = -(-P_ // min(C, eng.prefill_chunk))
         assert st["prefill_ticks"] == expect_prefill, (P_, C, st)
         # first token samples on the last prefill tick
         assert st["decode_ticks"] == 3 - 1, (P_, C, st)
-        assert ticks == st["ticks"] == expect_prefill + 2
+        assert res.ticks == st["ticks"] == expect_prefill + 2
         assert req.output == _direct_greedy(cfg, params, req.prompt, 3)
 
 
@@ -264,9 +264,11 @@ def test_admission_blocks_on_page_budget(setup):
     returns to capacity (no leak)."""
     cfg, params = setup
     ps = 4
-    # budget: exactly one request's worth of pages (3 prompt + 5 new -> 2)
+    # budget: exactly one request's worth of pages (3 prompt + 5 new -> 2);
+    # reserve admission — optimistic would admit both on first-chunk pages
+    # (see test_optimistic_admits_more_than_reserve)
     eng = ServingEngine(cfg, params, batch_slots=2, max_len=32, page_size=ps,
-                        num_pages=2 + 1, prefill_chunk=4)
+                        num_pages=2 + 1, prefill_chunk=4, admission="reserve")
     reqs = [Request(uid=i, prompt=[i + 1, 7, 9], max_new_tokens=5)
             for i in range(3)]
     for r in reqs:
@@ -338,11 +340,14 @@ def test_scheduler_invariants_deterministic(setup):
     an unreachable eos_id), contention on both slots and pages."""
     cfg, params = setup
     first = _direct_greedy(cfg, params, [9, 9], 8)
+    # a valid token id the 4th case never samples (eos_id must be >= 0 now)
+    ref4 = _direct_greedy(cfg, params, [2, 4, 6, 8], 6)
+    never = next(t for t in range(cfg.vocab_size) if t not in ref4)
     cases = [
         ([1, 2, 3, 4, 5, 6, 7], 4, None),
         ([9, 9], 8, first[2]),          # stops at the 3rd token
         ([5], 1, None),                  # single-token everything
-        ([2, 4, 6, 8], 6, -1),           # eos never sampled
+        ([2, 4, 6, 8], 6, never),        # eos never sampled
         ([7, 7, 7, 7, 7, 7, 7, 7, 7], 2, None),
     ]
     _stream_invariants(cfg, params, cases, batch_slots=2, num_pages=7,
@@ -369,5 +374,74 @@ def test_scheduler_invariants_fuzzed(setup):
                pages=st.sampled_from((5, 9, 25)), chunk=st.sampled_from((1, 4)))
     def run(cases, batch_slots, pages, chunk):
         _stream_invariants(cfg, params, cases, batch_slots, pages, chunk)
+
+    run()
+
+
+def test_scheduler_invariants_fuzzed_faulty(setup):
+    """Hypothesis streams under fire: random arrivals over a tight page pool
+    with seeded page-pressure / NaN / step-error injection and per-request
+    deadlines on a virtual clock. Asserts exactly-once retirement, per-tick
+    allocator + page-table consistency (engine.check()), recorded reasons on
+    every failure, and preempted-then-resumed output equal to an
+    uninterrupted 1-slot reference."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.serve.faultinject import FaultInjector, VirtualClock
+    cfg, params = setup
+
+    case = st.tuples(
+        st.lists(st.integers(0, cfg.vocab_size - 1), min_size=1, max_size=9),
+        st.integers(1, 6),
+        st.one_of(st.none(), st.floats(0.5, 40.0)),  # deadline_s (virtual)
+    )
+
+    @hyp.settings(max_examples=6, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(cases=st.lists(case, min_size=1, max_size=5),
+               batch_slots=st.integers(1, 3),
+               pages=st.sampled_from((5, 9)), seed=st.integers(0, 2**16))
+    def run(cases, batch_slots, pages, seed):
+        vc = VirtualClock()
+        inj = FaultInjector.seeded(
+            seed, horizon=600, p_nan=0.02, p_step_error=0.04, p_hold=0.06,
+            max_hold_pages=2, max_hold_ticks=5, max_consecutive_failures=1)
+        eng = ServingEngine(cfg, params, batch_slots=batch_slots, max_len=32,
+                            page_size=4, num_pages=pages, prefill_chunk=4,
+                            injector=inj, clock=vc, retry_backoff_s=0.0)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n, deadline_s=d)
+                for i, (p, n, d) in enumerate(cases)]
+        arrivals = iter(reqs)
+        pending = next(arrivals, None)
+        ticks = 0
+        while pending is not None or eng.queue or any(
+                r is not None for r in eng.slot_req):
+            if pending is not None:
+                eng.submit(pending)
+                pending = next(arrivals, None)
+            eng.step()
+            eng.check()  # allocator + slot pages + ptab reconcile, every tick
+            vc.advance(0.25)
+            ticks += 1
+            assert ticks < 5_000
+        eng.release_held()
+        # exactly-once: done ⊎ failed == submitted, reasons recorded
+        done_uids = sorted(r.uid for r in eng.done)
+        failed_uids = sorted(r.uid for r in eng.failed)
+        assert sorted(done_uids + failed_uids) == sorted(r.uid for r in reqs)
+        assert len(set(done_uids)) == len(done_uids)
+        for r in eng.failed:
+            assert r.fail_reason in ("deadline", "nonfinite_logits"), \
+                (r.uid, r.fail_reason)
+        assert eng.allocator.free_count == eng.allocator.capacity
+        # fault-free 1-slot reference: resumed == uninterrupted
+        for r in eng.done:
+            ref = ServingEngine(cfg, params, batch_slots=1, max_len=32,
+                                page_size=4, prefill_chunk=4)
+            rr = Request(uid=r.uid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens)
+            ref.submit(rr)
+            ref.run_until_drained()
+            assert r.output == rr.output, r.uid
 
     run()
