@@ -138,6 +138,12 @@ class ModelConfig:
     # serving-time knobs: training/init paths never read them.
     page_size: int = 16
     prefill_chunk: int = 16
+    # parallel KV splits of the flash-decoding paged read (split-KV decode):
+    # each sequence's pages partition across this many grid splits, merged by
+    # an LSE-corrected combine. None = resolved from the "paged_attn"
+    # autotune family — the engine pins it at build time
+    # (train/step.pin_kernel_blocks) so every decode trace shares one value.
+    decode_kv_splits: Optional[int] = None
 
     def __post_init__(self):
         if not self.layer_pattern:

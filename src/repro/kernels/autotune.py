@@ -41,6 +41,10 @@ __all__ = [
     "load_table",
     "update_table",
     "measure",
+    "paged_table_key",
+    "get_kv_splits",
+    "heuristic_kv_splits",
+    "update_paged_entry",
 ]
 
 _TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
@@ -197,6 +201,84 @@ def get_block_config(
             "(measure with: PYTHONPATH=src REPRO_RETUNE=1 python "
             "benchmarks/run.py kernels)", key)
     return heuristic_block_config(op, backend, rank, q_dims, t_dims)
+
+
+# ---------------------------------------------------------------------------
+# "paged_attn" family: kv_splits for the split-KV paged decode read
+# ---------------------------------------------------------------------------
+#
+# The flash-decoding kernel (kernels/flash_attn/paged.py) has one knob the
+# block families above don't model: ``kv_splits``, the number of parallel
+# grid splits each sequence's pages are partitioned across. Its winner is a
+# pure occupancy trade (more splits = more parallel grid units at small
+# batch, but each adds a partial-(o, m, l) write + its share of the combine)
+# so entries are keyed on the decode-read shape, not on rank/q/t dims:
+# ``paged_attn|{backend}|ps{page_size}|g{q_heads_per_kv}|d{head_dim}|np{pages}``.
+
+def paged_table_key(backend: str, page_size: int, group: int, head_dim: int,
+                    n_pages: int) -> str:
+    return f"paged_attn|{backend}|ps{page_size}|g{group}|d{head_dim}|np{n_pages}"
+
+
+# grid-parallelism targets per backend: how many (batch × split) units keep
+# the machine busy. TPU decode grids are tiny at latency-sensitive batch
+# (the whole point of splitting); CPU parallelism is the thread pool.
+_PAGED_TARGET = {"tpu": 16, "gpu": 64, "cpu": 8}
+# below this many pages per split, the partial writes + combine overhead
+# outweigh the extra occupancy
+_MIN_PAGES_PER_SPLIT = 4
+
+
+def heuristic_kv_splits(page_size: int, group: int, head_dim: int,
+                        n_pages: int, *, batch: int = 1,
+                        backend: Optional[str] = None) -> int:
+    """Occupancy model: double the split count until ``batch × splits``
+    reaches the backend's parallelism target, each split still owns at least
+    ``_MIN_PAGES_PER_SPLIT`` pages, and splits never exceed the page count."""
+    backend = backend or jax.default_backend()
+    target = _PAGED_TARGET.get(backend, _PAGED_TARGET["cpu"])
+    batch = max(1, batch)
+    splits = 1
+    while (splits * 2 <= n_pages
+           and batch * splits < target
+           and n_pages // (splits * 2) >= _MIN_PAGES_PER_SPLIT):
+        splits *= 2
+    return splits
+
+
+def get_kv_splits(page_size: int, group: int, head_dim: int, n_pages: int, *,
+                  batch: int = 1, backend: Optional[str] = None) -> int:
+    """Resolve kv_splits: measured ``paged_attn`` table entry, else the
+    occupancy heuristic (with a once-per-key miss warning, like
+    :func:`get_block_config`). ``batch`` only steers the heuristic — measured
+    entries are keyed on the read shape alone."""
+    backend = backend or jax.default_backend()
+    key = paged_table_key(backend, page_size, group, head_dim, n_pages)
+    entry = load_table().get(key)
+    if entry is not None:
+        return max(1, int(entry["kv_splits"]))
+    if key not in _warned_misses:
+        _warned_misses.add(key)
+        logger.warning(
+            "autotune table miss for %s — falling back to the occupancy "
+            "heuristic (measure with: PYTHONPATH=src REPRO_RETUNE=1 python "
+            "benchmarks/run.py serving)", key)
+    return heuristic_kv_splits(page_size, group, head_dim, n_pages,
+                               batch=batch, backend=backend)
+
+
+def update_paged_entry(key: str, kv_splits: int, *, us: Optional[float] = None,
+                       save_path: Optional[str] = None) -> None:
+    """Record a measured paged_attn winner (and optionally persist)."""
+    table = load_table()
+    entry: dict = {"kv_splits": int(kv_splits)}
+    if us is not None:
+        entry["us"] = round(us, 1)
+    table[key] = entry
+    if save_path:
+        with open(save_path, "w") as f:
+            json.dump(table, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 def measure(

@@ -1,35 +1,78 @@
 """Jit'd flash-attention ops: Pallas forward, analytic backward via the
-oracle; plus the (inference-only) paged decode read."""
+oracle; plus the (inference-only) split-KV paged decode read."""
 
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import kernels_forced_off
+from repro.kernels import autotune
 from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
-from repro.kernels.flash_attn.paged import paged_attention_pallas
+from repro.kernels.flash_attn.paged import (
+    paged_attention_host,
+    paged_attention_pallas,
+)
 from repro.kernels.flash_attn.ref import attention_ref, paged_attention_ref
+
+try:  # Tracer moved out of jax.core in newer jax; keep both spellings
+    _Tracer = jax.core.Tracer
+except AttributeError:  # pragma: no cover
+    from jax.core import Tracer as _Tracer
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def paged_attention(q, k_pages, v_pages, ptab, lens, *, use_kernel=None):
+def _concrete_max_pages(lens, page_size) -> int | None:
+    """Pages actually holding data, when ``lens`` is concrete (not traced):
+    ``ceil(max(lens) / page_size)``, floored at 1 so the grid is never empty.
+    Returns None under tracing — the grid extent must stay static then."""
+    if isinstance(lens, _Tracer):
+        return None
+    longest = int(jnp.max(jnp.asarray(lens)))
+    return max(1, -(-longest // page_size))
+
+
+def paged_attention(q, k_pages, v_pages, ptab, lens, *, use_kernel=None,
+                    kv_splits=None):
     """Decode-step attention over paged KV pools (serve/cache.py layout).
 
     q (B, H, Dh); pools (P, page_size, KVH, D); ptab (B, NP); lens (B,).
-    Inference-only (no VJP). use_kernel None = auto: the Pallas paged-read
-    leg on TPU, the XLA gather read elsewhere (interpret-mode Pallas is for
-    tests, not serving).
+    Inference-only (no VJP).
+
+    Routing: forced-off mode or ``use_kernel=False`` takes the XLA gather
+    reference. Otherwise (None/True) the split-KV algorithm runs — compiled
+    Pallas on TPU, the fused-XLA host executor of the identical algorithm
+    elsewhere (the kron_matmul host-executor pattern; interpret-mode Pallas
+    is for tests, not serving). ``kv_splits=None`` resolves from the
+    ``paged_attn`` autotune family on the read shape.
+
+    When ``lens`` is concrete, the page-grid extent is clamped to
+    ``ceil(max(lens)/page_size)`` before launch, so fully-idle tail pages
+    are never scheduled at all (in-kernel, partially-idle tail steps are
+    additionally skipped + DMA-elided via the index-map clamp).
     """
-    if use_kernel is None:
-        use_kernel = _on_tpu()
-    if use_kernel:
+    if kernels_forced_off() or use_kernel is False:
+        return paged_attention_ref(q, k_pages, v_pages, ptab, lens)
+
+    B, H, Dh = q.shape
+    ps, KVH = k_pages.shape[1], k_pages.shape[2]
+    G = H // KVH
+    np_live = _concrete_max_pages(lens, ps)
+    if np_live is not None and np_live < ptab.shape[1]:
+        ptab = ptab[:, :np_live]
+    NP = ptab.shape[1]
+    if kv_splits is None:
+        kv_splits = autotune.get_kv_splits(ps, G, Dh, NP, batch=B)
+    if _on_tpu():
         return paged_attention_pallas(q, k_pages, v_pages, ptab, lens,
-                                      interpret=not _on_tpu())
-    return paged_attention_ref(q, k_pages, v_pages, ptab, lens)
+                                      kv_splits=kv_splits, interpret=False)
+    return paged_attention_host(q, k_pages, v_pages, ptab, lens,
+                                kv_splits=kv_splits)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))

@@ -27,6 +27,21 @@ def attention_ref(q, k, v, *, causal=True, window=0):
     return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
 
 
+def combine_splits_ref(mid_o, m, l):
+    """LSE-corrected merge of split-KV partials (the combine kernel's oracle).
+
+    mid_o (B, KVH, S, G, Dv) unnormalized, m/l (B, KVH, S, G, 1) running
+    softmax stats; empty splits carry (0, NEG, 0) -> (B, KVH, G, Dv)
+    normalized. Only non-positive exponents are taken, so the merge is safe
+    for arbitrary m spread; all-empty rows (lens == 0) come out zero.
+    """
+    m_max = jnp.max(m, axis=2, keepdims=True)  # over the split axis
+    corr = jnp.exp(m - m_max)
+    l_tot = jnp.sum(l * corr, axis=2)  # (B, KVH, G, 1)
+    o_tot = jnp.sum(mid_o * corr, axis=2)  # (B, KVH, G, Dv)
+    return o_tot / jnp.maximum(l_tot, 1e-30)
+
+
 def paged_attention_ref(q, k_pages, v_pages, ptab, lens):
     """Gather-based paged decode read: q (B, H, Dh); pools (P, ps, KVH, D);
     ptab (B, NP); lens (B,) -> (B, H, Dv). Materializes the per-sequence

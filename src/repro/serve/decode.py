@@ -225,13 +225,16 @@ def paged_kv_decode_attention(cfg, q, k_new, v_new, pool_k, pool_v, ptab, step):
     """Paged decode read: write the new token into its slot's current page,
     then attend over the slot's logical view.
 
-    TPU routes through the Pallas paged-read kernel (scalar-prefetched page
-    table, no gathered intermediate); elsewhere the XLA gather ref runs.
+    The read is the split-KV (flash-decoding) algorithm: compiled Pallas on
+    TPU, its fused-XLA host executor elsewhere; ``cfg.decode_kv_splits``
+    (pinned by the engine from the "paged_attn" autotune family) fixes the
+    split count so every trace shares one static grid.
     """
     pool_k = _page_write(pool_k, ptab, step, k_new)
     pool_v = _page_write(pool_v, ptab, step, v_new)
     out = FOPS.paged_attention(q, pool_k, pool_v, ptab, step + 1,
-                               use_kernel=cfg.use_kernels)
+                               use_kernel=cfg.use_kernels,
+                               kv_splits=cfg.decode_kv_splits)
     return out.astype(q.dtype), pool_k, pool_v
 
 

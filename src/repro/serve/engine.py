@@ -205,6 +205,17 @@ class ServingEngine:
             admission = "reserve"
         self.admission = admission
 
+        if self._needs_pages and cfg.decode_kv_splits is None:
+            # pin the split-KV decode's split count once, from the engine's
+            # actual read shape (pages at max_len, slot count) — every decode
+            # trace then shares one static grid, and the degraded-mode config
+            # clone in _degrade carries the pinned value along
+            from repro.train.step import pin_kernel_blocks
+            cfg = pin_kernel_blocks(
+                cfg, decode_pages=logical_pages(max_len, self.page_size),
+                decode_batch=batch_slots, decode_page_size=self.page_size)
+            self.cfg = cfg
+
         self._step = functools.partial(_jit_step, cfg)
         self._prefill = functools.partial(_jit_prefill, cfg)
 

@@ -21,17 +21,27 @@ from repro.optim.compression import CompressionConfig, compress_decompress, init
 __all__ = ["TrainConfig", "init_state", "make_train_step", "pin_kernel_blocks"]
 
 
-def pin_kernel_blocks(cfg: ModelConfig) -> ModelConfig:
+def pin_kernel_blocks(cfg: ModelConfig, *, decode_pages=None, decode_batch=1,
+                      decode_page_size=None) -> ModelConfig:
     """Resolve autotuned kernel tile sizes ONCE at step-build time.
 
     ``None`` block fields mean "ask repro/kernels/autotune"; baking the
     resolved values into the frozen config here means every jit trace of the
     train step sees the same static tiles, and a tuning-table reload can
     never retrigger compilation mid-run.
+
+    ``decode_pages`` (logical pages per sequence at the serving max_len)
+    additionally pins ``decode_kv_splits`` from the ``paged_attn`` family —
+    the serving engine passes it so every decode trace shares one split
+    count; the training paths never do (the knob is decode-only).
     """
     from repro.core import quant as Q
     from repro.kernels import autotune
     updates: dict = {}
+    if decode_pages is not None and cfg.decode_kv_splits is None:
+        updates["decode_kv_splits"] = autotune.get_kv_splits(
+            decode_page_size or cfg.page_size, cfg.q_heads_per_kv,
+            cfg.head_dim, int(decode_pages), batch=decode_batch)
     if cfg.embedding_kind == "word2ketxs" and cfg.embedding_block_b is None:
         ecfg = embedding_for(cfg)
         # quantized factors tune under their payload dtype's own table key

@@ -7,9 +7,22 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.flash_attn import ops as FOPS
+from repro.kernels.flash_attn import paged as PG
 from repro.kernels.flash_attn.ops import flash_attention
-from repro.kernels.flash_attn.paged import paged_attention_pallas
-from repro.kernels.flash_attn.ref import attention_ref, paged_attention_ref
+from repro.kernels.flash_attn.paged import (
+    combine_splits_pallas,
+    paged_attention_host,
+    paged_attention_pallas,
+    paged_attention_seq_host,
+    paged_attention_split_host,
+    paged_attention_split_pallas,
+)
+from repro.kernels.flash_attn.ref import (
+    attention_ref,
+    combine_splits_ref,
+    paged_attention_ref,
+)
 
 CASES = [
     # (B, Sq, Skv, H, KVH, Dh, causal, window, bq, bk)
@@ -168,3 +181,347 @@ def test_paged_kernel_ignores_trash_page_contents():
     poisoned = paged_attention_pallas(q, kp2, vp2, ptab, lens, interpret=True)
     np.testing.assert_allclose(np.asarray(poisoned), np.asarray(base),
                                rtol=2e-6, atol=2e-7)
+
+
+# ---------------------------------------------------------------------------
+# split-KV (flash-decoding): partition invariance + combine + routing
+# ---------------------------------------------------------------------------
+# PAGED_CASES already covers the property matrix the split axis must be
+# invariant under: GQA/MQA/MHA, ragged lens, idle slots (lens 0), and NP
+# values (4, 2, 4, 8) that are NOT multiples of every split count — with
+# lens like 13/9/15/11 no case is divisible by page_size × kv_splits.
+
+KV_SPLITS = [1, 2, 4, 8]
+
+# Eager interpret-mode Pallas (and the eager host executors) dispatch
+# thousands of op-by-op XLA:CPU programs across the partition matrix —
+# enough cumulative JIT churn to trip the backend_compile corruption
+# documented in conftest.py. One jit per (shape, static-arg) combo keeps
+# the whole module to a few hundred compiles, reused across param cases.
+_pallas = jax.jit(paged_attention_pallas,
+                  static_argnames=("kv_splits", "interpret"))
+_split_pallas = jax.jit(paged_attention_split_pallas,
+                        static_argnames=("kv_splits", "interpret"))
+_host = jax.jit(paged_attention_host,
+                static_argnames=("kv_splits", "page_chunk"))
+_split_host = jax.jit(paged_attention_split_host,
+                      static_argnames=("kv_splits", "page_chunk"))
+_seq_host = jax.jit(paged_attention_seq_host)
+_combine_pallas = jax.jit(combine_splits_pallas, static_argnames=("interpret",))
+_ref = jax.jit(paged_attention_ref)
+
+
+@pytest.mark.parametrize("kv_splits", KV_SPLITS)
+@pytest.mark.parametrize("B,H,KVH,Dh,ps,P,NP,lens", PAGED_CASES)
+def test_split_kernel_partition_invariance(B, H, KVH, Dh, ps, P, NP, lens,
+                                           kv_splits):
+    """Every split count == the gather ref == the kv_splits=1 walk."""
+    key = jax.random.PRNGKey(21)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray(lens, jnp.int32)
+    out = _pallas(q, kp, vp, ptab, lens, kv_splits=kv_splits, interpret=True)
+    ref = _ref(q, kp, vp, ptab, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+    base = _pallas(q, kp, vp, ptab, lens, kv_splits=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("kv_splits", KV_SPLITS)
+@pytest.mark.parametrize("B,H,KVH,Dh,ps,P,NP,lens", PAGED_CASES)
+def test_host_executor_partition_invariance(B, H, KVH, Dh, ps, P, NP, lens,
+                                            kv_splits):
+    """The fused-XLA host executor (the off-TPU serving path) passes the
+    same matrix, and its per-split partials equal the Pallas kernel's."""
+    key = jax.random.PRNGKey(22)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray(lens, jnp.int32)
+    out = _host(q, kp, vp, ptab, lens, kv_splits=kv_splits)
+    ref = _ref(q, kp, vp, ptab, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+    hp = _split_host(q, kp, vp, ptab, lens, kv_splits=kv_splits)
+    pp = _split_pallas(q, kp, vp, ptab, lens, kv_splits=kv_splits,
+                       interpret=True)
+    for h, p, name in zip(hp, pp, ("mid_o", "m", "l")):
+        assert h.shape == p.shape, name
+        np.testing.assert_allclose(np.asarray(h), np.asarray(p),
+                                   rtol=2e-4, atol=2e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("B,H,KVH,Dh,ps,P,NP,lens", PAGED_CASES)
+def test_seq_host_matches_ref(B, H, KVH, Dh, ps, P, NP, lens):
+    """The sequential-page host walk (the benchmark baseline) is itself
+    conformant — the split-KV speedup is measured against a correct peer."""
+    key = jax.random.PRNGKey(23)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray(lens, jnp.int32)
+    out = _seq_host(q, kp, vp, ptab, lens)
+    ref = _ref(q, kp, vp, ptab, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_splits_exceeding_pages_clamp():
+    """kv_splits > NP must clamp, not crash or mis-partition."""
+    B, H, KVH, Dh, ps, P, NP = 2, 4, 2, 16, 4, 7, 3
+    key = jax.random.PRNGKey(24)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray([10, 5], jnp.int32)
+    ref = _ref(q, kp, vp, ptab, lens)
+    for fn in (lambda: _pallas(q, kp, vp, ptab, lens, kv_splits=16,
+                               interpret=True),
+               lambda: _host(q, kp, vp, ptab, lens, kv_splits=16)):
+        np.testing.assert_allclose(np.asarray(fn()), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def _combine_expected_f64(mid_o, m, l):
+    """Direct float64 evaluation of the split merge (no max-shift trick)."""
+    mo = np.asarray(mid_o, np.float64)
+    mf = np.asarray(m, np.float64)
+    lf = np.asarray(l, np.float64)
+    w = np.exp(mf)  # fine in f64 for |m| ≲ 700
+    l_tot = (lf * w).sum(axis=2)
+    o_tot = (mo * w).sum(axis=2)
+    return o_tot / np.maximum(l_tot, 1e-300)
+
+
+def test_combine_extreme_m_spread():
+    """Hand-built partials with m spread far beyond float32 exp range: the
+    LSE-shifted merge must agree with a float64 direct evaluation (a naive
+    float32 exp(m) would overflow at m=88 and underflow at m=-104)."""
+    B, KVH, S, G, Dv = 1, 2, 4, 3, 8
+    rng = np.random.RandomState(0)
+    mid_o = jnp.asarray(rng.randn(B, KVH, S, G, Dv), jnp.float32)
+    l = jnp.asarray(rng.rand(B, KVH, S, G, 1) + 0.5, jnp.float32)
+    m = jnp.asarray(rng.choice([-600.0, -88.0, 0.0, 250.0, 600.0],
+                               (B, KVH, S, G, 1)), jnp.float32)
+    want = _combine_expected_f64(mid_o, m, l)
+    got_ref = combine_splits_ref(mid_o, m, l)
+    got_pl = _combine_pallas(mid_o, m, l, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref), want, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_pl), want, rtol=2e-5, atol=2e-6)
+    assert np.isfinite(np.asarray(got_ref)).all()
+    assert np.isfinite(np.asarray(got_pl)).all()
+
+
+def test_combine_empty_splits():
+    """Splits that never saw a page carry (0, NEG, 0) and must contribute
+    exactly nothing; an all-empty row (lens == 0) combines to zero."""
+    B, KVH, S, G, Dv = 1, 1, 3, 2, 4
+    rng = np.random.RandomState(1)
+    mid_o = jnp.asarray(rng.randn(B, KVH, S, G, Dv), jnp.float32)
+    l = jnp.asarray(rng.rand(B, KVH, S, G, 1) + 0.5, jnp.float32)
+    m = jnp.asarray(rng.randn(B, KVH, S, G, 1), jnp.float32)
+    # empty split 2: (0, NEG, 0)
+    mid_o = mid_o.at[:, :, 2].set(0.0)
+    m = m.at[:, :, 2].set(PG.NEG)
+    l = l.at[:, :, 2].set(0.0)
+    full = combine_splits_ref(mid_o, m, l)
+    two = combine_splits_ref(mid_o[:, :, :2], m[:, :, :2], l[:, :, :2])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(two),
+                               rtol=1e-6, atol=1e-7)
+    # all splits empty -> 0, not NaN
+    zero = combine_splits_ref(jnp.zeros_like(mid_o),
+                              jnp.full_like(m, PG.NEG), jnp.zeros_like(l))
+    assert np.array_equal(np.asarray(zero), np.zeros_like(np.asarray(zero)))
+    zero_pl = _combine_pallas(jnp.zeros_like(mid_o),
+                              jnp.full_like(m, PG.NEG),
+                              jnp.zeros_like(l), interpret=True)
+    assert np.array_equal(np.asarray(zero_pl), np.zeros((B, KVH, G, Dv)))
+
+
+def test_kv_page_row_tail_clamp():
+    """Pages past a sequence's length re-map to its last valid page (so the
+    DMA is elided on a revisited block), never to the trash page."""
+    tab = jnp.asarray([[7, 8, 9, 0], [3, 0, 0, 0]], jnp.int32)
+    lens = jnp.asarray([9, 4], jnp.int32)  # ps=4: slot0 -> 3 pages, slot1 -> 1
+    ps = 4
+    # slot 0: pages 0..2 valid, page 3 clamps back to page 2's row
+    assert int(PG._kv_page_row(2, 0, tab, lens, ps=ps)) == 9
+    assert int(PG._kv_page_row(3, 0, tab, lens, ps=ps)) == 9
+    # slot 1: only page 0 valid; every tail step revisits it
+    for p in range(4):
+        assert int(PG._kv_page_row(p, 1, tab, lens, ps=ps)) == 3
+    # lens == 0 clamps to page 0 (still never reads ptab out of range)
+    assert int(PG._kv_page_row(3, 1, tab, jnp.asarray([9, 0]), ps=ps)) == 3
+
+
+def test_skipped_steps_never_read_trash_page():
+    """Poison the trash page AND give it pathological values in the pool:
+    with the index-map clamp no skipped step's block index touches row 0, so
+    NaNs there cannot leak (a DMA'd NaN block would fault interpret mode's
+    computed values even under pl.when skips on some backends)."""
+    B, H, KVH, Dh, ps, P, NP = 2, 2, 1, 16, 4, 9, 4
+    key = jax.random.PRNGKey(25)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, _ = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    ptab = jnp.asarray([[1, 2, 0, 0], [3, 4, 5, 0]], jnp.int32)
+    lens = jnp.asarray([6, 12], jnp.int32)
+    kp = kp.at[0].set(jnp.nan)
+    vp = vp.at[0].set(jnp.nan)
+    for s in (1, 2, 4):
+        out = _pallas(q, kp, vp, ptab, lens, kv_splits=s, interpret=True)
+        assert np.isfinite(np.asarray(out)).all(), f"kv_splits={s}"
+
+
+# ---------------------------------------------------------------------------
+# ops routing: backend-detected interpret, forced-off, lens clamp
+# ---------------------------------------------------------------------------
+
+def test_default_interpret_is_backend_detected(monkeypatch):
+    """Satellite: the paged kernels' interpret default must follow the
+    backend — None means compiled on TPU, interpret elsewhere."""
+    assert PG._default_interpret(True) is True
+    assert PG._default_interpret(False) is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert PG._default_interpret(None) is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert PG._default_interpret(None) is True
+
+
+def test_ops_routes_compiled_kernel_on_tpu(monkeypatch):
+    """Kernel-in-use: on TPU the op must launch the COMPILED Pallas leg
+    (interpret=False) with the resolved split count — never interpret mode."""
+    calls = {}
+
+    def fake_pallas(q, kp, vp, ptab, lens, *, kv_splits, interpret):
+        calls["kv_splits"] = kv_splits
+        calls["interpret"] = interpret
+        return paged_attention_host(q, kp, vp, ptab, lens,
+                                    kv_splits=kv_splits)
+
+    monkeypatch.setattr(FOPS, "_on_tpu", lambda: True)
+    monkeypatch.setattr(FOPS, "paged_attention_pallas", fake_pallas)
+    B, H, KVH, Dh, ps, P, NP = 1, 2, 1, 16, 4, 5, 4
+    key = jax.random.PRNGKey(26)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray([14], jnp.int32)
+    out = FOPS.paged_attention(q, kp, vp, ptab, lens, kv_splits=2)
+    assert calls == {"kv_splits": 2, "interpret": False}
+    ref = paged_attention_ref(q, kp, vp, ptab, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ops_forced_off_routes_ref():
+    """The degradation ladder's kill switch wins over everything: forced-off
+    must produce the gather reference bit-exactly."""
+    from repro.kernels import set_kernels_forced_off
+    B, H, KVH, Dh, ps, P, NP = 2, 4, 2, 16, 4, 9, 4
+    key = jax.random.PRNGKey(27)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray([13, 16], jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, ptab, lens)
+    set_kernels_forced_off(True)
+    try:
+        out = FOPS.paged_attention(q, kp, vp, ptab, lens, use_kernel=True)
+    finally:
+        set_kernels_forced_off(False)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    out_false = FOPS.paged_attention(q, kp, vp, ptab, lens, use_kernel=False)
+    assert np.array_equal(np.asarray(out_false), np.asarray(ref))
+
+
+def test_ops_clamps_idle_tail_pages(monkeypatch):
+    """Satellite: with concrete lens the op slices the page table to
+    ceil(max(lens)/ps) before launch — fully-idle tail pages are never
+    scheduled; under jit (traced lens) the extent must stay static."""
+    assert FOPS._concrete_max_pages(jnp.asarray([9, 4]), 4) == 3
+    assert FOPS._concrete_max_pages(jnp.asarray([0, 0]), 4) == 1  # never empty
+    assert FOPS._concrete_max_pages(np.asarray([64]), 16) == 4
+
+    seen = {}
+    real = paged_attention_host
+
+    def spy(q, kp, vp, ptab, lens, *, kv_splits):
+        seen["np"] = ptab.shape[1]
+        return real(q, kp, vp, ptab, lens, kv_splits=kv_splits)
+
+    monkeypatch.setattr(FOPS, "paged_attention_host", spy)
+    B, H, KVH, Dh, ps, P, NP = 2, 4, 2, 16, 4, 17, 8
+    key = jax.random.PRNGKey(28)
+    q = jax.random.normal(key, (B, H, Dh))
+    kp, vp, ptab = _random_paged(key, B, KVH, Dh, ps, P, NP)
+    lens = jnp.asarray([9, 4], jnp.int32)  # 3 live pages of 8
+    ref = paged_attention_ref(q, kp, vp, ptab, lens)
+    out = FOPS.paged_attention(q, kp, vp, ptab, lens, kv_splits=1)
+    assert seen["np"] == 3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+    # traced lens: no concretization possible, full extent kept
+    jax.jit(lambda *a: FOPS.paged_attention(*a, kv_splits=1))(
+        q, kp, vp, ptab, lens)
+    assert seen["np"] == NP
+
+
+# ---------------------------------------------------------------------------
+# "paged_attn" autotune family
+# ---------------------------------------------------------------------------
+
+def test_paged_autotune_heuristic_properties():
+    from repro.kernels import autotune
+    # power of two, never exceeds page count, floors at 1
+    for np_pages in (1, 2, 3, 7, 64, 2048):
+        for batch in (1, 4, 16):
+            s = autotune.heuristic_kv_splits(16, 2, 32, np_pages, batch=batch,
+                                             backend="cpu")
+            assert s >= 1 and s <= max(1, np_pages)
+            assert s & (s - 1) == 0  # power of two
+            if s > 1:  # each split keeps a useful page run
+                assert np_pages // s >= 2
+    # long context at small batch splits; big batch already occupies
+    assert autotune.heuristic_kv_splits(16, 2, 32, 1024, batch=1,
+                                        backend="cpu") > 1
+    assert autotune.heuristic_kv_splits(16, 2, 32, 1024, batch=64,
+                                        backend="cpu") == 1
+
+
+def test_paged_autotune_table_hit_and_miss(caplog):
+    import logging
+
+    from repro.kernels import autotune
+    key = autotune.paged_table_key("cpu", 16, 2, 32, 77)
+    assert key == "paged_attn|cpu|ps16|g2|d32|np77"
+    table = autotune.load_table()
+    had = key in table
+    try:
+        autotune.update_paged_entry(key, 4, us=99.0)
+        assert autotune.get_kv_splits(16, 2, 32, 77, backend="cpu") == 4
+        # miss warns once per key, then goes quiet (test_kron_matmul idiom)
+        del table[key]
+        autotune._warned_misses.discard(key)
+        with caplog.at_level(logging.WARNING, logger="repro.kernels.autotune"):
+            autotune.get_kv_splits(16, 2, 32, 77, backend="cpu")
+            autotune.get_kv_splits(16, 2, 32, 77, backend="cpu")
+        hits = [r for r in caplog.records if key in r.getMessage()]
+        assert len(hits) == 1
+    finally:
+        table.pop(key, None)
+        autotune._warned_misses.discard(key)
+        if had:
+            pytest.fail("test key collided with a real table entry")
+
+
+def test_paged_autotune_bench_shapes_committed():
+    """The committed table must carry measured winners for the long-context
+    bench shapes (acceptance: measured entries committed). Skipped when the
+    table is redirected ($REPRO_AUTOTUNE_TABLE), e.g. during retuning."""
+    import os
+
+    from repro.kernels import autotune
+    if os.environ.get("REPRO_AUTOTUNE_TABLE"):
+        pytest.skip("autotune table redirected")
+    table = autotune.load_table(refresh=True)
+    keys = [k for k in table if k.startswith("paged_attn|cpu|")]
+    assert keys, "no measured paged_attn entries committed"
+    for k in keys:
+        assert table[k]["kv_splits"] >= 1
