@@ -15,7 +15,10 @@ fields (p95 latency, tokens/sec, prefill-vs-decode tick split, page
 accounting) are asserted on the way. The ``long_context`` rows additionally
 gate the split-KV (flash-decoding) paged read: ≥ 1.5× p50 decode latency
 over the sequential-page walk at ≥ 16k-token context, batch 4, with p50/p95
-per context length recorded per path.
+per context length recorded per path. The ``serving_prefix_*`` rows gate
+refcounted prefix caching: ≥ 2× prompt ingestion for 8 requests sharing a
+512-token system prompt, at bit-identical outputs and a leak-free
+allocator (the shape is kept under ``--quick`` so the gate never weakens).
 
 Timing discipline: both engines are compile-warmed with a throwaway run,
 then timed interleaved over ``repeats`` rounds and reduced by the per-mode
@@ -124,6 +127,81 @@ def _page_pressure_row(cfg, params, report, quick: bool) -> dict:
     assert stats["reserve"]["preemptions"] == 0  # reservation never preempts
     return {"peak_in_flight": peaks,
             "optimistic": stats["optimistic"], "reserve": stats["reserve"]}
+
+
+def _prefix_cache_row(cfg, params, report, quick: bool) -> dict:
+    """Prefix-caching acceptance row: 8 requests sharing one 512-token
+    system prompt (distinct 8-token tails) over 2 slots, drained on a fresh
+    engine with the cache off vs on. The cached leg's first wave ingests the
+    prefix cold and publishes it; every later wave maps the 32 shared pages
+    and skips their prefill ticks. Gate (asserted here, run by CI): >= 2x
+    prompt-ingestion speedup at bit-identical outputs and a leak-free
+    allocator after the cache drains. The 8-request/512-token shape is kept
+    under --quick so the gate never weakens."""
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.faultinject import shared_prefix_prompts
+
+    n_req, prefix_len, suffix_len = 8, 512, 8
+    max_new = 2 if quick else 4
+    repeats = 1 if quick else 3
+    prompts = shared_prefix_prompts(5, n_req, prefix_len, suffix_len,
+                                    cfg.vocab_size)
+    kw = dict(batch_slots=2, max_len=576, page_size=16, prefill_chunk=16,
+              num_pages=80)
+
+    def drain(prefix_cache):
+        eng = ServingEngine(cfg, params, prefix_cache=prefix_cache, **kw)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.time()
+        eng.run_until_drained()
+        wall = time.time() - t0
+        eng.check()
+        st = eng.stats()
+        assert st["completed"] == n_req and st["failed"] == 0, st
+        if prefix_cache:
+            eng.prefix_cache.evict(eng.allocator.capacity)
+        assert eng.allocator.free_count == eng.allocator.capacity
+        return wall, st, [r.output for r in reqs]
+
+    drain(False)  # compile warmup (shared step fns; also warms `on` leg)
+    walls = {"off": [], "on": []}
+    stats, outs = {}, {}
+    for _ in range(repeats):  # interleaved, min-reduced (module docstring)
+        for name, on in (("off", False), ("on", True)):
+            wall, st, out = drain(on)
+            walls[name].append(wall)
+            stats[name], outs[name] = st, out
+
+    assert outs["on"] == outs["off"], \
+        "prefix caching changed decoded outputs"
+    best = {m: min(w) for m, w in walls.items()}
+    total_prompt = sum(len(p) for p in prompts)
+    tput = {m: total_prompt / best[m] for m in best}
+    speedup = best["off"] / best["on"]
+    st_on = stats["on"]
+    # 7 later requests each map the 32 shared prefix pages
+    assert st_on["prefix_hit_pages"] >= (n_req - 2) * (prefix_len // 16), st_on
+    assert st_on["prefill_ticks"] < stats["off"]["prefill_ticks"], st_on
+    for m in ("off", "on"):
+        report(f"serving_prefix_{m}_drain,{best[m] * 1e6:.0f},"
+               f"{tput[m]:.1f} prompt tok/s; "
+               f"prefill_ticks={stats[m]['prefill_ticks']}")
+    report(f"serving_prefix_speedup,,{speedup:.2f}x cached over uncached "
+           f"({n_req} reqs sharing {prefix_len}-token prefix; "
+           f"hit_pages={st_on['prefix_hit_pages']} "
+           f"cow={st_on['cow_copies']})")
+    assert speedup >= 2.0, (
+        f"prefix caching must ingest the shared-prefix workload >=2x faster "
+        f"than the uncached engine; measured {speedup:.2f}x")
+    return {"requests": n_req, "prefix_len": prefix_len,
+            "suffix_len": suffix_len, "max_new": max_new,
+            "off_drain_s": best["off"], "on_drain_s": best["on"],
+            "off_prompt_tok_per_s": tput["off"],
+            "on_prompt_tok_per_s": tput["on"], "speedup": speedup,
+            "off": stats["off"], "on": st_on}
 
 
 def _pctl(xs, p):
@@ -281,6 +359,7 @@ def run(report, json_path=None, quick: bool = False):
         f"token-by-token seed path; measured {speedup:.2f}x")
 
     pressure = _page_pressure_row(cfg, params, report, quick)
+    prefix = _prefix_cache_row(cfg, params, report, quick)
     long_context = _long_context_rows(report, quick)
 
     if json_path:
@@ -297,6 +376,7 @@ def run(report, json_path=None, quick: bool = False):
                         **{k: v for k, v in st_c.items()}},
             "prefill_speedup": speedup,
             "page_pressure": pressure,
+            "prefix_cache": prefix,
             "long_context": long_context,
         }
         with open(json_path, "w") as f:

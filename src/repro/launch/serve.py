@@ -8,7 +8,8 @@ stats line.
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b --smoke \
         --batch 8 --new-tokens 32 --mesh 1x1 [--quant int8] [--paged]
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
-        --engine --prompt-len 64 --prefill-chunk 16
+        --engine --prompt-len 64 --prefill-chunk 16 \
+        [--prefix-cache --shared-prefix-len 48]
 """
 
 from __future__ import annotations
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 def _run_engine(cfg, args) -> int:
     from repro.models import model as MD
     from repro.serve.engine import Request, ServingEngine
+    from repro.serve.faultinject import shared_prefix_prompts
 
     params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
     eng = ServingEngine(
@@ -30,13 +32,23 @@ def _run_engine(cfg, args) -> int:
         quant=args.quant, cache_mode="dense" if args.dense else "paged",
         prefill_chunk=args.prefill_chunk or None,
         prefill_mode=args.prefill_mode, admission=args.admission,
-        num_pages=args.num_pages or None,
+        num_pages=args.num_pages or None, prefix_cache=args.prefix_cache,
         handle_signals=True)  # SIGTERM drains instead of dropping requests
-    key = jax.random.PRNGKey(1)
-    for i in range(args.requests):
-        key, k = jax.random.split(key)
-        prompt = jax.random.randint(k, (args.prompt_len,), 0, cfg.vocab_size)
-        eng.submit(Request(uid=i, prompt=[int(t) for t in prompt],
+    if args.shared_prefix_len:
+        if args.shared_prefix_len > args.prompt_len:
+            raise SystemExit("--shared-prefix-len exceeds --prompt-len")
+        prompts = shared_prefix_prompts(
+            args.seed + 1, args.requests, args.shared_prefix_len,
+            args.prompt_len - args.shared_prefix_len, cfg.vocab_size)
+    else:
+        key = jax.random.PRNGKey(1)
+        prompts = []
+        for _ in range(args.requests):
+            key, k = jax.random.split(key)
+            prompts.append([int(t) for t in jax.random.randint(
+                k, (args.prompt_len,), 0, cfg.vocab_size)])
+    for i, prompt in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=prompt,
                            max_new_tokens=args.new_tokens,
                            deadline_s=args.deadline_s or None))
     res = eng.run_until_drained()
@@ -47,6 +59,10 @@ def _run_engine(cfg, args) -> int:
         (f", preempted={st['preemptions']}" if st["preemptions"] else "") + \
         ("" if res.drained else f", UNDRAINED stranded={res.stranded}") + \
         (" [degraded]" if st["degraded"] else "")
+    if eng.prefix_cache is not None:
+        fault += (f", prefix hit pages={st['prefix_hit_pages']}"
+                  f" (hits={st['prefix_hits']} misses={st['prefix_misses']}"
+                  f" cow={st['cow_copies']})")
     lat = ("p50=n/a p95=n/a" if st["p50_latency_s"] is None else
            f"p50={st['p50_latency_s']:.3f}s p95={st['p95_latency_s']:.3f}s")
     print(f"[serve:engine] {cfg.name} {eng.prefill_mode}/{eng.cache_mode}"
@@ -97,6 +113,13 @@ def main(argv=None):
                    help="engine mode: page-pool size (0 = full capacity)")
     p.add_argument("--deadline-s", type=float, default=0.0,
                    help="engine mode: per-request TTL (0 = none)")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="engine mode: content-addressed prefix caching — "
+                        "requests sharing a prompt prefix map the same "
+                        "refcounted KV pages (docs/serving.md)")
+    p.add_argument("--shared-prefix-len", type=int, default=0,
+                   help="engine mode: tokens shared by every prompt "
+                        "(exercises the prefix cache; 0 = fully random)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 

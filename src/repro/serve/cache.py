@@ -31,15 +31,20 @@ like parallel/sharding.py — never by guessing which axis happens to equal
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
 __all__ = [
     "init_cache", "init_layer_cache", "init_paged_cache", "logical_pages",
     "pages_needed", "gather_pages", "identity_ptab", "slot_axes", "reset_slot",
-    "PageAllocator", "NO_SLOT_AXIS", "PAGED_KINDS", "TRASH_PAGE",
+    "copy_page", "PageAllocator", "PrefixCache", "NO_SLOT_AXIS",
+    "PAGED_KINDS", "TRASH_PAGE",
 ]
 
 # attention kinds whose KV/latent history grows with sequence length; only
@@ -229,14 +234,38 @@ def reset_slot(cache, axes, s: int):
     return jax.tree_util.tree_map(reset, cache, axes)
 
 
+def copy_page(cache, src: int, dst: int):
+    """Copy pool row ``src`` -> ``dst`` in every paged pool leaf (all layers
+    at once — the slot→page table indexes every layer's pool with the same
+    row id). This is the device half of copy-on-write: the engine allocates
+    a private row, copies the shared row's content here, then repoints the
+    slot's ptab entry (serve/engine.py::_grow)."""
+    def cp(path, leaf):
+        if not _leaf_name(path).endswith("_pages"):
+            return leaf
+        if _in_groups(path):  # stacked pools: (n_groups, P, ps, ...)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
+
+    return jax.tree_util.tree_map_with_path(cp, cache)
+
+
 # ---------------------------------------------------------------------------
 # Host-side page allocator
 # ---------------------------------------------------------------------------
 
 class PageAllocator:
-    """Free-list allocator over pool rows 1..num_pages-1 (row 0 = trash).
+    """Refcounted free-list allocator over pool rows 1..num_pages-1 (row 0 =
+    trash).
 
-    Self-checking: freeing a page that isn't outstanding raises, so
+    Pages come out of ``alloc`` with refcount 1. Sharing a page — a prefix
+    cache entry, a second slot mapping the same physical prefix page —
+    takes an extra reference via :meth:`acquire`; :meth:`release` drops one
+    reference per page and only returns the page to the free list when its
+    count reaches zero (``free`` is the same release-to-zero operation,
+    kept as the historical name for sole-owner call sites).
+
+    Self-checking: releasing a page that isn't outstanding raises, so
     double-free / leak bugs in the scheduler surface as exceptions rather
     than silent cache corruption.
     """
@@ -247,6 +276,7 @@ class PageAllocator:
         self.capacity = num_pages - 1
         self._free = list(range(num_pages - 1, 0, -1))  # pop() -> low ids first
         self._outstanding: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
@@ -262,6 +292,10 @@ class PageAllocator:
         this against per-slot ownership + externally held pages)."""
         return frozenset(self._outstanding)
 
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 for free/foreign pages)."""
+        return self._refs.get(page, 0)
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
@@ -270,17 +304,160 @@ class PageAllocator:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._outstanding.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
-    def free(self, pages: list[int]) -> None:
+    def acquire(self, page: int) -> None:
+        """Take one more reference on an already-outstanding page."""
+        if page not in self._outstanding:
+            raise ValueError(f"acquire on non-outstanding page {page}")
+        self._refs[page] += 1
+
+    def release(self, pages: list[int]) -> None:
+        """Drop one reference per page; a page whose count reaches zero
+        returns to the free list."""
         for p in pages:
             if p not in self._outstanding:
                 raise ValueError(f"double-free / foreign page {p}")
-            self._outstanding.remove(p)
-            self._free.append(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._outstanding.remove(p)
+                self._free.append(p)
+
+    # release-to-zero under the pre-refcount name: sole-owner call sites
+    # (held pages, dense-mode bookkeeping) read as plain frees
+    free = release
 
     def check(self) -> None:
-        """Invariant: every page is exactly one of {free, outstanding}."""
+        """Invariant: every page is exactly one of {free, outstanding}, and
+        every outstanding page carries a positive refcount."""
         assert len(self._free) + len(self._outstanding) == self.capacity, \
             (len(self._free), len(self._outstanding), self.capacity)
         assert not (set(self._free) & self._outstanding)
+        assert set(self._refs) == self._outstanding, \
+            (set(self._refs), self._outstanding)
+        assert all(c >= 1 for c in self._refs.values()), self._refs
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed prefix cache
+# ---------------------------------------------------------------------------
+
+class PrefixCache:
+    """Content-addressed map from chained page hashes to physical pool rows.
+
+    A prompt is hashed one *full page* at a time: page j's key chains page
+    j-1's key with page j's token ids (:meth:`chain_key`), so a hit on page
+    j implies every earlier page hit too — matching is a single walk down
+    the key list and always yields a leading run. Keys are blake2b over the
+    raw token ids, so two prompts share a cached page iff they share the
+    entire page-aligned token prefix (position-exact: the chain starts at
+    position 0, and KV content depends only on token ids + absolute
+    positions).
+
+    The cache holds one allocator reference per cached page (so a cached
+    page survives its producer slot's retirement); every slot that maps a
+    cached page holds its own reference on top. :meth:`evict` drops LRU
+    entries whose page nobody else references — a page shared by any live
+    slot is never evicted from under it.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int):
+        self._alloc = allocator
+        self.page_size = page_size
+        self._map: OrderedDict[bytes, int] = OrderedDict()  # key -> page, LRU
+        self._by_page: dict[int, bytes] = {}
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    @property
+    def pages(self) -> frozenset[int]:
+        """Pages the cache itself holds a reference on."""
+        return frozenset(self._by_page)
+
+    @staticmethod
+    def chain_key(prev: bytes | None, tokens) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(prev if prev is not None else b"\x00root")
+        h.update(np.asarray(list(tokens), np.int64).tobytes())
+        return h.digest()
+
+    def page_keys(self, tokens) -> list[bytes]:
+        """Chained keys for every full page of ``tokens`` (the ragged tail
+        is never cached — partial pages are still being written)."""
+        keys: list[bytes] = []
+        prev = None
+        ps = self.page_size
+        for j in range(len(tokens) // ps):
+            prev = self.chain_key(prev, tokens[j * ps:(j + 1) * ps])
+            keys.append(prev)
+        return keys
+
+    def lookup(self, keys: list[bytes]) -> list[int]:
+        """Longest leading run of cached pages for ``keys``; acquires one
+        reference per returned page (the caller owns them until release)."""
+        out: list[int] = []
+        for k in keys:
+            p = self._map.get(k)
+            if p is None:
+                break
+            self._map.move_to_end(k)
+            self._alloc.acquire(p)
+            out.append(p)
+        self.hits += len(out)
+        self.misses += len(keys) - len(out)
+        return out
+
+    def insert(self, key: bytes, page: int) -> bool:
+        """Cache ``page`` under ``key`` (acquiring a reference). No-op if
+        the key is already cached — first producer wins."""
+        if key in self._map:
+            return False
+        self._alloc.acquire(page)
+        self._map[key] = page
+        self._by_page[page] = key
+        self.inserts += 1
+        return True
+
+    def invalidate(self, key: bytes) -> bool:
+        """Drop one entry (e.g. a page produced by a quarantined slot whose
+        model state went non-finite — its content cannot be trusted by
+        other requests). Releases the cache's reference; sharers keep
+        theirs."""
+        p = self._map.pop(key, None)
+        if p is None:
+            return False
+        del self._by_page[p]
+        self._alloc.release([p])
+        self.invalidations += 1
+        return True
+
+    def evict(self, n: int) -> int:
+        """Release up to ``n`` LRU pages referenced *only* by the cache.
+        Returns how many pages actually went back to the free list."""
+        freed = 0
+        for k, p in list(self._map.items()):
+            if freed >= n:
+                break
+            if self._alloc.refcount(p) == 1:  # nobody else: safe to drop
+                del self._map[k]
+                del self._by_page[p]
+                self._alloc.release([p])
+                self.evictions += 1
+                freed += 1
+        return freed
+
+    def stats(self) -> dict:
+        return {"prefix_cache_pages": len(self._map),
+                "prefix_hits": self.hits, "prefix_misses": self.misses,
+                "prefix_inserts": self.inserts,
+                "prefix_evictions": self.evictions,
+                "prefix_invalidations": self.invalidations}

@@ -229,6 +229,12 @@ def paged_kv_decode_attention(cfg, q, k_new, v_new, pool_k, pool_v, ptab, step):
     TPU, its fused-XLA host executor elsewhere; ``cfg.decode_kv_splits``
     (pinned by the engine from the "paged_attn" autotune family) fixes the
     split count so every trace shares one static grid.
+
+    Prefix-cache sharing (serve/cache.PrefixCache) relies on this split:
+    the paged READ is position-blind — any ptab row may point several slots
+    at the same physical page — while the single WRITE targets the slot's
+    current page only, which the engine guarantees is private (copy-on-write
+    in engine._grow repoints the ptab before the tick ever runs).
     """
     pool_k = _page_write(pool_k, ptab, step, k_new)
     pool_v = _page_write(pool_v, ptab, step, v_new)

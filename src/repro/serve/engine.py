@@ -38,6 +38,19 @@ two admission policies:
   ``prefill_mode="stepwise"``, whose batched decode tick cannot express a
   per-slot stall).
 
+**Prefix caching** (``prefix_cache=True``, paged + chunked + fully-paged
+layer patterns only): full pages of each slot's written token stream are
+published to a content-addressed :class:`~repro.serve.cache.PrefixCache`
+under chained blake2b keys; admission maps the longest cached run straight
+into the new slot's page table (skipping those prefill ticks) and holds one
+allocator reference per mapped page. Writes never target a shared page —
+``_grow`` copy-on-writes the one reachable case (a fully-covered prompt
+replaying its final token) before the tick. Under page pressure the engine
+sheds cold cache entries before preempting anyone. Streaming rides on top:
+``Request.on_token`` fires synchronously per emitted token, and per-request
+SLO stats (``ttft_s``, ``emit_tps``, ``prefix_hit_pages``) surface through
+``Request`` and ``stats()``. See docs/serving.md "Prefix caching".
+
 Request lifecycle robustness (see docs/serving.md "Fault model"):
 
 * **deadlines** — ``Request.deadline_s`` is a TTL from submission; expired
@@ -78,7 +91,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from collections import deque
+from collections import Counter, deque
 from typing import Callable, Optional
 
 import jax
@@ -90,8 +103,8 @@ from repro.core.quant import dequantize_params, quantize_params
 from repro.fault import PreemptionHandler, StragglerWatchdog
 from repro.models import model as MD
 from repro.serve.cache import (PAGED_KINDS, TRASH_PAGE, PageAllocator,
-                               logical_pages, pages_needed, reset_slot,
-                               slot_axes)
+                               PrefixCache, copy_page, logical_pages,
+                               pages_needed, reset_slot, slot_axes)
 
 __all__ = ["Request", "ServingEngine", "DrainResult", "EngineStepError",
            "quantize_params", "dequantize_params"]
@@ -131,6 +144,28 @@ class Request:
     # quarantine strikes: one requeue is forgiven, the second failure is
     # attributed to the request (persistently non-finite model state)
     nonfinite_strikes: int = 0
+    # streaming: fired synchronously with each emitted token id (replayed
+    # tokens after a preemption are NOT re-fired — emission is exactly-once);
+    # a raising callback fails the request with reason "callback_error: ..."
+    on_token: Optional[Callable[[int], None]] = None
+    # SLO stats, filled by the engine
+    first_token_at: Optional[float] = None
+    prefix_hit_pages: int = 0  # cached pages mapped at (re)admission
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first emitted token (None until one is emitted)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def emit_tps(self) -> Optional[float]:
+        """Emitted tokens/sec from first token to finish."""
+        if self.first_token_at is None or self.finished_at is None:
+            return None
+        dt = self.finished_at - self.first_token_at
+        return len(self.output) / dt if dt > 0 else None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +189,7 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  prefill_mode: str = "chunked",
                  admission: str = "optimistic",
+                 prefix_cache: bool = False,
                  max_step_retries: int = 2,
                  retry_backoff_s: float = 0.02,
                  injector=None,
@@ -205,6 +241,19 @@ class ServingEngine:
             admission = "reserve"
         self.admission = admission
 
+        # content-addressed prefix caching: only sound when every layer's
+        # per-token state lives in the shared pools — dense per-slot state
+        # (SSM / RG-LRU / local-attn rings) cannot be reused by mapping
+        # pages, and the stepwise tick cannot skip prefill positions.
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            if (not self._needs_pages or prefill_mode != "chunked"
+                    or any(k not in PAGED_KINDS for k in cfg.layer_pattern)):
+                raise ValueError(
+                    "prefix_cache requires paged cache_mode, chunked prefill, "
+                    f"and a fully-paged layer pattern (got {cfg.layer_pattern})")
+            self.prefix_cache = PrefixCache(self.allocator, self.page_size)
+
         if self._needs_pages and cfg.decode_kv_splits is None:
             # pin the split-KV decode's split count once, from the engine's
             # actual read shape (pages at max_len, slot count) — every decode
@@ -225,6 +274,13 @@ class ServingEngine:
         self.slot_pages: list[list[int]] = [[] for _ in range(batch_slots)]
         # tokens written into the slot's cache so far (mirrors cache["step"])
         self.slot_pos: list[int] = [0] * batch_slots
+        # prefix-cache bookkeeping: how many leading pages of the slot are
+        # shared (read-only until copy-on-write), the chained page keys
+        # covering the slot's written stream, and the keys this slot itself
+        # published (quarantine must pull those back)
+        self.slot_shared_n: list[int] = [0] * batch_slots
+        self.slot_keys: list[list[bytes]] = [[] for _ in range(batch_slots)]
+        self.slot_inserted: list[list[bytes]] = [[] for _ in range(batch_slots)]
         # admission sequence number: smallest = oldest (preemption victims
         # are always the youngest)
         self.slot_seq: list[int] = [0] * batch_slots
@@ -254,6 +310,12 @@ class ServingEngine:
         self.preemptions = 0
         self.retries = 0
         self.quarantines = 0
+        self.cow_copies = 0
+        self.prefix_hit_pages_total = 0
+        # immutable failure record: (uid, reason) per _fail call. Request
+        # objects can be resubmitted (submit() resets their lifecycle
+        # fields), so stats() must not rebuild failure history from them.
+        self._fail_log: list[tuple[int, str]] = []
 
     # ------------------------------------------------------------------
     # submission + lifecycle
@@ -277,6 +339,24 @@ class ServingEngine:
             raise ValueError(
                 f"request needs {self._pages_worst_case(req)} pages but the pool "
                 f"only has {self.allocator.capacity}: it could never admit")
+        if (any(r.uid == req.uid for r in self.queue)
+                or any(r is not None and r.uid == req.uid for r in self.slot_req)):
+            # uids key cancel() and per-request accounting: a duplicate live
+            # uid would make cancel() stop at the first match and conflate
+            # the two requests' stats
+            raise ValueError(f"uid {req.uid} is already live (queued or in-flight)")
+        # a resubmitted Request object (same prompt after a cancel/deadline
+        # that caught it mid-preemption) must not carry stale lifecycle
+        # state into the new attempt: partial output would be replayed as a
+        # resumable prefix, and strike/preemption counts would fail it early
+        req.output = []
+        req.status = "new"
+        req.fail_reason = None
+        req.finished_at = None
+        req.preemptions = 0
+        req.nonfinite_strikes = 0
+        req.first_token_at = None
+        req.prefix_hit_pages = 0
         req.submitted_at = self._clock()
         req.status = "queued"
         self.queue.append(req)
@@ -312,34 +392,64 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # admission + page growth + preemption
     # ------------------------------------------------------------------
-    def _first_tick_pages(self, req: Request) -> int:
-        """Optimistic admission price: pages covering the first tick's
-        tokens only (the rest allocates as the sequence grows)."""
-        prefix = len(req.prompt) + len(req.output)
-        return pages_needed(min(self.prefill_chunk, prefix), self.page_size)
-
     def _admit(self):
         if self._draining:
             return
+        ps = self.page_size
         for s in range(self.B):
             if self.slot_req[s] is not None or not self.queue:
                 continue
             req = self.queue[0]
-            pages: list[int] = []
+            prefix = self._resume_prompt(req)
+            # content-addressed reuse: map the longest run of cached pages
+            # covering the page-aligned prefix and skip their prefill ticks
+            hits: list[int] = []
+            keys: list[bytes] = []
+            if self.prefix_cache is not None:
+                keys = self.prefix_cache.page_keys(prefix)
+                hits = self.prefix_cache.lookup(keys)  # acquires one ref each
+                if self.admission == "reserve" and hits:
+                    # reserve mode has no COW machinery (its _grow is a
+                    # no-op): keep the prefix's last token out of shared
+                    # pages so writes never land in one
+                    cap = (len(prefix) - 1) // ps
+                    if len(hits) > cap:
+                        self.allocator.release(hits[cap:])
+                        hits = hits[:cap]
+            h = len(hits)
+            # fully-covered prompt: replay only its last token — that write
+            # copy-on-writes the final shared page in _grow before the tick
+            start = min(h * ps, len(prefix) - 1)
+            pages: list[int] = list(hits)
             if self._needs_pages:
-                want = (self._pages_worst_case(req) if self.admission == "reserve"
-                        else self._first_tick_pages(req))
+                if self.admission == "reserve":
+                    want = self._pages_worst_case(req) - h
+                else:
+                    first = min(self.prefill_chunk, len(prefix) - start)
+                    want = pages_needed(start + first, ps) - h
+                want = max(0, want)
                 got = self.allocator.alloc(want)
+                if got is None and self.prefix_cache is not None:
+                    # shed cold cache entries before blocking admission
+                    self.prefix_cache.evict(want - self.allocator.free_count)
+                    got = self.allocator.alloc(want)
                 if got is None:
+                    if hits:
+                        self.allocator.release(hits)  # undo the lookup refs
                     return  # page budget exhausted: block FIFO (no skipping)
-                pages = got
+                pages += got
             self.queue.popleft()
             self._admit_seq += 1
             self.slot_req[s] = req
             self.slot_seq[s] = self._admit_seq
             self.slot_pages[s] = pages
-            self.slot_pos[s] = 0
+            self.slot_pos[s] = start
+            self.slot_shared_n[s] = h
+            self.slot_keys[s] = keys[:h]
+            self.slot_inserted[s] = []
             req.status = "running"
+            req.prefix_hit_pages = h
+            self.prefix_hit_pages_total += h
             # engine-level cache isolation: zero the slot along the tagged
             # axes (clears dense state, the step counter, and the ptab row)
             self.cache = reset_slot(self.cache, self._axes, s)
@@ -347,9 +457,11 @@ class ServingEngine:
                 row = np.zeros((self.cache["ptab"].shape[1],), np.int32)
                 row[:len(pages)] = pages
                 self.cache["ptab"] = self.cache["ptab"].at[s].set(jnp.asarray(row))
-            prefix = self._resume_prompt(req)
+            if start:
+                # skipped prefill: reads/writes resume past the shared pages
+                self.cache["step"] = self.cache["step"].at[s].set(start)
             if self.prefill_mode == "chunked":
-                self.slot_pending[s] = deque(prefix)
+                self.slot_pending[s] = deque(prefix[start:])
                 self._cur_tokens[s] = 0
             else:  # stepwise: first prompt token feeds the next decode tick
                 self.slot_pending[s] = deque(prefix)
@@ -361,10 +473,25 @@ class ServingEngine:
             return min(self.prefill_chunk, n) if self.prefill_mode == "chunked" else 1
         return 1  # decoding: one token
 
+    def _acquire_pages(self, s: int, need: int) -> Optional[list[int]]:
+        """Allocate under pressure on behalf of slot ``s``: shed cold
+        prefix-cache entries first (pages nothing live references), then
+        preempt strictly-younger slots, else give up (caller stalls)."""
+        while not self.allocator.can_alloc(need):
+            if (self.prefix_cache is not None and
+                    self.prefix_cache.evict(need - self.allocator.free_count)):
+                continue
+            victim = self._youngest_live_slot(younger_than=self.slot_seq[s])
+            if victim is None:
+                break
+            self._preempt(victim, "page_pressure")
+        return self.allocator.alloc(need)
+
     def _grow(self) -> set[int]:
-        """Optimistic mode: make sure every live slot owns the pages its
-        next tick will write into, preempting strictly-younger slots on
-        exhaustion. Returns the slots that must stall this tick."""
+        """Optimistic mode: make sure every live slot owns — exclusively —
+        the pages its next tick will write into: copy-on-write any shared
+        page in the write path, then grow, preempting strictly-younger
+        slots on exhaustion. Returns the slots that must stall this tick."""
         stalled: set[int] = set()
         if self.admission != "optimistic":
             return stalled
@@ -373,16 +500,30 @@ class ServingEngine:
         for s in order:
             if self.slot_req[s] is None:
                 continue  # preempted by an older slot earlier in this pass
+            wp = self.slot_pos[s] // self.page_size
+            if wp < self.slot_shared_n[s]:
+                # the next write lands in a shared page (a fully-covered
+                # prefix replaying its last token): allocate a private page,
+                # copy the pool rows, repoint the ptab entry. Only the LAST
+                # shared page can ever be in the write path — earlier pages
+                # are fully covered by the matched prefix.
+                got = self._acquire_pages(s, 1)
+                if got is None:
+                    stalled.add(s)
+                    continue
+                new = got[0]
+                old = self.slot_pages[s][wp]
+                self.cache = copy_page(self.cache, old, new)
+                self.slot_pages[s][wp] = new
+                self.cache["ptab"] = self.cache["ptab"].at[s, wp].set(new)
+                self.allocator.release([old])  # drop this slot's shared ref
+                self.slot_shared_n[s] = wp
+                self.cow_copies += 1
             need = pages_needed(self.slot_pos[s] + self._tokens_this_tick(s),
                                 self.page_size) - len(self.slot_pages[s])
             if need <= 0:
                 continue
-            while not self.allocator.can_alloc(need):
-                victim = self._youngest_live_slot(younger_than=self.slot_seq[s])
-                if victim is None:
-                    break
-                self._preempt(victim, "page_pressure")
-            got = self.allocator.alloc(need)
+            got = self._acquire_pages(s, need)
             if got is None:
                 stalled.add(s)  # external pressure: wait, don't corrupt
                 continue
@@ -404,8 +545,13 @@ class ServingEngine:
         self.slot_pending[s].clear()
         self.slot_pos[s] = 0
         self._cur_tokens[s] = 0
+        self.slot_shared_n[s] = 0
+        self.slot_keys[s] = []
+        self.slot_inserted[s] = []
         if self.slot_pages[s]:
-            self.allocator.free(self.slot_pages[s])
+            # drop one reference per page: pages the prefix cache (or
+            # another sharing slot) still references stay outstanding
+            self.allocator.release(self.slot_pages[s])
             self.slot_pages[s] = []
         if "ptab" in self.cache:
             # re-point the idle slot at the trash page NOW: its masked decode
@@ -436,6 +582,7 @@ class ServingEngine:
         req.fail_reason = reason
         req.finished_at = self._clock()
         self.failed.append(req)
+        self._fail_log.append((req.uid, reason))
         if slot is not None:
             self._release_slot(slot)
 
@@ -445,6 +592,13 @@ class ServingEngine:
         garbage token is never emitted."""
         req = self.slot_req[s]
         self.quarantines += 1
+        if self.prefix_cache is not None and self.slot_inserted[s]:
+            # the slot's model state went non-finite: every page it
+            # published this tenure may hold garbage K/V — pull them from
+            # the cache before another request can map them
+            for k in self.slot_inserted[s]:
+                self.prefix_cache.invalidate(k)
+            self.slot_inserted[s] = []
         if req.nonfinite_strikes >= 1:
             self._fail(req, "nonfinite_logits", slot=s)
             return
@@ -548,7 +702,17 @@ class ServingEngine:
         """Record one sampled token; retire on EOS / max-new. The finish
         check counts the request's TOTAL output (it may have accumulated
         across preemptions), not tokens since the last admission."""
+        if req.first_token_at is None:
+            req.first_token_at = self._clock()
         req.output.append(tok)
+        if req.on_token is not None:
+            try:
+                req.on_token(tok)
+            except Exception as e:  # noqa: BLE001 — user code, never fatal
+                # the consumer is gone: fail the request rather than keep
+                # generating tokens nobody will see
+                self._fail(req, f"callback_error: {e!r}", slot=s)
+                return
         finished = (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id))
         if finished:
@@ -660,6 +824,8 @@ class ServingEngine:
                     self._prefill_tick(stalled)
                 else:
                     self._decode_tick()
+                if self.prefix_cache is not None:
+                    self._publish_full_pages()
         except EngineStepError as e:
             # the model cannot run even on the degraded rung: account for
             # every request rather than losing them
@@ -667,6 +833,33 @@ class ServingEngine:
         dt = time.time() - t0
         self._busy_s += dt
         self.watchdog.observe(tick, dt)
+
+    def _publish_full_pages(self):
+        """Post-tick: hash every newly completed page of each live slot
+        into the prefix cache. The tokens written at positions
+        ``[0, slot_pos)`` are exactly ``(prompt + output)[:slot_pos]`` —
+        prompt tokens via prefill, emitted tokens fed back through the
+        decode tick — so the chained keys are derived from the request
+        itself, no separate written-token log needed. A page is published
+        only once full (the ragged tail is still being written); full pages
+        are never written again (writes are strictly sequential), so cached
+        content is frozen."""
+        ps = self.page_size
+        for s in range(self.B):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            full = min(self.slot_pos[s] // ps, len(self.slot_pages[s]))
+            if len(self.slot_keys[s]) >= full:
+                continue
+            stream = list(req.prompt) + list(req.output)
+            while len(self.slot_keys[s]) < full:
+                j = len(self.slot_keys[s])
+                prev = self.slot_keys[s][-1] if j else None
+                key = PrefixCache.chain_key(prev, stream[j * ps:(j + 1) * ps])
+                self.slot_keys[s].append(key)
+                if self.prefix_cache.insert(key, self.slot_pages[s][j]):
+                    self.slot_inserted[s].append(key)
 
     def _has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
@@ -694,32 +887,51 @@ class ServingEngine:
     def check(self):
         """Invariant audit (chaos suite runs this after every tick):
 
-        * allocator: free ∪ outstanding partitions the pool;
-        * slot page lists are disjoint, never contain the trash page, and
-          together with externally held pages equal the outstanding set;
+        * allocator: free ∪ outstanding partitions the pool, refcounts ≥ 1;
+        * reference reconciliation: summing one reference per (slot, page)
+          mapping, per held page, and per prefix-cache entry reproduces the
+          allocator's per-page refcounts exactly (no leaked or phantom refs);
+        * slot page lists never contain the trash page or intra-slot dups;
+          any page a slot may still WRITE (not fully written, not shared)
+          has exactly one reference — no writer ever aliases shared data;
         * the device page table mirrors the host lists exactly — live rows
           are their slot's pages then trash, idle rows all trash (pinned);
         * every live slot owns the pages its written tokens occupy.
         """
         if self.allocator is not None:
             self.allocator.check()
-            seen: set[int] = set()
+            refs: Counter[int] = Counter()
+            writable: set[int] = set()
             for s in range(self.B):
                 pages = self.slot_pages[s]
                 assert TRASH_PAGE not in pages, f"slot {s} owns the trash page"
-                for p in pages:
-                    assert p not in seen, f"page {p} owned by two slots"
-                    seen.add(p)
+                assert len(set(pages)) == len(pages), \
+                    f"slot {s} maps a page twice: {pages}"
+                refs.update(pages)
                 if self.slot_req[s] is None:
                     assert not pages, f"idle slot {s} still holds pages"
                 else:
                     assert len(pages) >= pages_needed(self.slot_pos[s],
                                                       self.page_size), \
                         (s, self.slot_pos[s], pages)
-            held = set(self._held_pages)
-            assert not (seen & held), "held pages overlap slot pages"
-            assert seen | held == self.allocator.outstanding, \
-                (seen, held, self.allocator.outstanding)
+                    for j, p in enumerate(pages):
+                        if (j >= self.slot_shared_n[s]
+                                and (j + 1) * self.page_size > self.slot_pos[s]):
+                            writable.add(p)
+            refs.update(self._held_pages)
+            cache_pages: frozenset[int] = frozenset()
+            if self.prefix_cache is not None:
+                cache_pages = self.prefix_cache.pages
+                refs.update(cache_pages)
+            outstanding = self.allocator.outstanding
+            assert set(refs) == set(outstanding), \
+                (set(refs) ^ set(outstanding))
+            for p, n in refs.items():
+                assert self.allocator.refcount(p) == n, \
+                    (p, n, self.allocator.refcount(p))
+            for p in writable:
+                assert refs[p] == 1 and p not in cache_pages, \
+                    f"writable page {p} is shared (refs={refs[p]})"
         if "ptab" in self.cache:
             ptab = np.asarray(self.cache["ptab"])
             for s in range(self.B):
@@ -736,7 +948,19 @@ class ServingEngine:
                 "held_pages": len(self._held_pages)}
 
     def stats(self) -> dict:
+        # percentile semantics pinned explicitly: method="higher" returns an
+        # OBSERVED sample ≥ the quantile, so p95 == max on tiny n instead of
+        # np.percentile's default linear interpolation reporting a latency
+        # no request ever saw (with 2 completions the default p95 < max)
+        def pct(xs, q):
+            return float(np.percentile(xs, q, method="higher")) if xs else None
+
         lat = [r.finished_at - r.submitted_at for r in self.done if r.finished_at]
+        # failed requests reported separately — folding them into the done
+        # percentiles would let fast failures mask slow completions
+        flat = [r.finished_at - r.submitted_at for r in self.failed
+                if r.finished_at is not None]
+        ttft = [r.ttft_s for r in self.done if r.ttft_s is not None]
         toks = sum(len(r.output) for r in self.done)
         prompt_toks = sum(len(r.prompt) for r in self.done)
         busy = max(self._busy_s, 1e-9)
@@ -744,14 +968,22 @@ class ServingEngine:
         out = {
             "completed": len(self.done),
             "failed": len(self.failed),
-            "fail_reasons": {r.uid: r.fail_reason for r in self.failed},
+            # uid-keyed convenience view (last failure wins); fail_log is
+            # the faithful record when one uid failed more than once across
+            # resubmissions
+            "fail_reasons": dict(self._fail_log),
+            "fail_log": list(self._fail_log),
             "queued": len(self.queue),
             "in_flight": sum(r is not None for r in self.slot_req),
             "stranded": 0 if last is None or last.drained else len(last.stranded),
             "generated_tokens": toks,
             "prompt_tokens": prompt_toks,
-            "p50_latency_s": float(np.median(lat)) if lat else None,
-            "p95_latency_s": float(np.percentile(lat, 95)) if lat else None,
+            "p50_latency_s": pct(lat, 50),
+            "p95_latency_s": pct(lat, 95),
+            "failed_p50_latency_s": pct(flat, 50),
+            "failed_p95_latency_s": pct(flat, 95),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
             "tokens_per_sec": toks / busy,
             "prompt_tokens_per_sec": prompt_toks / busy,
             "prefill_ticks": self.prefill_ticks,
@@ -761,6 +993,8 @@ class ServingEngine:
             "preemptions": self.preemptions,
             "retries": self.retries,
             "quarantines": self.quarantines,
+            "cow_copies": self.cow_copies,
+            "prefix_hit_pages": self.prefix_hit_pages_total,
             "degraded": self.degraded,
             "step_p50_s": None,
             "step_p95_s": None,
@@ -768,4 +1002,6 @@ class ServingEngine:
         }
         out.update(self.watchdog.stats())
         out.update(self.page_stats())
+        if self.prefix_cache is not None:
+            out.update(self.prefix_cache.stats())
         return out

@@ -36,10 +36,22 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["FaultEvent", "FaultInjector", "InjectedFault", "VirtualClock",
-           "EVENT_KINDS"]
+           "EVENT_KINDS", "shared_prefix_prompts"]
 
 EVENT_KINDS = ("page_hold", "page_release", "nan_logits", "step_error",
-               "slow_tick", "sigterm")
+               "slow_tick", "sigterm", "cancel")
+
+
+def shared_prefix_prompts(seed: int, n: int, prefix_len: int, suffix_len: int,
+                          vocab: int) -> list[list[int]]:
+    """``n`` prompts sharing one random ``prefix_len``-token prefix, each
+    with a distinct random ``suffix_len``-token tail — the canonical
+    shared-system-prompt workload for the prefix-cache tests and the
+    ``serving_prefix_*`` benchmark rows. Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=prefix_len).tolist()
+    return [prefix + rng.integers(0, vocab, size=suffix_len).tolist()
+            for _ in range(n)]
 
 
 class InjectedFault(RuntimeError):
@@ -62,7 +74,10 @@ class FaultEvent:
                            larger than the engine's retry budget forces the
                            degradation rung);
       * ``slow_tick``    — sleep ``arg`` milliseconds (straggler);
-      * ``sigterm``      — call ``engine.request_drain()`` (eviction).
+      * ``sigterm``      — call ``engine.request_drain()`` (eviction);
+      * ``cancel``       — call ``engine.cancel(arg)``: races a client
+                           cancellation against whatever else lands this
+                           tick (preemption, NaN quarantine, deadlines).
     """
 
     tick: int
@@ -155,6 +170,9 @@ class FaultInjector:
             elif ev.kind == "sigterm":
                 engine.request_drain()
                 self.injected["sigterm"] += 1
+            elif ev.kind == "cancel":
+                if engine.cancel(ev.arg):
+                    self.injected["cancel"] += 1
             elif ev.kind == "step_error":
                 self._step_failures_left += max(1, ev.arg)
             elif ev.kind == "nan_logits":

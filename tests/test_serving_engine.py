@@ -295,6 +295,104 @@ def test_submit_rejects_over_capacity(setup):
 
 
 # ---------------------------------------------------------------------------
+# uid lifecycle: duplicate rejection + resubmission
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_duplicate_live_uid(setup):
+    """A uid keys cancel() and per-request accounting: submitting it twice
+    while the first is queued OR in-flight must be rejected, not silently
+    accepted (where cancel() would stop at the first match)."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    r1 = Request(uid=1, prompt=[5, 17], max_new_tokens=4)
+    eng.submit(r1)
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(Request(uid=1, prompt=[9, 9], max_new_tokens=2))
+    eng.step()  # r1 now in-flight
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(Request(uid=1, prompt=[9, 9], max_new_tokens=2))
+    # cancel still reaches the one real request after the rejected dupes
+    assert eng.cancel(1) and r1.status == "failed"
+    assert eng.allocator.free_count == eng.allocator.capacity
+
+
+def test_resubmit_after_finish_resets_lifecycle_state(setup):
+    """A retired uid may be submitted again — including the SAME Request
+    object: stale output/strikes/preemptions must not leak into the new
+    attempt (a carried-over output would replay as a resumable prefix)."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    req = Request(uid=1, prompt=[5, 17, 333], max_new_tokens=4)
+    eng.submit(req)
+    eng.run_until_drained()
+    first = list(req.output)
+    assert first == _direct_greedy(cfg, params, req.prompt, 4)
+    # simulate stale damage a cancelled-mid-preemption request would carry
+    req.preemptions, req.nonfinite_strikes = 3, 1
+    eng.submit(req)  # same object, uid no longer live
+    eng.run_until_drained()
+    assert req.output == first  # NOT first + first (no prefix replay)
+    assert req.preemptions == 0 and req.nonfinite_strikes == 0
+    assert req.status == "done"
+
+
+# ---------------------------------------------------------------------------
+# stats: pinned percentile semantics + failure records
+# ---------------------------------------------------------------------------
+
+def test_percentiles_are_observed_samples(setup):
+    """method="higher" semantics: with 2 completions p95 == max (the default
+    linear interpolation reports a latency no request ever saw), and failed
+    requests get their own percentiles instead of vanishing."""
+    from repro.serve.faultinject import VirtualClock
+    cfg, params = setup
+    vc = VirtualClock()
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, clock=vc)
+
+    def rec(uid, lat, done=True):
+        r = Request(uid=uid, prompt=[1], max_new_tokens=1)
+        r.submitted_at, r.finished_at = vc.now(), vc.now() + lat
+        (eng.done if done else eng.failed).append(r)
+        if not done:
+            r.fail_reason = "deadline"
+            eng._fail_log.append((uid, "deadline"))
+        return r
+
+    rec(1, 1.0)
+    rec(2, 3.0)
+    rec(3, 10.0, done=False)
+    st = eng.stats()
+    assert st["p95_latency_s"] == 3.0  # == max, not 2.9
+    assert st["p50_latency_s"] == 3.0  # "higher": observed sample >= median
+    assert st["failed_p95_latency_s"] == st["failed_p50_latency_s"] == 10.0
+    assert st["fail_reasons"] == {3: "deadline"}
+
+
+def test_fail_log_keeps_distinct_failures_for_one_uid(setup):
+    """A uid can legitimately fail twice across resubmissions; the uid-keyed
+    fail_reasons view keeps the last, fail_log keeps both (regression: the
+    old dict built from Request objects silently conflated them)."""
+    from repro.serve.faultinject import VirtualClock
+    cfg, params = setup
+    vc = VirtualClock()
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, clock=vc)
+    req = Request(uid=7, prompt=[5, 17], max_new_tokens=30, deadline_s=1.0)
+    eng.submit(req)
+    vc.advance(5.0)
+    eng.step()  # expires in the queue
+    assert req.fail_reason == "deadline"
+    req.deadline_s = None
+    eng.submit(req)  # uid 7 free again: resubmission is legal
+    eng.step()
+    assert eng.cancel(7)
+    st = eng.stats()
+    assert st["fail_reasons"] == {7: "cancelled"}  # last wins
+    assert st["fail_log"] == [(7, "deadline"), (7, "cancelled")]
+    assert st["failed"] == 2
+    assert eng.allocator.free_count == eng.allocator.capacity
+
+
+# ---------------------------------------------------------------------------
 # scheduler invariants under random arrival/eos/max-token streams
 # ---------------------------------------------------------------------------
 

@@ -19,7 +19,8 @@ from repro import kernels as KR
 from repro.configs import get_smoke
 from repro.models import model as MD
 from repro.serve.engine import DrainResult, Request, ServingEngine
-from repro.serve.faultinject import FaultEvent, FaultInjector, VirtualClock
+from repro.serve.faultinject import (FaultEvent, FaultInjector, VirtualClock,
+                                     shared_prefix_prompts)
 
 
 @pytest.fixture(scope="module")
@@ -467,6 +468,114 @@ def test_chaos_storm_exactly_once(setup, seed):
                                           r.max_new_tokens), r.uid
     for r in eng.failed:  # the only legal reason under this storm
         assert r.fail_reason == "nonfinite_logits", (r.uid, r.fail_reason)
+
+
+def test_cancel_preempted_request_then_resubmit(setup):
+    """Cancel lands while the victim sits requeued after preemption: the
+    partial state it left behind (replay prefix, preemption count) must not
+    corrupt a later resubmission of the same Request object."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=32, page_size=4,
+                        num_pages=3, prefill_chunk=4)
+    reqs = [Request(uid=i, prompt=[i + 1, 7, 9], max_new_tokens=5)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    victim, ticks = None, 0
+    while victim is None and ticks < 500:
+        eng.step()
+        eng.check()
+        ticks += 1
+        victim = next((r for r in eng.queue if r.preemptions > 0), None)
+    assert victim is not None, "scenario must preempt someone into the queue"
+    assert eng.cancel(victim.uid)
+    eng.check()
+    assert victim.status == "failed" and victim.fail_reason == "cancelled"
+    res = _run_checked(eng)
+    assert res.drained
+    for r in reqs:
+        if r is not victim:
+            assert r.output == _direct_greedy(cfg, params, r.prompt, 5), r.uid
+    # resubmitting the cancelled object restarts cleanly from scratch
+    eng.submit(victim)
+    res = _run_checked(eng)
+    assert res.drained and victim.status == "done"
+    assert victim.preemptions == 0  # lifecycle state was reset at submit
+    assert victim.output == _direct_greedy(cfg, params, victim.prompt, 5)
+    assert eng.allocator.free_count == eng.allocator.capacity
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_storm_cancel_races_preempt(setup, seed):
+    """Client cancellations land on arbitrary ticks — including the tick a
+    victim is being preempted or quarantined — under page pressure.
+    Exactly-once accounting holds and every failure carries a reason."""
+    cfg, params = setup
+    base = FaultInjector.seeded(seed, horizon=300, p_nan=0.02, p_hold=0.08,
+                                max_hold_pages=1, max_hold_ticks=4)
+    cancels = [FaultEvent(2 + 3 * i, "cancel", (seed + 2 * i) % 8)
+               for i in range(6)]
+    inj = FaultInjector(tuple(base.events) + tuple(cancels))
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=32, page_size=4,
+                        num_pages=4, prefill_chunk=4, injector=inj,
+                        retry_backoff_s=0.0)
+    reqs = [Request(uid=i,
+                    prompt=[(i * 3 + j) % 50 + 1 for j in range(i % 4 + 1)],
+                    max_new_tokens=i % 5 + 2)
+            for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    res = _run_checked(eng)
+    assert res.drained
+    eng.release_held()
+    _assert_accounted(eng, reqs)
+    assert inj.injected["cancel"] >= 1  # at least one cancel really landed
+    for r in eng.failed:
+        assert r.fail_reason in ("cancelled", "nonfinite_logits"), r.uid
+    for r in eng.done:
+        assert r.output == _direct_greedy(cfg, params, r.prompt,
+                                          r.max_new_tokens), r.uid
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_storm_shared_prefix_cache(setup, seed):
+    """The storm over a shared-system-prompt workload with prefix caching
+    ON: NaN quarantines invalidate poisoned published pages, preemptions
+    release shared refs without freeing live sharers' pages — outputs still
+    match the fault-free reference and ``check()`` reconciles allocator
+    refcounts against slots + cache after every tick."""
+    cfg, params = setup
+    inj = FaultInjector.seeded(seed + 100, horizon=400, p_nan=0.02,
+                               p_step_error=0.04, p_hold=0.06,
+                               max_hold_pages=1, max_hold_ticks=3,
+                               max_consecutive_failures=1)
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, page_size=4,
+                        num_pages=8, prefill_chunk=4, injector=inj,
+                        retry_backoff_s=0.0, prefix_cache=True)
+    prompts = shared_prefix_prompts(seed, 6, 8, 2, cfg.vocab_size)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    arrivals = iter(reqs)
+    pending = next(arrivals, None)
+    ticks = 0
+    while pending is not None or eng.queue or any(
+            r is not None for r in eng.slot_req):
+        if pending is not None:
+            eng.submit(pending)
+            pending = next(arrivals, None)
+        eng.step()
+        eng.check()  # refcount reconciliation under fire, every tick
+        ticks += 1
+        assert ticks < 4_000
+    eng.release_held()
+    eng.prefix_cache.evict(eng.allocator.capacity)  # drop retained entries
+    eng.check()
+    _assert_accounted(eng, reqs)
+    assert eng.stats()["prefix_hit_pages"] > 0  # later arrivals shared
+    for r in eng.failed:
+        assert r.fail_reason == "nonfinite_logits", (r.uid, r.fail_reason)
+    for r in eng.done:
+        assert r.output == _direct_greedy(cfg, params, r.prompt, 3), r.uid
 
 
 def test_chaos_storm_with_sigterm(setup):

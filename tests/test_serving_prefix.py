@@ -1,0 +1,380 @@
+"""Refcounted prefix caching: allocator refcounts, the content-addressed
+PrefixCache, engine-level sharing with copy-on-write, streaming callbacks,
+and the on-vs-off differential (identical outputs, exactly-once accounting,
+leak-free allocator) including a hypothesis shared-prefix fuzz."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import model as MD
+from repro.serve.cache import PageAllocator, PrefixCache
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.faultinject import (FaultEvent, FaultInjector,
+                                     shared_prefix_prompts)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("granite-3-2b", dtype=jnp.float32)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run_checked(eng, max_ticks=2_000):
+    ticks = 0
+    while eng.queue or any(r is not None for r in eng.slot_req):
+        eng.step()
+        eng.check()  # refcount reconciliation after EVERY tick
+        ticks += 1
+        assert ticks < max_ticks
+    return ticks
+
+
+def _drain_cache(eng):
+    """Evict everything evictable; with no live slots the allocator must
+    return to full capacity (no leaked references)."""
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.evict(eng.allocator.capacity)
+    eng.check()
+    assert eng.allocator.free_count == eng.allocator.capacity
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator refcounts
+# ---------------------------------------------------------------------------
+
+def test_allocator_acquire_release_refcounts():
+    al = PageAllocator(6)
+    (p,) = al.alloc(1)
+    assert al.refcount(p) == 1
+    al.acquire(p)
+    al.acquire(p)
+    assert al.refcount(p) == 3
+    al.release([p])
+    al.release([p])
+    assert al.refcount(p) == 1 and p in al.outstanding  # still held
+    al.check()
+    al.release([p])
+    assert al.refcount(p) == 0 and p not in al.outstanding
+    assert al.free_count == al.capacity
+    with pytest.raises(ValueError):
+        al.release([p])  # release past zero raises
+    with pytest.raises(ValueError):
+        al.acquire(p)  # acquire on a free page raises
+    al.check()
+
+
+def test_allocator_free_is_release_to_zero():
+    al = PageAllocator(4)
+    pages = al.alloc(2)
+    al.acquire(pages[0])
+    al.free(pages)  # historical name, same semantics
+    assert al.refcount(pages[0]) == 1  # survived: one ref remains
+    assert al.refcount(pages[1]) == 0
+    al.free([pages[0]])
+    assert al.free_count == al.capacity
+    al.check()
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache
+# ---------------------------------------------------------------------------
+
+def test_chain_keys_prefix_property():
+    al = PageAllocator(10)
+    pc = PrefixCache(al, page_size=4)
+    a = pc.page_keys(list(range(12)))
+    b = pc.page_keys(list(range(8)) + [99, 98, 97, 96])
+    assert a[:2] == b[:2]  # shared 8-token prefix -> same first two keys
+    assert a[2] != b[2]  # divergent third page
+    # chaining: same page content after a different prefix -> different key
+    c = pc.page_keys([7, 7, 7, 7] + list(range(4, 8)))
+    assert c[1] != a[1]
+    # ragged tail never keyed
+    assert len(pc.page_keys(list(range(7)))) == 1
+
+
+def test_lookup_longest_leading_run_and_refs():
+    al = PageAllocator(10)
+    pc = PrefixCache(al, page_size=2)
+    keys = pc.page_keys([1, 2, 3, 4, 5, 6])
+    pages = al.alloc(3)
+    for k, p in zip(keys, pages):
+        assert pc.insert(k, p)
+        assert al.refcount(p) == 2  # alloc ref + cache ref
+    assert not pc.insert(keys[0], pages[1])  # dedupe: first producer wins
+    # drop the middle entry: the run must stop there even though key 3 hits
+    pc.invalidate(keys[1])
+    got = pc.lookup(keys)
+    assert got == [pages[0]]
+    assert al.refcount(pages[0]) == 3  # lookup acquired one more
+    al.release([pages[0]])
+    al.release(pages)  # the producer's own refs
+    assert al.refcount(pages[0]) == 1 and al.refcount(pages[2]) == 1
+    pc.evict(10)
+    assert al.free_count == al.capacity
+
+
+def test_evict_skips_pages_with_live_sharers():
+    al = PageAllocator(10)
+    pc = PrefixCache(al, page_size=2)
+    keys = pc.page_keys([1, 2, 3, 4])
+    pages = al.alloc(2)
+    for k, p in zip(keys, pages):
+        pc.insert(k, p)
+    al.release([pages[0]])  # producer keeps only page[1]
+    assert pc.evict(2) == 1  # page[1] has a live sharer: not evictable
+    assert pc.pages == {pages[1]}
+    al.release([pages[1]])
+    assert pc.evict(2) == 1
+    assert al.free_count == al.capacity
+
+
+# ---------------------------------------------------------------------------
+# engine: sharing, COW, eviction-over-preemption
+# ---------------------------------------------------------------------------
+
+def _drain_pair(cfg, params, prompts, *, prefix_cache, max_new=4, slots=2,
+                num_pages=None, injector=None, **kw):
+    eng = ServingEngine(cfg, params, batch_slots=slots, max_len=64,
+                        page_size=4, prefill_chunk=4, num_pages=num_pages,
+                        prefix_cache=prefix_cache, injector=injector, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    _run_checked(eng)
+    return eng, reqs
+
+
+def test_differential_shared_prefix_on_vs_off(setup):
+    """The conformance law: prefix caching is a pure optimization — same
+    outputs, exactly-once accounting, fewer prefill ticks, clean pool."""
+    cfg, params = setup
+    prompts = shared_prefix_prompts(0, 5, 16, 3, cfg.vocab_size)
+    off, reqs_off = _drain_pair(cfg, params, prompts, prefix_cache=False)
+    on, reqs_on = _drain_pair(cfg, params, prompts, prefix_cache=True)
+    for a, b in zip(reqs_off, reqs_on):
+        assert a.output == b.output, a.uid
+    assert len(on.done) == len(off.done) == len(prompts)
+    assert on.prefill_ticks < off.prefill_ticks  # skipped prefix ticks
+    assert on.stats()["prefix_hit_pages"] > 0
+    assert all(r.prefix_hit_pages > 0 for r in reqs_on[2:])  # later waves hit
+    assert off.allocator.free_count == off.allocator.capacity
+    _drain_cache(on)
+
+
+def test_full_cover_prompt_copy_on_write(setup):
+    """Same page-aligned prompt twice: the second run maps every page, and
+    its single replayed write copy-on-writes the last shared page."""
+    cfg, params = setup
+    prompt = list(range(1, 17))  # 4 full pages at page_size=4
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, page_size=4,
+                        prefill_chunk=4, prefix_cache=True)
+    r1 = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    eng.submit(r1)
+    _run_checked(eng)
+    r2 = Request(uid=2, prompt=prompt, max_new_tokens=4)
+    eng.submit(r2)
+    _run_checked(eng)
+    assert r1.output == r2.output
+    assert r2.prefix_hit_pages == 4  # full cover
+    assert eng.cow_copies >= 1  # the replayed last token COWed its page
+    ref = ServingEngine(cfg, params, batch_slots=1, max_len=64, page_size=4,
+                        prefill_chunk=4)
+    rr = Request(uid=3, prompt=prompt, max_new_tokens=4)
+    ref.submit(rr)
+    ref.run_until_drained()
+    assert r2.output == rr.output
+    _drain_cache(eng)
+
+
+def test_cow_under_page_pressure(setup):
+    """COW needs a page when the pool is tight: the engine sheds cold cache
+    entries (never stalling forever) and still produces identical output."""
+    cfg, params = setup
+    prompt = list(range(1, 17))
+    # capacity 5 = one request's worst case exactly: after the first run
+    # leaves 4 cached pages, the second run's COW + growth must evict the
+    # one cache entry nobody shares to proceed
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, page_size=4,
+                        num_pages=6, prefill_chunk=4, prefix_cache=True)
+    r1 = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    eng.submit(r1)
+    _run_checked(eng)
+    r2 = Request(uid=2, prompt=prompt, max_new_tokens=4)
+    eng.submit(r2)
+    _run_checked(eng)
+    assert r1.output == r2.output
+    assert eng.cow_copies >= 1
+    assert eng.prefix_cache.evictions >= 1  # pressure was real
+    _drain_cache(eng)
+
+
+def test_preempt_while_sharing(setup):
+    """A slot holding shared prefix pages gets preempted: its refs release
+    without freeing pages other slots/the cache still use, and the resumed
+    request re-hits the cache and finishes with the uncached output."""
+    cfg, params = setup
+    prompts = shared_prefix_prompts(3, 4, 8, 2, cfg.vocab_size)
+    off, reqs_off = _drain_pair(cfg, params, prompts, prefix_cache=False,
+                                max_new=6, num_pages=6)
+    # capacity 5 = one request's worst case: the older slot's growth must
+    # preempt the younger one mid-share, and admissions must shed cold
+    # suffix pages from the cache
+    on, reqs_on = _drain_pair(cfg, params, prompts, prefix_cache=True,
+                              max_new=6, num_pages=6)
+    assert on.preemptions > 0, "scenario must actually preempt a sharer"
+    for a, b in zip(reqs_off, reqs_on):
+        assert a.output == b.output, a.uid
+    _drain_cache(on)
+
+
+def test_quarantine_invalidates_published_pages(setup):
+    """A NaN-quarantined slot's published pages may hold garbage K/V: they
+    leave the cache immediately, and the replayed request republishes clean
+    ones with the fault-free output."""
+    cfg, params = setup
+    prompt = list(range(1, 9))  # 2 full pages published during prefill
+    inj = FaultInjector([FaultEvent(1, "nan_logits", -1)])
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, page_size=4,
+                        prefill_chunk=4, prefix_cache=True, injector=inj)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng.submit(req)
+    _run_checked(eng)
+    assert eng.quarantines == 1 and not eng.failed
+    assert eng.prefix_cache.invalidations >= 1
+    ref = ServingEngine(cfg, params, batch_slots=1, max_len=64, page_size=4,
+                        prefill_chunk=4)
+    rr = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    ref.submit(rr)
+    ref.run_until_drained()
+    assert req.output == rr.output
+    _drain_cache(eng)
+
+
+def test_prefix_cache_rejects_unsupported_modes(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, batch_slots=1, max_len=64,
+                      cache_mode="dense", prefix_cache=True)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, batch_slots=1, max_len=64,
+                      prefill_mode="stepwise", prefix_cache=True)
+
+
+def test_reserve_admission_with_prefix_cache(setup):
+    """Reserve mode clamps hits below the prompt's last token (no COW
+    machinery in its no-op _grow) yet still shares and still conforms."""
+    cfg, params = setup
+    prompt = list(range(1, 17))
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, page_size=4,
+                        prefill_chunk=4, admission="reserve",
+                        prefix_cache=True)
+    r1 = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    eng.submit(r1)
+    _run_checked(eng)
+    r2 = Request(uid=2, prompt=prompt, max_new_tokens=4)
+    eng.submit(r2)
+    _run_checked(eng)
+    assert r1.output == r2.output
+    assert r2.prefix_hit_pages == 3  # clamped: last page never shared
+    assert eng.cow_copies == 0
+    _drain_cache(eng)
+
+
+# ---------------------------------------------------------------------------
+# streaming + per-request SLO stats
+# ---------------------------------------------------------------------------
+
+def test_on_token_streams_exactly_once_across_preemption(setup):
+    """Callbacks fire in emission order, once per token, even when the
+    request is preempted mid-decode and replays its prefix."""
+    cfg, params = setup
+    streamed: dict[int, list[int]] = {0: [], 1: [], 2: []}
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=32, page_size=4,
+                        num_pages=3, prefill_chunk=4)  # ~1.5 requests of pages
+    reqs = [Request(uid=i, prompt=[i + 1, 7, 9], max_new_tokens=5,
+                    on_token=streamed[i].append) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    _run_checked(eng)
+    assert eng.preemptions > 0  # the replay path was really exercised
+    for r in reqs:
+        assert streamed[r.uid] == r.output, r.uid
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.emit_tps is None or r.emit_tps > 0
+
+
+def test_on_token_callback_error_fails_request(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+
+    def boom(tok):
+        raise RuntimeError("consumer went away")
+
+    good: list[int] = []
+    r1 = Request(uid=1, prompt=[5, 17], max_new_tokens=6, on_token=boom)
+    r2 = Request(uid=2, prompt=[9, 9], max_new_tokens=3,
+                 on_token=good.append)
+    eng.submit(r1)
+    eng.submit(r2)
+    _run_checked(eng)
+    assert r1.status == "failed" and r1.fail_reason.startswith("callback_error")
+    assert r2.status == "done" and good == r2.output  # engine survived
+    assert eng.allocator.free_count == eng.allocator.capacity
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: shared-prefix streams, refcount checks per tick
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_fuzz_differential(setup):
+    """Random shared-prefix request streams with staggered arrivals: cached
+    vs uncached outputs identical, engine.check() (refcount reconciliation)
+    after every tick, allocator leak-free after the cache drains."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = setup
+
+    @hyp.settings(max_examples=6, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    @hyp.given(seed=st.integers(0, 2**16), n=st.integers(2, 4),
+               prefix_len=st.sampled_from((4, 8, 12)),
+               suffix_len=st.integers(0, 3), max_new=st.integers(1, 4),
+               pages=st.sampled_from((8, 12)))
+    def run(seed, n, prefix_len, suffix_len, max_new, pages):
+        prompts = [p if p else [1] for p in shared_prefix_prompts(
+            seed, n, prefix_len, suffix_len, cfg.vocab_size)]
+
+        def drive(prefix_cache):
+            eng = ServingEngine(cfg, params, batch_slots=2, max_len=32,
+                                page_size=4, prefill_chunk=4, num_pages=pages,
+                                prefix_cache=prefix_cache)
+            reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+                    for i, p in enumerate(prompts)]
+            arrivals = iter(reqs)
+            pending = next(arrivals, None)
+            ticks = 0
+            while pending is not None or eng.queue or any(
+                    r is not None for r in eng.slot_req):
+                if pending is not None:
+                    eng.submit(pending)
+                    pending = next(arrivals, None)
+                eng.step()
+                eng.check()
+                ticks += 1
+                assert ticks < 4_000
+            assert sorted(r.uid for r in eng.done) == list(range(len(reqs)))
+            return eng, reqs
+
+        off, reqs_off = drive(False)
+        on, reqs_on = drive(True)
+        for a, b in zip(reqs_off, reqs_on):
+            assert a.output == b.output, (a.uid, a.output, b.output)
+        assert off.allocator.free_count == off.allocator.capacity
+        _drain_cache(on)
+
+    run()
