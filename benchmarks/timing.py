@@ -250,6 +250,11 @@ def bench_kernel_fwd_bwd(report, quick: bool = False, out_path=None):
                f"fwd={fwd_us:.0f};bwd_kernel={tot_k - fwd_us:.0f};"
                f"bwd_ref={tot_r - fwd_us:.0f}")
 
+    # mesh row: the shard_map route vs the auto-off chain fallback on an
+    # 8-device world (subprocess — this process keeps its 1-device world)
+    entries += bench_kernel_mesh(report, quick=quick, retune=bool(retune),
+                                 table_path=table_path)
+
     # only an explicit out_path rewrites the tracked JSON (run.py `kernels`
     # section); quick mode and the general timing sweep just report lines
     if out_path and not quick:
@@ -259,6 +264,145 @@ def bench_kernel_fwd_bwd(report, quick: bool = False, out_path=None):
             json.dump(doc, f, indent=2)
             f.write("\n")
         report(f"kernels.json,0.0,written={os.path.relpath(out_path, _REPO_ROOT)}")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# mesh row: shard_map kernel route vs the auto-off chain fallback
+# ---------------------------------------------------------------------------
+
+_MESH_SHAPE = (2, 4)  # ("data", "model") — the 8-device CPU CI world
+
+# (name, rank, q_dims, t_dims, tokens, reps) — t1 % model == 0 so the
+# zero-collective column-parallel ("t1") strategy engages
+_MESH_BENCH_ROWS = [
+    ("ket_ffn_2k_to_6k", 8, (32, 64), (96, 64), 2048, 5),
+    ("ket_head_512_to_32k", 8, (16, 32), (160, 205), 1024, 3),
+]
+_MESH_QUICK_ROW = ("quick_mesh", 4, (8, 8), (16, 8), 256, 1)
+
+# Child process: forces an 8-device host platform (the parent keeps its
+# single-device world), builds the real data x model mesh, optionally
+# measures + persists the comms (alpha-beta) profiles, then times the
+# mesh-native kron_matmul route against the XLA factor chain — which is
+# exactly what the op fell back to when the kernels auto-disabled under a
+# mesh. Results come back as one MESHBENCH: json line on stdout.
+_MESH_BENCH_CHILD = r'''
+import json, math, statistics, sys, time
+
+cfg = json.loads(sys.argv[1])
+import jax
+import numpy as np
+
+from repro.core import ketops
+from repro.kernels import autotune, shard
+from repro.kernels.kron_matmul import ops as mops
+from repro.launch.mesh import make_mesh
+from repro.parallel import meshctx
+
+n_dev = int(math.prod(cfg["mesh"]))
+assert jax.device_count() >= n_dev, (jax.device_count(), n_dev)
+mesh = make_mesh(tuple(cfg["mesh"]), ("data", "model"))
+backend = jax.default_backend()
+
+if cfg["retune"]:
+    # measured interconnect profile for the ket_shard_rank decision —
+    # persisted (scoped) into the autotune table's comms family
+    for coll in ("psum", "all_gather"):
+        prof = autotune.measure_comms_profile(mesh, "model", coll)
+        key = autotune.comms_table_key(backend, mesh.shape, "model", coll)
+        autotune.update_comms_entry(key, prof, save_path=cfg["table_path"])
+
+
+def interleaved_us(fns, reps):
+    times = [[] for _ in fns]
+    for _ in range(reps):
+        for slot, fn in zip(times, fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            slot.append(time.perf_counter() - t0)
+    return [statistics.median(ts) * 1e6 for ts in times]
+
+
+rows = []
+for name, rank, q, t, tokens, reps in cfg["rows"]:
+    q, t = tuple(q), tuple(t)
+    d_in, d_out = int(math.prod(q)), int(math.prod(t))
+    key = jax.random.PRNGKey(0)
+    s = (1.0 / (math.sqrt(rank) * math.sqrt(d_in))) ** 0.5
+    factors = [jax.random.normal(jax.random.fold_in(key, j), (rank, qj, tj)) * s
+               for j, (qj, tj) in enumerate(zip(q, t))]
+    x = jax.random.normal(jax.random.fold_in(key, 9), (tokens, d_in))
+
+    # the pre-PR behavior under a mesh: kernels auto-off, XLA factor chain
+    chain_c = jax.jit(lambda fs, xx: ketops.apply_matrix_factors(
+        fs, xx, d_out, use_kernel=False)).lower(factors, x).compile()
+
+    # mesh-native route: trace under the ambient mesh (shard_map engages),
+    # AOT-compile so later calls can't silently retrace without the mesh
+    with meshctx.use_mesh(mesh):
+        strategy = shard._matmul_strategy(mesh, rank, t[0], tokens, q, t,
+                                          "float32", None)
+        sh_c = jax.jit(lambda fs, xx: mops.kron_matmul(
+            fs, xx, d_out, None, None)).lower(factors, x).compile()
+
+    np.testing.assert_allclose(np.asarray(sh_c(factors, x)),
+                               np.asarray(chain_c(factors, x)),
+                               rtol=2e-4, atol=2e-4)
+    sh_us, chain_us = interleaved_us(
+        [lambda: sh_c(factors, x), lambda: chain_c(factors, x)], reps)
+    rows.append({
+        "op": "kron_matmul_mesh", "scale": name, "backend": backend,
+        "mesh": {"data": int(cfg["mesh"][0]), "model": int(cfg["mesh"][1])},
+        "strategy": strategy,
+        "shape": {"d_in": d_in, "d_out": d_out, "order": len(q), "rank": rank,
+                  "q_dims": list(q), "t_dims": list(t), "tokens": tokens},
+        "sharded_us": round(sh_us, 1),
+        "chain_fallback_us": round(chain_us, 1),
+        "speedup_vs_auto_off": round(chain_us / sh_us, 2),
+    })
+
+print("MESHBENCH:" + json.dumps({"rows": rows}))
+'''
+
+
+def bench_kernel_mesh(report, quick: bool = False, retune: bool = False,
+                      table_path=None):
+    """Time the shard_map kernel route against the auto-off chain fallback
+    on a real 2x4 ("data","model") mesh (8 forced host devices, subprocess
+    so this process keeps its world). With ``retune`` also measures the
+    psum/all_gather alpha-beta profiles and persists the ``comms`` entries."""
+    import subprocess
+    import sys
+
+    rows = [_MESH_QUICK_ROW] if quick else _MESH_BENCH_ROWS
+    payload = json.dumps({
+        "mesh": list(_MESH_SHAPE),
+        "rows": [[r[0], r[1], list(r[2]), list(r[3]), r[4], r[5]]
+                 for r in rows],
+        "retune": bool(retune), "table_path": table_path,
+    })
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_BENCH_CHILD, payload],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            "mesh bench child failed:\n" + proc.stdout[-2000:]
+            + "\n" + proc.stderr[-2000:])
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("MESHBENCH:")][-1]
+    entries = json.loads(line[len("MESHBENCH:"):])["rows"]
+    for e in entries:
+        report(f"kernels.mesh.{e['scale']}.kron_matmul,{e['sharded_us']:.1f},"
+               f"chain_fallback={e['chain_fallback_us']:.0f};"
+               f"speedup={e['speedup_vs_auto_off']};"
+               f"strategy={e['strategy']};mesh=data2.model4")
     return entries
 
 

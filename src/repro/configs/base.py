@@ -104,11 +104,20 @@ class ModelConfig:
     # token-block size of the kron_matmul grid; None = autotuned
     linear_block_b: Optional[int] = None
     # shard the ket factor stacks' rank axis over "model" (rank-parallel
-    # operator; factors are otherwise replicated like embedding factors).
-    # Rank sharding keeps the chain apply: the kron_matmul kernel is an
-    # opaque custom call under GSPMD, so kernels_enabled auto-resolves off
-    # under an ambient mesh (see repro/kernels.__init__).
-    ket_shard_rank: bool = False
+    # operator with one psum at the rank fold; factors are otherwise
+    # replicated like embedding factors). Tri-state: None = auto — resolved
+    # at build time by train/step.pin_kernel_blocks from the measured
+    # compute-vs-collective rule (kernels/autotune.choose_shard_rank, fed by
+    # the "comms" interconnect profile); an unpinned None behaves like False
+    # (replicate). The kron_matmul kernel honors the decision under an
+    # ambient mesh via its shard_map route (kernels/shard.py).
+    ket_shard_rank: Optional[bool] = None
+    # mesh signature (sorted (axis, size) pairs) stamped by pin_kernel_blocks
+    # at step/engine build time. Carrying it in the frozen config makes the
+    # mesh part of every jit static key, so a function traced without a mesh
+    # can never serve a stale single-device kernel route under one (and vice
+    # versa). None = built with no multi-device mesh ambient.
+    kernel_mesh: Optional[tuple] = None
 
     # low-bit ket factor storage (serving): "none" | "int8" | "fp8".
     # Applies to the word2ket(XS) embedding, the kron head, and ket linears;

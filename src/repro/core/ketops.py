@@ -82,7 +82,9 @@ class KronSpec:
              the dequant per block). Serving-only: payloads are not
              differentiable.
     use_kernel: route ``apply_vector`` through the fused Pallas kernel
-             (None = auto: TPU without an ambient multi-device mesh).
+             (None = auto: TPU). Under an ambient multi-device mesh the
+             kernel runs per shard inside ``meshctx.shard_map``
+             (kernels/shard.py) instead of auto-disabling.
     block_b: token-block size for the kernel grid; None = autotuned.
     vocab_tile: t1-digit tile for streamed column-tiled consumers (the CE
              loss and tiled ``apply_matrix``); None = autotuned.
@@ -280,7 +282,9 @@ def apply_vector(spec: KronSpec, params: dict, ids: jax.Array) -> jax.Array:
     if spec.storage == "leaves":
         vs = [_gather_rows(leaf, ids) for leaf in params["leaves"]]  # (..., r, q_j)
         v = K.kron_vectors_tree(vs, use_layernorm=spec.use_layernorm)
-        return jnp.sum(v, axis=-2)[..., : spec.in_dim]
+        # every route returns spec.dtype (the kernel path casts below) —
+        # bf16 specs must not disagree across fallbacks
+        return jnp.sum(v, axis=-2)[..., : spec.in_dim].astype(spec.dtype)
 
     quantized = Q.is_quantized(params["factors"][0])
     from repro.kernels import kernels_enabled
@@ -303,7 +307,7 @@ def apply_vector(spec: KronSpec, params: dict, ids: jax.Array) -> jax.Array:
     vs = [_gather_cols(f, d) for f, d in zip(params["factors"], digits)]
     vs = [jnp.moveaxis(v, (0, 1), (-2, -1)) for v in vs]
     v = K.kron_vectors_tree(vs, use_layernorm=spec.use_layernorm)  # (..., r, prod q)
-    return jnp.sum(v, axis=-2)[..., : spec.in_dim]
+    return jnp.sum(v, axis=-2)[..., : spec.in_dim].astype(spec.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +322,7 @@ def apply_matrix_factors(
     tile: Optional[int] = None,
     use_kernel: Optional[bool] = None,
     block_b: Optional[int] = None,
+    shard_rank: Optional[bool] = None,
 ) -> jax.Array:
     """``x (..., d_in) @ (Σ_k ⊗_j F_jk)`` -> ``(..., out_dim)``, spec-free.
 
@@ -356,9 +361,10 @@ def apply_matrix_factors(
         if n_quant:
             z = kron_matmul_quant([f["q"] for f in factors],
                                   [f["scale"] for f in factors],
-                                  x2, out_dim, tile, block_b)
+                                  x2, out_dim, tile, block_b, shard_rank)
         else:
-            z = kron_matmul(list(factors), x2, out_dim, tile, block_b)
+            z = kron_matmul(list(factors), x2, out_dim, tile, block_b,
+                            shard_rank)
         return z.reshape(*lead, out_dim)
 
     # chain fallback: quantized factors become (payload, scale) pairs that

@@ -125,16 +125,22 @@ def as_f32(x) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _map_ket_tensors(tree, fn):
+    # Container types are preserved exactly (list stays list, tuple stays
+    # tuple): a quantize/dequantize roundtrip must leave the pytree
+    # *structure* identical so tree_map pairing against sharding specs or a
+    # fresh-init tree keeps working.
     if isinstance(tree, dict):
         if is_quantized(tree):
             return fn(tree)
-        return {
-            k: ([fn(t) for t in v] if k in _KET_KEYS and isinstance(v, (list, tuple))
-                else _map_ket_tensors(v, fn))
-            for k, v in tree.items()
-        }
+        def _map_val(k, v):
+            if k in _KET_KEYS and isinstance(v, (list, tuple)):
+                mapped = [fn(t) for t in v]
+                return tuple(mapped) if isinstance(v, tuple) else mapped
+            return _map_ket_tensors(v, fn)
+        return {k: _map_val(k, v) for k, v in tree.items()}
     if isinstance(tree, (list, tuple)):
-        return [_map_ket_tensors(v, fn) for v in tree]
+        mapped = [_map_ket_tensors(v, fn) for v in tree]
+        return tuple(mapped) if isinstance(tree, tuple) else mapped
     return tree
 
 

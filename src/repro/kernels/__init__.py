@@ -50,29 +50,48 @@ def kernels_forced_off() -> bool:
     return _force_off == "off"
 
 
-def kernels_enabled(flag: Optional[bool] = None) -> bool:
-    """Resolve a config's ``use_kernel`` tri-state.
+def kernel_route(flag: Optional[bool] = None) -> str:
+    """Resolve a config's ``use_kernel`` tri-state to a route.
+
+    Returns one of:
+
+    * ``"off"``     — reference (chain) paths everywhere;
+    * ``"kernel"``  — the bare fused kernel (single-device semantics);
+    * ``"sharded"`` — the fused kernel wrapped in ``meshctx.shard_map``
+      (kernels/shard.py): factors and quant scales replicated per shard,
+      output batch-/t1-/rank-sharded per op. Chosen whenever a multi-device
+      mesh is ambient, because inside a GSPMD program a bare ``pallas_call``
+      is an opaque custom call with no partitioning rule — routing sharded
+      operands through it would silently all-gather them.
 
     Forced-off mode (``REPRO_KERNELS=off`` or :func:`set_kernels_forced_off`,
     the fault-degradation switch) wins over everything, including an
-    explicit ``use_kernel=True``.
+    explicit ``use_kernel=True``. ``None`` = auto: kernels engage on TPU only
+    (off-TPU they run in interpret mode — correct but not the default for the
+    pure-jnp reference paths CPU unit tests exercise); an explicit ``True``
+    engages them on any backend.
 
-    None = auto: the kernels engage on TPU **only when no multi-device mesh
-    is ambient**. Inside a GSPMD program a bare ``pallas_call`` is an opaque
-    custom call with no partitioning rule — auto-routing the sharded CE/
-    lookup through it would silently all-gather the operands and undo the
-    sequence-parallel token sharding (see core/logits.py). Sharded runs must
-    opt in explicitly (``use_kernel=True``) once they wrap the op in
-    shard_map. Off-TPU the Pallas kernels run in interpret mode — correct
-    but not the default for the pure-jnp reference paths that CPU unit
-    tests exercise.
+    The resolution reads the *ambient* mesh at trace time, so it is static
+    under jit — but it is NOT part of the jit cache key by itself. Callers
+    whose traced functions outlive a mesh change must carry the mesh in a
+    static argument: ``train/step.pin_kernel_blocks`` stamps the mesh
+    signature into the frozen ModelConfig for exactly this reason.
     """
     if _force_off == "off":
-        return False
-    if flag is not None:
-        return flag
-    if jax.default_backend() != "tpu":
-        return False
+        return "off"
+    if flag is None and jax.default_backend() != "tpu":
+        return "off"
+    if flag is not None and not flag:
+        return "off"
     from repro.parallel import meshctx
     mesh = meshctx.get_mesh()
-    return mesh is None or mesh.size <= 1
+    if mesh is not None and mesh.size > 1:
+        from repro.kernels import shard
+        if not shard.in_sharded_call():
+            return "sharded"
+    return "kernel"
+
+
+def kernels_enabled(flag: Optional[bool] = None) -> bool:
+    """Boolean view of :func:`kernel_route`: is any fused route on?"""
+    return kernel_route(flag) != "off"

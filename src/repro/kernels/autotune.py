@@ -45,6 +45,12 @@ __all__ = [
     "get_kv_splits",
     "heuristic_kv_splits",
     "update_paged_entry",
+    "comms_table_key",
+    "measure_comms_profile",
+    "update_comms_entry",
+    "get_comms_profile",
+    "predict_collective_us",
+    "choose_shard_rank",
 ]
 
 _TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
@@ -87,37 +93,60 @@ def table_key(op: str, backend: str, rank: int,
     return key
 
 
-_table_cache: Optional[dict] = None
+# Cache keyed on the *resolved* table path so flipping $REPRO_AUTOTUNE_TABLE
+# mid-process (tests, benchmark harnesses) re-reads the right file instead of
+# serving whichever table happened to load first.
+_table_cache: dict[str, dict] = {}
+
+
+def _table_path() -> str:
+    return os.path.abspath(os.environ.get(_TABLE_ENV, _TABLE_FILE))
+
+
+def _read_table_file(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
 
 
 def load_table(refresh: bool = False) -> dict:
-    global _table_cache
-    if _table_cache is not None and not refresh:
-        return _table_cache
-    path = os.environ.get(_TABLE_ENV, _TABLE_FILE)
-    table: dict = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                table = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            table = {}
-    _table_cache = table
-    return table
+    path = _table_path()
+    if refresh or path not in _table_cache:
+        _table_cache[path] = _read_table_file(path)
+    return _table_cache[path]
+
+
+def _persist_entry(key: str, entry: dict, save_path: str) -> None:
+    """Write ONE entry into ``save_path``, scoped to that file's own contents.
+
+    The in-memory table may be a merge of a user's ``$REPRO_AUTOTUNE_TABLE``
+    override on top of heuristics; dumping it wholesale would leak override
+    entries into the checked-in table. Instead the target file is re-read and
+    only ``key`` is updated in it.
+    """
+    save_path = os.path.abspath(save_path)
+    disk = _read_table_file(save_path)
+    disk[key] = entry
+    with open(save_path, "w") as f:
+        json.dump(disk, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if save_path in _table_cache:
+        _table_cache[save_path] = disk
 
 
 def update_table(key: str, cfg: BlockConfig, *, us: Optional[float] = None,
                  save_path: Optional[str] = None) -> None:
     """Record a measured winner in the in-memory table (and optionally on disk)."""
-    table = load_table()
     entry = {"block_b": cfg.block_b, "t1_block": cfg.t1_block}
     if us is not None:
         entry["us"] = round(us, 1)
-    table[key] = entry
+    load_table()[key] = entry
     if save_path:
-        with open(save_path, "w") as f:
-            json.dump(table, f, indent=2, sort_keys=True)
-            f.write("\n")
+        _persist_entry(key, entry, save_path)
 
 
 def _pow2_floor(n: int) -> int:
@@ -270,15 +299,203 @@ def get_kv_splits(page_size: int, group: int, head_dim: int, n_pages: int, *,
 def update_paged_entry(key: str, kv_splits: int, *, us: Optional[float] = None,
                        save_path: Optional[str] = None) -> None:
     """Record a measured paged_attn winner (and optionally persist)."""
-    table = load_table()
     entry: dict = {"kv_splits": int(kv_splits)}
     if us is not None:
         entry["us"] = round(us, 1)
-    table[key] = entry
+    load_table()[key] = entry
     if save_path:
-        with open(save_path, "w") as f:
-            json.dump(table, f, indent=2, sort_keys=True)
-            f.write("\n")
+        _persist_entry(key, entry, save_path)
+
+
+# ---------------------------------------------------------------------------
+# "comms" family: measured alpha-beta interconnect profile per mesh shape
+# ---------------------------------------------------------------------------
+#
+# The sharded kron routes (kernels/shard.py) trade replicated compute against
+# a collective at the rank fold. That trade depends on the interconnect, not
+# on the op: a psum over 4 hosts on ethernet costs ~1000x the same psum over
+# an ICI ring. We fit the classic alpha-beta model
+#
+#     t_us(nbytes) = alpha_us + beta_us_per_mb * nbytes / 1e6
+#
+# from timed collectives at a ladder of payload sizes, keyed per
+# (backend, mesh shape, axis, collective):
+#
+#     comms|{backend}|{mesh}|{axis}|{collective}
+#
+# e.g. ``comms|cpu|data2.model4|model|psum``. Entries persist in the same
+# autotune_table.json as the block families and are written by
+# ``benchmarks/timing.py`` under REPRO_RETUNE=1.
+
+# payload ladder for the fit (bytes) — spans the latency- and the
+# bandwidth-dominated regimes without taking seconds to run on CPU meshes
+_COMMS_LADDER = (1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22)
+
+# fallback (alpha_us, beta_us_per_mb) when no measured profile exists.
+# TPU ICI ~45 GB/s ring, ~3 us launch; CPU "mesh" is shared memory between
+# XLA host devices (cheap bandwidth, noticeable dispatch latency); GPU NVLink
+# in between. Coarse on purpose — measured entries override.
+_DEFAULT_COMMS = {"tpu": (3.0, 25.0), "gpu": (10.0, 50.0), "cpu": (80.0, 300.0)}
+
+# coarse chain-GEMM throughput (flops per microsecond) for the compute-side
+# estimate when no measured kernel time is in the table
+_EST_FLOPS_PER_US = {"tpu": 2e8, "gpu": 5e7, "cpu": 5e3}
+
+
+def mesh_shape_key(mesh_shape) -> str:
+    """``(("data", 2), ("model", 4))`` (or a mesh.shape mapping) -> ``data2.model4``."""
+    if hasattr(mesh_shape, "items"):
+        mesh_shape = tuple(mesh_shape.items())
+    return ".".join(f"{name}{size}" for name, size in mesh_shape)
+
+
+def comms_table_key(backend: str, mesh_shape, axis: str,
+                    collective: str) -> str:
+    return f"comms|{backend}|{mesh_shape_key(mesh_shape)}|{axis}|{collective}"
+
+
+def _fit_alpha_beta(sizes_bytes: Sequence[int],
+                    times_us: Sequence[float]) -> tuple[float, float]:
+    """Least-squares fit t = alpha + beta * mb; clamped to non-negative."""
+    xs = [s / 1e6 for s in sizes_bytes]
+    n = len(xs)
+    mx = sum(xs) / n
+    my = sum(times_us) / n
+    var = sum((x - mx) ** 2 for x in xs)
+    beta = sum((x - mx) * (y - my) for x, y in zip(xs, times_us)) / max(var, 1e-12)
+    beta = max(0.0, beta)
+    alpha = max(0.0, my - beta * mx)
+    return alpha, beta
+
+
+def measure_comms_profile(mesh, axis: str, collective: str = "psum", *,
+                          sizes: Sequence[int] = _COMMS_LADDER,
+                          n: int = 5, warmup: int = 2) -> dict:
+    """Time ``collective`` over ``axis`` of ``mesh`` at a ladder of payload
+    sizes and return the fitted table entry
+    ``{"alpha_us", "beta_us_per_mb", "sizes", "us"}``."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import meshctx
+
+    if collective not in ("psum", "all_gather"):
+        raise ValueError(f"unknown collective {collective!r}")
+
+    times: list[float] = []
+    for nbytes in sizes:
+        n_elems = max(1, nbytes // 4)
+
+        if collective == "psum":
+            def inner(x):
+                return jax.lax.psum(x, axis)
+            spec_in, spec_out = P(axis), P(axis)
+            # per-shard payload = nbytes -> shape (tp, n_elems) sharded on axis
+            arg = jnp.ones((mesh.shape[axis], n_elems), jnp.float32)
+        else:
+            def inner(x):
+                return jax.lax.all_gather(x, axis)
+            spec_in, spec_out = P(axis), P(axis)
+            arg = jnp.ones((mesh.shape[axis], n_elems), jnp.float32)
+
+        fn = jax.jit(meshctx.shard_map(
+            inner, mesh=mesh, in_specs=spec_in, out_specs=spec_out,
+            check_vma=False))
+        for _ in range(warmup):
+            jax.block_until_ready(fn(arg))
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(arg)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / n * 1e6)
+
+    alpha, beta = _fit_alpha_beta(sizes, times)
+    return {
+        "alpha_us": round(alpha, 1),
+        "beta_us_per_mb": round(beta, 2),
+        "sizes": list(sizes),
+        "us": [round(t, 1) for t in times],
+    }
+
+
+def update_comms_entry(key: str, profile: dict, *,
+                       save_path: Optional[str] = None) -> None:
+    """Record a measured comms profile (and optionally persist, scoped)."""
+    load_table()[key] = dict(profile)
+    if save_path:
+        _persist_entry(key, dict(profile), save_path)
+
+
+def get_comms_profile(axis: str, collective: str = "psum", *,
+                      mesh=None, backend: Optional[str] = None
+                      ) -> tuple[float, float]:
+    """Resolve ``(alpha_us, beta_us_per_mb)`` for a collective over ``axis``:
+    measured ``comms`` entry for the ambient (or given) mesh shape, else the
+    per-backend default (with a once-per-key miss warning)."""
+    backend = backend or jax.default_backend()
+    if mesh is None:
+        from repro.parallel import meshctx
+        mesh = meshctx.get_mesh()
+    if mesh is not None:
+        key = comms_table_key(backend, mesh.shape, axis, collective)
+        entry = load_table().get(key)
+        if entry is not None:
+            return float(entry["alpha_us"]), float(entry["beta_us_per_mb"])
+        if key not in _warned_misses:
+            _warned_misses.add(key)
+            logger.warning(
+                "autotune table miss for %s — falling back to the %s "
+                "interconnect default (measure with: PYTHONPATH=src "
+                "REPRO_RETUNE=1 python benchmarks/run.py kernels)",
+                key, backend)
+    return _DEFAULT_COMMS.get(backend, _DEFAULT_COMMS["cpu"])
+
+
+def predict_collective_us(nbytes: int, axis: str, collective: str = "psum", *,
+                          mesh=None, backend: Optional[str] = None) -> float:
+    """Alpha-beta cost estimate (µs) of one collective of ``nbytes``."""
+    alpha, beta = get_comms_profile(axis, collective, mesh=mesh,
+                                    backend=backend)
+    return alpha + beta * nbytes / 1e6
+
+
+def choose_shard_rank(*, rank: int, q_dims: Sequence[int],
+                      t_dims: Sequence[int], batch: int, tp: int,
+                      mesh=None, backend: Optional[str] = None,
+                      dtype: str = "float32") -> bool:
+    """Measured compute-vs-collective decision for rank-sharding kron_matmul.
+
+    Rank-sharding splits the factor stacks over the "model" axis and pays one
+    fp32 psum of the (batch, prod t) output at the rank fold; the alternative
+    keeps factors whole (t1-sharded when divisible, else replicated compute).
+    Shard the rank iff the compute saved — the measured (or estimated) kernel
+    time scaled by ``1 - 1/tp`` — exceeds the predicted psum cost. t1-sharding
+    is always preferred when available: it saves the same compute at zero
+    collective cost.
+    """
+    if tp <= 1 or rank % tp != 0:
+        return False
+    if t_dims[0] % tp == 0:
+        return False  # the free (t1) sharding wins
+    backend = backend or jax.default_backend()
+    dtype = dtype_key(dtype)
+    entry = load_table().get(
+        table_key("kron_matmul", backend, rank, q_dims, t_dims, dtype))
+    if entry is None and dtype != "float32":
+        entry = load_table().get(
+            table_key("kron_matmul", backend, rank, q_dims, t_dims))
+    kernel_us = entry.get("us") if entry else None
+    out_cols = int(math.prod(t_dims))
+    if kernel_us is None:
+        # no measured time for this shape: coarse flops model of the
+        # rank-folded chain's dominant (last) GEMM
+        flops = 2.0 * batch * rank * q_dims[-1] * out_cols
+        kernel_us = flops / _EST_FLOPS_PER_US.get(backend,
+                                                  _EST_FLOPS_PER_US["cpu"])
+    saved_us = kernel_us * (1.0 - 1.0 / tp)
+    psum_us = predict_collective_us(batch * out_cols * 4, "model",
+                                    "psum", mesh=mesh, backend=backend)
+    return saved_us > psum_us
 
 
 def measure(

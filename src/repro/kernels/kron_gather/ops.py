@@ -76,7 +76,7 @@ def _resolve_block_b(factors: Sequence[jax.Array], block_b: Optional[int]) -> in
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def kron_gather(
+def _kron_gather_local(
     factors: Sequence[jax.Array],
     ids: jax.Array,
     embed_dim: int,
@@ -93,6 +93,29 @@ def kron_gather(
     return out[:, :embed_dim]
 
 
+def kron_gather(
+    factors: Sequence[jax.Array],
+    ids: jax.Array,
+    embed_dim: int,
+    use_layernorm: bool = True,
+    block_b: Optional[int] = None,
+) -> jax.Array:
+    """Fused lookup with a mesh-aware route.
+
+    Under an ambient multi-device mesh the kernel runs per shard inside
+    ``meshctx.shard_map`` — tokens sharded over every mesh axis, factors
+    replicated (kernels/shard.py; bit-identical, zero collectives).
+    Single-device (or already inside a shard_map body) it is the bare
+    custom-VJP kernel.
+    """
+    from repro.kernels import shard
+    mesh = shard.mesh_route()
+    if mesh is not None:
+        return shard.sharded_kron_gather(
+            mesh, list(factors), ids, embed_dim, use_layernorm, block_b)
+    return _kron_gather_local(factors, ids, embed_dim, use_layernorm, block_b)
+
+
 def kron_gather_quant(
     factors_q: Sequence[jax.Array],
     scales: Sequence[jax.Array],
@@ -102,6 +125,9 @@ def kron_gather_quant(
     block_b: Optional[int] = None,
 ) -> jax.Array:
     """Dequant-fused lookup over quantized factor stacks (serving path).
+
+    Mesh-aware like :func:`kron_gather` — under an ambient mesh the
+    dequant-fused kernel runs per shard with payloads AND scales replicated.
 
     ``factors_q`` are int8/fp8 payloads ``(rank, q_j, t_j)`` with per-rank
     ``scales`` ``(rank, 1, 1)``; the dequant happens inside the kernel per
@@ -113,6 +139,12 @@ def kron_gather_quant(
     dtype's own key when one is measured, else the fp32 winner for the same
     shape, else the VMEM heuristic.
     """
+    from repro.kernels import shard
+    mesh = shard.mesh_route()
+    if mesh is not None:
+        return shard.sharded_kron_gather(
+            mesh, list(factors_q), ids, embed_dim, use_layernorm, block_b,
+            scales=list(scales))
     out = kron_gather_pallas(
         list(factors_q),
         ids,
@@ -162,4 +194,4 @@ def _bwd(embed_dim, use_layernorm, block_b, res, g):
     return (dfactors, None)
 
 
-kron_gather.defvjp(_fwd, _bwd)
+_kron_gather_local.defvjp(_fwd, _bwd)

@@ -68,7 +68,7 @@ def _resolve_blocks(
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def fused_kron_ce(
+def _fused_kron_ce_local(
     factors: Sequence[jax.Array],
     h: jax.Array,
     labels: jax.Array,
@@ -81,6 +81,32 @@ def fused_kron_ce(
         list(factors), h, labels, vocab_size,
         t1_block=t1b, block_b=bb, interpret=not _on_tpu(),
     )
+
+
+def fused_kron_ce(
+    factors: Sequence[jax.Array],
+    h: jax.Array,
+    labels: jax.Array,
+    vocab_size: int,
+    t1_block: Optional[int] = None,
+    block_b: Optional[int] = None,
+) -> jax.Array:
+    """Fused CE with a mesh-aware route.
+
+    Under an ambient multi-device mesh the kernel runs per shard inside
+    ``meshctx.shard_map`` — tokens sharded over every mesh axis
+    (sequence-parallel CE), factors replicated (kernels/shard.py;
+    bit-identical per token, zero collectives — the per-token online
+    softmax never crosses shards). Single-device (or already inside a
+    shard_map body) it is the bare custom-VJP kernel.
+    """
+    from repro.kernels import shard
+    mesh = shard.mesh_route()
+    if mesh is not None:
+        return shard.sharded_kron_ce(
+            mesh, list(factors), h, labels, vocab_size, t1_block, block_b)
+    return _fused_kron_ce_local(factors, h, labels, vocab_size,
+                                t1_block, block_b)
 
 
 def _fwd(factors, h, labels, vocab_size, t1_block, block_b):
@@ -112,4 +138,4 @@ def _bwd(vocab_size, t1_block, block_b, res, g):
     return (dfactors, dh.astype(h.dtype), None)
 
 
-fused_kron_ce.defvjp(_fwd, _bwd)
+_fused_kron_ce_local.defvjp(_fwd, _bwd)

@@ -86,7 +86,7 @@ def _resolve_blocks(
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def kron_matmul(
+def _kron_matmul_local(
     factors: Sequence[jax.Array],
     x: jax.Array,  # (B, d_in)
     out_dim: int,
@@ -102,6 +102,33 @@ def kron_matmul(
     return out[:, :out_dim].astype(x.dtype)
 
 
+def kron_matmul(
+    factors: Sequence[jax.Array],
+    x: jax.Array,  # (B, d_in)
+    out_dim: int,
+    t1_block: Optional[int] = None,
+    block_b: Optional[int] = None,
+    shard_rank: Optional[bool] = None,
+) -> jax.Array:
+    """Fused ket-linear matmul with a mesh-aware route.
+
+    Under an ambient multi-device mesh the kernel runs per shard inside
+    ``meshctx.shard_map`` (kernels/shard.py): factors replicated or rank-/
+    t1-sharded per the strategy rule there, with a psum at the rank fold
+    for the rank strategy. ``shard_rank`` pins the rank-vs-t1 choice
+    (None = the measured compute-vs-collective decision,
+    ``autotune.choose_shard_rank``). Single-device (or already inside a
+    shard_map body) it is the bare custom-VJP kernel.
+    """
+    from repro.kernels import shard
+    mesh = shard.mesh_route()
+    if mesh is not None:
+        return shard.sharded_kron_matmul(
+            mesh, list(factors), x, out_dim, t1_block, block_b,
+            shard_rank=shard_rank)
+    return _kron_matmul_local(factors, x, out_dim, t1_block, block_b)
+
+
 def kron_matmul_quant(
     factors_q: Sequence[jax.Array],
     scales: Sequence[jax.Array],
@@ -109,13 +136,21 @@ def kron_matmul_quant(
     out_dim: int,
     t1_block: Optional[int] = None,
     block_b: Optional[int] = None,
+    shard_rank: Optional[bool] = None,
 ) -> jax.Array:
     """Dequant-fused matmul over quantized factor stacks (serving path).
 
     ``factors_q`` are int8/fp8 payloads ``(rank, q_j, t_j)`` with per-rank
     ``scales`` ``(rank, 1, 1)``. Forward-only — quantized payloads are a
-    wire format, not trainable parameters (no VJP is defined).
+    wire format, not trainable parameters (no VJP is defined). Mesh-aware
+    like :func:`kron_matmul`; scales shard exactly like their payloads.
     """
+    from repro.kernels import shard
+    mesh = shard.mesh_route()
+    if mesh is not None:
+        return shard.sharded_kron_matmul(
+            mesh, list(factors_q), x, out_dim, t1_block, block_b,
+            scales=list(scales), shard_rank=shard_rank)
     t1b, bb = _resolve_blocks(factors_q, t1_block, block_b)
     if _on_tpu():
         out = kron_matmul_pallas(
@@ -128,7 +163,7 @@ def kron_matmul_quant(
 
 
 def _fwd(factors, x, out_dim, t1_block, block_b):
-    return kron_matmul(factors, x, out_dim, t1_block, block_b), \
+    return _kron_matmul_local(factors, x, out_dim, t1_block, block_b), \
         (tuple(factors), x)
 
 
@@ -158,4 +193,4 @@ def _bwd(out_dim, t1_block, block_b, res, g):
     return (dfactors, dx[:, : x.shape[-1]].astype(x.dtype))
 
 
-kron_matmul.defvjp(_fwd, _bwd)
+_kron_matmul_local.defvjp(_fwd, _bwd)

@@ -1,0 +1,307 @@
+"""Mesh-native routes for the fused kron ops (shard_map wrappers).
+
+Under an ambient multi-device mesh a bare ``pallas_call`` is an opaque
+custom call with no GSPMD partitioning rule, so the kron kernels used to
+auto-disable and every sharded run fell back to the untiled chain. These
+wrappers keep the fused kernels by making the sharding explicit: each op's
+public entry point (kron_gather / kron_matmul / fused_kron_ce in the ops.py
+modules) dispatches here when :func:`mesh_route` finds a live mesh, and the
+kernel runs per shard inside ``meshctx.shard_map``.
+
+word2ket makes this nearly free — the factor stacks are KBs, so they
+replicate per shard with zero collective cost (quant scales travel with
+their payloads). Only the output axis needs a layout decision:
+
+* **kron_gather** — tokens shard over every mesh axis (pod × data × model);
+  factors replicate. Per-token tree math is independent of its neighbors,
+  so the sharded lookup is bit-identical to the single-device kernel and
+  there is no collective anywhere (the word2ket "no embedding all-gather"
+  property, now kept under TP too).
+* **fused_kron_ce** — same token sharding (sequence-parallel CE); the
+  per-token online-softmax loss never crosses shards. Bit-identical.
+* **kron_matmul** — three strategies, in preference order:
+
+  - ``"rank"`` (only when ``shard_rank`` resolves on and tp | rank): factor
+    stacks and their scales split the rank axis over "model"; each shard
+    computes its rank slice's full output and one fp32 ``psum`` folds the
+    rank sum. This reorders the rank reduction, so it is allclose — not
+    bit-identical — to the single-device kernel. The on/off decision is the
+    measured compute-vs-collective rule in
+    :func:`repro.kernels.autotune.choose_shard_rank`.
+  - ``"t1"`` (tp | t1): the first t-factor splits its column axis over
+    "model" — the kernel's column tiles are independent, so each shard
+    computes a contiguous block of output columns with no collective at
+    all. Bit-identical.
+  - ``"batch"`` (always valid): rows shard over every mesh axis, factors
+    replicate. Bit-identical.
+
+Every strategy computes each output value exactly once (no redundant
+compute over "model"), which keeps shard_map transposition correct under
+``check_vma=False``: cotangents of replicated inputs psum over shards that
+each contributed distinct partials. Batch/token dims are zero-padded up to
+the shard count and sliced back, so there are no divisibility preconditions.
+
+Reentrancy: a kron op called while already tracing inside a shard_map body
+(ours or anyone's — e.g. the MoE expert-parallel layer) must NOT wrap again;
+:func:`mesh_route` returns None there and the op runs its local kernel.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "mesh_route",
+    "in_sharded_call",
+    "sharded_kron_gather",
+    "sharded_kron_matmul",
+    "sharded_kron_ce",
+]
+
+_tls = threading.local()
+
+
+def in_sharded_call() -> bool:
+    """True while tracing inside a shard_map (or pmap) body."""
+    if getattr(_tls, "depth", 0) > 0:
+        return True
+    try:  # mesh axis names are bound while the body traces
+        from jax._src import core as _core
+        return bool(getattr(_core.get_axis_env(), "axis_sizes", None))
+    except Exception:
+        return False
+
+
+@contextlib.contextmanager
+def _sharded_region():
+    _tls.depth = getattr(_tls, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _tls.depth -= 1
+
+
+def mesh_route():
+    """The ambient mesh when the sharded route should engage, else None."""
+    from repro.parallel import meshctx
+    mesh = meshctx.get_mesh()
+    if mesh is None or mesh.size <= 1 or in_sharded_call():
+        return None
+    if not _shard_axes(mesh):
+        return None  # no (pod|data|model) axis >1 — no layout contract
+    return mesh
+
+
+def _shard_axes(mesh, include_model: bool = True) -> tuple[str, ...]:
+    """Mesh axes a batch/token dim shards over, in layout order."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    return tuple(a for a in names
+                 if a in mesh.axis_names and mesh.shape[a] > 1)
+
+
+def _axes_size(mesh, axes: Sequence[str]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes)) if axes else 1
+
+
+def _bdim(axes: Sequence[str]):
+    """The leading-dim entry of a PartitionSpec for a (possibly multi-)axis
+    batch sharding (the repo-wide ``P(dp if dp else None, ...)`` idiom)."""
+    return tuple(axes) if axes else None
+
+
+def _pad_rows(x: jax.Array, pad: int) -> jax.Array:
+    if pad == 0:
+        return x
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width)
+
+
+# ---------------------------------------------------------------------------
+# kron_gather
+# ---------------------------------------------------------------------------
+
+def sharded_kron_gather(mesh, factors, ids, embed_dim, use_layernorm,
+                        block_b, scales=None):
+    from repro.parallel import meshctx
+
+    axes = _shard_axes(mesh)
+    n = _axes_size(mesh, axes)
+    if n <= 1:
+        axes, n = (), 1
+    B = ids.shape[0]
+    pad = (-B) % n
+    ids_p = _pad_rows(ids, pad)
+
+    fspec = [P() for _ in factors]
+    in_specs = (fspec, fspec, P(_bdim(axes))) if scales is not None else \
+        (fspec, P(_bdim(axes)))
+    out_specs = P(_bdim(axes), None)
+
+    if scales is not None:
+        def inner(fs, ss, ids_l):
+            from repro.kernels.kron_gather import ops
+            with _sharded_region():
+                return ops.kron_gather_quant(fs, ss, ids_l, embed_dim,
+                                             use_layernorm, block_b)
+        args = (list(factors), list(scales), ids_p)
+    else:
+        def inner(fs, ids_l):
+            from repro.kernels.kron_gather import ops
+            with _sharded_region():
+                return ops._kron_gather_local(fs, ids_l, embed_dim,
+                                              use_layernorm, block_b)
+        args = (list(factors), ids_p)
+
+    out = meshctx.shard_map(inner, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)(*args)
+    return out[:B] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# fused_kron_ce
+# ---------------------------------------------------------------------------
+
+def sharded_kron_ce(mesh, factors, h, labels, vocab_size, t1_block, block_b):
+    from repro.parallel import meshctx
+
+    axes = _shard_axes(mesh)
+    n = _axes_size(mesh, axes)
+    B = h.shape[0]
+    pad = (-B) % n
+    h_p, y_p = _pad_rows(h, pad), _pad_rows(labels, pad)
+
+    def inner(fs, h_l, y_l):
+        from repro.kernels.kron_logits import ops
+        with _sharded_region():
+            return ops._fused_kron_ce_local(fs, h_l, y_l, vocab_size,
+                                            t1_block, block_b)
+
+    out = meshctx.shard_map(
+        inner, mesh=mesh,
+        in_specs=([P() for _ in factors], P(_bdim(axes), None),
+                  P(_bdim(axes))),
+        out_specs=P(_bdim(axes)),
+        check_vma=False)(list(factors), h_p, y_p)
+    return out[:B] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# kron_matmul
+# ---------------------------------------------------------------------------
+
+def _matmul_strategy(mesh, rank: int, t1: int, batch: int,
+                     q_dims, t_dims, dtype: str,
+                     shard_rank: Optional[bool]) -> str:
+    tp = mesh.shape.get("model", 1)
+    if tp <= 1:
+        return "batch"
+    if shard_rank is None:
+        from repro.kernels import autotune
+        shard_rank = autotune.choose_shard_rank(
+            rank=rank, q_dims=tuple(q_dims), t_dims=tuple(t_dims),
+            batch=batch, tp=tp, mesh=mesh, dtype=dtype)
+    if shard_rank and rank % tp == 0:
+        return "rank"
+    if t1 % tp == 0:
+        return "t1"
+    return "batch"
+
+
+def sharded_kron_matmul(mesh, factors, x, out_dim, t1_block, block_b,
+                        scales=None, shard_rank: Optional[bool] = None):
+    from repro.kernels.common import largest_divisor_leq
+    from repro.parallel import meshctx
+
+    rank = factors[0].shape[0]
+    q_dims = tuple(f.shape[1] for f in factors)
+    t_dims = tuple(f.shape[2] for f in factors)
+    t1, T = t_dims[0], int(math.prod(t_dims))
+    tp = mesh.shape.get("model", 1)
+    B = x.shape[0]
+    dtype = jnp.dtype(factors[0].dtype).name
+
+    strategy = _matmul_strategy(mesh, rank, t1, B, q_dims, t_dims, dtype,
+                                shard_rank)
+
+    quant = scales is not None
+
+    def _local(fs, ss, x_l, local_out, t1b):
+        from repro.kernels.kron_matmul import ops
+        with _sharded_region():
+            if quant:
+                return ops.kron_matmul_quant(fs, ss, x_l, local_out, t1b,
+                                             block_b)
+            return ops._kron_matmul_local(fs, x_l, local_out, t1b, block_b)
+
+    if strategy == "batch":
+        axes = _shard_axes(mesh)
+        n = _axes_size(mesh, axes)
+        pad = (-B) % n
+        x_p = _pad_rows(x, pad)
+        fspec = [P() for _ in factors]
+        in_specs = (fspec, fspec, P(_bdim(axes), None)) if quant else \
+            (fspec, P(_bdim(axes), None))
+
+        def inner(fs, *rest):
+            ss, x_l = (rest[0], rest[1]) if quant else (None, rest[0])
+            return _local(fs, ss, x_l, out_dim, t1_block)
+
+        args = (list(factors), list(scales), x_p) if quant else \
+            (list(factors), x_p)
+        out = meshctx.shard_map(inner, mesh=mesh, in_specs=in_specs,
+                                out_specs=P(_bdim(axes), None),
+                                check_vma=False)(*args)
+        return out[:B] if pad else out
+
+    daxes = _shard_axes(mesh, include_model=False)
+    nd = _axes_size(mesh, daxes)
+    pad = (-B) % nd
+    x_p = _pad_rows(x, pad)
+    xspec = P(_bdim(daxes), None)
+
+    if strategy == "t1":
+        # column-parallel: F_1 splits its t axis; each shard owns the
+        # contiguous column block [s·T/tp, (s+1)·T/tp) of the T-wide output
+        local_t1 = t1 // tp
+        local_T = local_t1 * (T // t1)
+        t1b = (largest_divisor_leq(local_t1, t1_block)
+               if t1_block else None)
+        fspec = [P(None, None, "model")] + [P() for _ in factors[1:]]
+        sspec = [P() for _ in factors]  # per-rank scales: column-invariant
+        in_specs = (fspec, sspec, xspec) if quant else (fspec, xspec)
+
+        def inner(fs, *rest):
+            ss, x_l = (rest[0], rest[1]) if quant else (None, rest[0])
+            return _local(fs, ss, x_l, local_T, t1b)
+
+        args = (list(factors), list(scales), x_p) if quant else \
+            (list(factors), x_p)
+        out = meshctx.shard_map(inner, mesh=mesh, in_specs=in_specs,
+                                out_specs=P(_bdim(daxes), "model"),
+                                check_vma=False)(*args)
+        return out[:B, :out_dim]
+
+    # strategy == "rank": factor stacks (and their per-rank scales) split the
+    # rank axis; one fp32 psum folds the rank sum across shards
+    fspec = [P("model", None, None) for _ in factors]
+    in_specs = (fspec, fspec, xspec) if quant else (fspec, xspec)
+    t1b = largest_divisor_leq(t1, t1_block) if t1_block else None
+
+    def inner(fs, *rest):
+        ss, x_l = (rest[0], rest[1]) if quant else (None, rest[0])
+        z = _local(fs, ss, x_l, T, t1b)
+        return jax.lax.psum(z.astype(jnp.float32), "model").astype(z.dtype)
+
+    args = (list(factors), list(scales), x_p) if quant else \
+        (list(factors), x_p)
+    out = meshctx.shard_map(inner, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(_bdim(daxes), None),
+                            check_vma=False)(*args)
+    return out[:B, :out_dim]

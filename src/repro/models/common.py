@@ -64,50 +64,56 @@ def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, *,
 
 def linear_opts(cfg) -> dict:
     """The ket-linear apply knobs of a ModelConfig, as ``linear_apply`` /
-    ``qkv_proj`` / ``out_proj`` / ``ffn`` kwargs: the t1 column tile plus the
-    kron_matmul kernel routing (tri-state ``use_kernel``, token block)."""
+    ``qkv_proj`` / ``out_proj`` / ``ffn`` kwargs: the t1 column tile, the
+    kron_matmul kernel routing (tri-state ``use_kernel``, token block), and
+    the mesh-native rank-sharding decision (``shard_rank``; None = the
+    measured comms-profile rule, resolved by pin_kernel_blocks)."""
     return {
         "tile": getattr(cfg, "linear_tile", None),
         "use_kernel": getattr(cfg, "linear_use_kernel", None),
         "block_b": getattr(cfg, "linear_block_b", None),
+        "shard_rank": getattr(cfg, "ket_shard_rank", None),
     }
 
 
 def linear_apply(p, x: jax.Array, dtype, d_out: int, *, tile=None,
-                 use_kernel=None, block_b=None) -> jax.Array:
+                 use_kernel=None, block_b=None, shard_rank=None) -> jax.Array:
     """x (..., d_in) @ p -> (..., d_out); p is a 2-D dense array or ket dict.
 
     ``use_kernel``/``block_b`` route ket params through the fused
     ``kron_matmul`` kernel (core/ketops ``apply_matrix_factors`` resolution);
-    dense params ignore them.
+    ``shard_rank`` pins the kernel's mesh-native rank-vs-t1 strategy under an
+    ambient mesh; dense params ignore them.
     """
     if is_ket_param(p):
         from repro.core import ketops
         return ketops.apply_matrix_factors(
             p["factors"], x.astype(dtype), d_out, tile=tile,
-            use_kernel=use_kernel, block_b=block_b)
+            use_kernel=use_kernel, block_b=block_b, shard_rank=shard_rank)
     return jnp.einsum("...i,io->...o", x, p.astype(dtype))
 
 
 def qkv_proj(p, x: jax.Array, dtype, n_heads: int, head_dim: int, *, tile=None,
-             use_kernel=None, block_b=None) -> jax.Array:
+             use_kernel=None, block_b=None, shard_rank=None) -> jax.Array:
     """x (..., d) -> (..., n_heads, head_dim). Dense p: (d, n_heads, head_dim);
     ket p: factors covering d -> n_heads·head_dim."""
     if is_ket_param(p):
         y = linear_apply(p, x, dtype, n_heads * head_dim, tile=tile,
-                         use_kernel=use_kernel, block_b=block_b)
+                         use_kernel=use_kernel, block_b=block_b,
+                         shard_rank=shard_rank)
         return y.reshape(*x.shape[:-1], n_heads, head_dim)
     return jnp.einsum("...d,dhk->...hk", x, p.astype(dtype))
 
 
 def out_proj(p, o: jax.Array, dtype, d_model: int, *, tile=None,
-             use_kernel=None, block_b=None) -> jax.Array:
+             use_kernel=None, block_b=None, shard_rank=None) -> jax.Array:
     """o (..., H, Dh) -> (..., d_model). Dense p: (H, Dh, d); ket p: factors
     covering H·Dh -> d."""
     if is_ket_param(p):
         o2 = o.reshape(*o.shape[:-2], o.shape[-2] * o.shape[-1])
         return linear_apply(p, o2, dtype, d_model, tile=tile,
-                            use_kernel=use_kernel, block_b=block_b)
+                            use_kernel=use_kernel, block_b=block_b,
+                            shard_rank=shard_rank)
     return jnp.einsum("...hk,hkd->...d", o, p.astype(dtype))
 
 

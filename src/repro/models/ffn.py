@@ -36,13 +36,15 @@ def _dims(params: dict, dims) -> tuple[int, int]:
 
 
 def ffn(params: dict, x: jax.Array, mlp_type: str, dtype, dims=None,
-        tile=None, use_kernel=None, block_b=None) -> jax.Array:
+        tile=None, use_kernel=None, block_b=None,
+        shard_rank=None) -> jax.Array:
     """x (..., d_model) -> (..., d_model). ``dims=(d_model, d_ff)`` is
     required for ket params (factor products overcover the logical dims).
-    ``tile``/``use_kernel``/``block_b`` are the ket-linear apply knobs
-    (``models.common.linear_opts``)."""
+    ``tile``/``use_kernel``/``block_b``/``shard_rank`` are the ket-linear
+    apply knobs (``models.common.linear_opts``)."""
     d_model, d_ff = _dims(params, dims)
-    kw = dict(tile=tile, use_kernel=use_kernel, block_b=block_b)
+    kw = dict(tile=tile, use_kernel=use_kernel, block_b=block_b,
+              shard_rank=shard_rank)
     h = linear_apply(params["wi"], x, dtype, d_ff, **kw)
     if mlp_type == "swiglu":
         g = linear_apply(params["wg"], x, dtype, d_ff, **kw)

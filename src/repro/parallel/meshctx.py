@@ -44,6 +44,17 @@ def has_axis(name: str) -> bool:
     return axis_size(name) > 1
 
 
+def mesh_signature(mesh: Optional[Mesh] = None) -> Optional[tuple]:
+    """Hashable ((axis, size), ...) signature of a (default: the ambient)
+    multi-device mesh, or None. Stamped into the frozen ModelConfig by
+    ``train/step.pin_kernel_blocks`` so the mesh-native kernel route
+    (kernels/shard.py) is part of every jit static key."""
+    mesh = mesh if mesh is not None else _CURRENT
+    if mesh is None or mesh.size <= 1:
+        return None
+    return tuple((str(n), int(s)) for n, s in mesh.shape.items())
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Optional[Mesh]):
     """Install ``mesh`` as the ambient mesh (and as jax's resource env)."""

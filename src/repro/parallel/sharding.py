@@ -61,16 +61,18 @@ def _rules(cfg: ModelConfig, mesh: Mesh):
     FF_OUT = P("model", None) if ff_ok else P()
     # ket linear factor stacks (rank, q_j, t_j): replicated like the
     # embedding factors (they are KBs), or rank-parallel over "model" when
-    # opted in — the chain matmul is batched over rank, so rank sharding
-    # turns the final rank sum into one small all-reduce. The fused
-    # kron_matmul kernel folds that rank sum into its last GEMM, which
-    # contracts the whole rank axis locally: per-shard it yields the same
-    # partial sums, so the GSPMD all-reduce story is unchanged — but the
-    # kernel itself is an opaque custom call with no partitioning rule, so
-    # kernels_enabled(None) auto-resolves OFF under an ambient mesh and
-    # rank-sharded runs ride the chain apply unless they wrap the op in
-    # shard_map and opt in with linear_use_kernel=True explicitly.
-    ket_rank_ok = getattr(cfg, "ket_shard_rank", False) and \
+    # ket_shard_rank resolves on — the chain matmul is batched over rank, so
+    # rank sharding turns the final rank sum into one psum at the rank fold.
+    # The fused kron ops are shard_map-native (kernels/shard.py): under an
+    # ambient multi-device mesh each ops.py entry point wraps the kernel in
+    # meshctx.shard_map with factors (and quant scales) laid out per these
+    # specs, so the kernel route no longer auto-disables; see
+    # docs/sharding.md for the mesh-native contract and the comms-profile
+    # decision rule behind ket_shard_rank=None (auto). ket_shard_rank may be
+    # None here (unpinned config) — that's falsy, i.e. replicate; the
+    # measured decision is resolved into the config by
+    # train/step.pin_kernel_blocks.
+    ket_rank_ok = bool(getattr(cfg, "ket_shard_rank", False)) and \
         getattr(cfg, "linear_rank", 1) % tp == 0
     KET = P("model", None, None) if ket_rank_ok else P()
 
@@ -200,14 +202,23 @@ def state_specs(cfg: ModelConfig, mesh: Mesh, state_shape, *, zero1: bool = True
 
 
 def batch_axes_for(mesh: Mesh, batch: int) -> tuple[str, ...]:
-    """Maximal prefix of ("pod", "data") whose product divides `batch`."""
+    """Maximal prefix of the present ("pod", "data") axes whose product
+    divides ``batch``.
+
+    Strictly a *prefix*: the walk stops at the first present-but-non-dividing
+    axis. Skipping a non-dividing "pod" and still sharding over "data" would
+    silently change the batch layout on pod meshes — every consumer
+    (shard_map'd ops, batch_specs, the microbatch pin in train/step.py) must
+    agree on one layout per (mesh, batch)."""
     axes: list[str] = []
     prod = 1
     for name in ("pod", "data"):
-        if name in mesh.axis_names:
-            if batch % (prod * mesh.shape[name]) == 0:
-                axes.append(name)
-                prod *= mesh.shape[name]
+        if name not in mesh.axis_names:
+            continue
+        if batch % (prod * mesh.shape[name]) != 0:
+            break
+        axes.append(name)
+        prod *= mesh.shape[name]
     return tuple(axes)
 
 

@@ -58,15 +58,13 @@ def _model_axis_active(cfg: ModelConfig) -> bool:
 
 
 def _batch_axes(batch: int):
-    """Maximal DP prefix whose product divides the (global) decode batch."""
+    """Maximal DP prefix whose product divides the (global) decode batch
+    (one layout authority: ``parallel.sharding.batch_axes_for``)."""
     mesh = meshctx.get_mesh()
-    axes: tuple[str, ...] = ()
-    prod = 1
-    for name in ("pod", "data"):
-        if mesh is not None and name in mesh.axis_names and batch % (prod * mesh.shape[name]) == 0:
-            axes += (name,)
-            prod *= mesh.shape[name]
-    return axes
+    if mesh is None:
+        return ()
+    from repro.parallel.sharding import batch_axes_for
+    return batch_axes_for(mesh, batch)
 
 
 def _scatter_kv(cache, new, slot):

@@ -254,16 +254,22 @@ class ServingEngine:
                     f"and a fully-paged layer pattern (got {cfg.layer_pattern})")
             self.prefix_cache = PrefixCache(self.allocator, self.page_size)
 
-        if self._needs_pages and cfg.decode_kv_splits is None:
-            # pin the split-KV decode's split count once, from the engine's
-            # actual read shape (pages at max_len, slot count) — every decode
-            # trace then shares one static grid, and the degraded-mode config
-            # clone in _degrade carries the pinned value along
-            from repro.train.step import pin_kernel_blocks
-            cfg = pin_kernel_blocks(
-                cfg, decode_pages=logical_pages(max_len, self.page_size),
-                decode_batch=batch_slots, decode_page_size=self.page_size)
-            self.cfg = cfg
+        # Build-time pinning: resolve every autotuned tile, the split-KV
+        # decode's split count (from the engine's actual read shape — pages
+        # at max_len, slot count), the mesh-native kernel-route signature
+        # (cfg.kernel_mesh) and the ket_shard_rank decision ONCE, so every
+        # engine trace shares one static config and the degraded-mode clone
+        # in _degrade carries the pinned values along. Stamping the ambient
+        # mesh here is what keys the jit cache per mesh — an engine built
+        # under a mesh can never reuse a stale single-device trace.
+        from repro.train.step import pin_kernel_blocks
+        decode_pages = (logical_pages(max_len, self.page_size)
+                        if self._needs_pages and cfg.decode_kv_splits is None
+                        else None)
+        cfg = pin_kernel_blocks(
+            cfg, decode_pages=decode_pages, decode_batch=batch_slots,
+            decode_page_size=self.page_size, tokens_hint=batch_slots)
+        self.cfg = cfg
 
         self._step = functools.partial(_jit_step, cfg)
         self._prefill = functools.partial(_jit_prefill, cfg)

@@ -22,7 +22,8 @@ __all__ = ["TrainConfig", "init_state", "make_train_step", "pin_kernel_blocks"]
 
 
 def pin_kernel_blocks(cfg: ModelConfig, *, decode_pages=None, decode_batch=1,
-                      decode_page_size=None) -> ModelConfig:
+                      decode_page_size=None,
+                      tokens_hint: int = 256) -> ModelConfig:
     """Resolve autotuned kernel tile sizes ONCE at step-build time.
 
     ``None`` block fields mean "ask repro/kernels/autotune"; baking the
@@ -34,10 +35,25 @@ def pin_kernel_blocks(cfg: ModelConfig, *, decode_pages=None, decode_batch=1,
     additionally pins ``decode_kv_splits`` from the ``paged_attn`` family —
     the serving engine passes it so every decode trace shares one split
     count; the training paths never do (the knob is decode-only).
+
+    The ambient mesh is part of the pin: its signature is stamped into
+    ``cfg.kernel_mesh`` so the mesh-native kernel route (kernels/shard.py)
+    is carried by every jit static key — a step built without a mesh can
+    never serve a stale single-device trace under one, and vice versa. For
+    ket linears, ``ket_shard_rank=None`` additionally resolves here via the
+    measured compute-vs-collective rule (``autotune.choose_shard_rank``,
+    fed by the "comms" interconnect profile); ``tokens_hint`` sizes the
+    psum in that estimate when the true per-call token count isn't known
+    at build time.
     """
     from repro.core import quant as Q
     from repro.kernels import autotune
+    from repro.parallel import meshctx
     updates: dict = {}
+    mesh = meshctx.get_mesh()
+    mesh_sig = meshctx.mesh_signature(mesh)
+    if getattr(cfg, "kernel_mesh", None) != mesh_sig:
+        updates["kernel_mesh"] = mesh_sig
     if decode_pages is not None and cfg.decode_kv_splits is None:
         updates["decode_kv_splits"] = autotune.get_kv_splits(
             decode_page_size or cfg.page_size, cfg.q_heads_per_kv,
@@ -80,6 +96,21 @@ def pin_kernel_blocks(cfg: ModelConfig, *, decode_pages=None, decode_batch=1,
             updates["linear_tile"] = bc.t1_block
         if cfg.linear_block_b is None:
             updates["linear_block_b"] = bc.block_b
+    if (cfg.linear_kind == "ket"
+            and getattr(cfg, "ket_shard_rank", None) is None):
+        from repro.core import kron as K
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        if tp > 1:
+            d_out = cfg.d_ff if cfg.d_ff else cfg.num_heads * cfg.head_dim
+            dt = ("float32" if cfg.quant == "none"
+                  else jnp.dtype(Q.payload_dtype(cfg.quant)).name)
+            updates["ket_shard_rank"] = autotune.choose_shard_rank(
+                rank=cfg.linear_rank,
+                q_dims=K.choose_factorization(cfg.d_model, cfg.linear_order),
+                t_dims=K.choose_factorization(d_out, cfg.linear_order),
+                batch=tokens_hint, tp=tp, mesh=mesh, dtype=dt)
+        else:
+            updates["ket_shard_rank"] = False
     return dataclasses.replace(cfg, **updates) if updates else cfg
 
 
@@ -126,14 +157,11 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         from repro.parallel import meshctx
         mesh = meshctx.get_mesh()
         if mesh is not None:
+            from repro.parallel.sharding import batch_axes_for
+
             def pin(x):
-                b = x.shape[1]
-                axes: tuple = ()
-                prod = 1
-                for name in ("pod", "data"):
-                    if name in mesh.axis_names and b % (prod * mesh.shape[name]) == 0:
-                        axes += (name,)
-                        prod *= mesh.shape[name]
+                # one layout authority per (mesh, batch): sharding.batch_axes_for
+                axes = batch_axes_for(mesh, x.shape[1])
                 spec = PS(None, axes if axes else None, *((None,) * (x.ndim - 2)))
                 return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 

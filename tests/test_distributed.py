@@ -8,6 +8,9 @@ single-device reference:
   * flash-decoding (seq-sharded KV + pmax/psum combine) == plain decode
   * data-parallel train step loss == 1-device loss
   * GPipe pipeline over 4 stages == sequential stage application
+  * shard_map-native kron ops (kernels/shard.py) == single-device kernel
+    (bit-identical except the rank-parallel psum) == chain reference, for
+    plain AND int8 wire-format factors, in both REPRO_KRON_BWD legs
 """
 
 import os
@@ -15,11 +18,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_sub(body: str, n_dev: int = 4) -> str:
+def run_sub(body: str, n_dev: int = 4, env: dict | None = None) -> str:
     code = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
@@ -27,9 +31,10 @@ def run_sub(body: str, n_dev: int = 4) -> str:
         from repro.launch.mesh import make_mesh
         from repro.parallel import meshctx
     """) + textwrap.dedent(body)
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env_full = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+                    **(env or {}))
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=600)
+                         text=True, env=env_full, timeout=600)
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
     return out.stdout
 
@@ -133,3 +138,215 @@ def test_gpipe_matches_sequential():
                                    rtol=1e-5, atol=1e-6)
         print("GPIPE-OK")
     """)
+
+
+# ---------------------------------------------------------------------------
+# mesh-native kron kernels (kernels/shard.py)
+# ---------------------------------------------------------------------------
+
+_SHARDED_KRON_BODY = """
+    import math
+    from repro.core import quant as Q
+    from repro.kernels import shard
+    from repro.kernels.kron_gather.ops import kron_gather, kron_gather_quant
+    from repro.kernels.kron_gather.ref import kron_gather_ref
+    from repro.kernels.kron_logits.ops import fused_kron_ce
+    from repro.kernels.kron_logits.ref import kron_ce_tiled
+    from repro.kernels.kron_matmul.ops import kron_matmul, kron_matmul_quant
+    from repro.kernels.kron_matmul.ref import kron_matmul_ref
+
+    rng = np.random.RandomState(0)
+    rank, q = 4, (8, 8)
+    # t1=40 divides tp=4 (t1 strategy); t1=50 does not (rank/batch strategies)
+    t_div, t_odd = (40, 50), (50, 40)
+
+    def mk(t):
+        return [jnp.asarray((rng.randn(rank, qi, ti) * 0.2).astype(np.float32))
+                for qi, ti in zip(q, t)]
+
+    f_div, f_odd = mk(t_div), mk(t_odd)
+    qf = [Q.quantize(f, "int8") for f in f_odd]
+    payloads = [d["q"] for d in qf]
+    scales = [d["scale"] for d in qf]
+    B = 37  # deliberately not divisible by any shard count (pad path)
+    ids = jnp.asarray(rng.randint(0, 2000, size=B), jnp.int32)
+    x = jnp.asarray(rng.randn(B, 64).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, 2000, size=B), jnp.int32)
+
+    # single-device kernel + chain references (no mesh ambient)
+    g0 = kron_gather(f_odd, ids, 64, True, 32)
+    g0q = kron_gather_quant(payloads, scales, ids, 64, True, 32)
+    m0_div = kron_matmul(f_div, x, 2000, 8, 32)
+    m0_odd = kron_matmul(f_odd, x, 2000, 8, 32)
+    m0q = kron_matmul_quant(payloads, scales, x, 2000, 8, 32)
+    c0 = fused_kron_ce(f_odd, x, labels, 2000, 8, 32)
+    g_ref = kron_gather_ref(f_odd, ids, embed_dim=64, use_layernorm=True)
+    m_ref = kron_matmul_ref(f_div, x, out_dim=2000)
+    c_ref = kron_ce_tiled(f_odd, x, labels, vocab_size=2000, t1_block=8)
+
+    def gloss(fs):
+        return jnp.sum(kron_gather(fs, ids, 64, True, 32) ** 2)
+
+    def closs(fs):
+        return jnp.sum(fused_kron_ce(fs, x, labels, 2000, 8, 32))
+
+    def mloss(fs):
+        return jnp.sum(kron_matmul(fs, x, 2000, 8, 32, True) ** 2)
+
+    gg0 = jax.grad(gloss)(f_odd)
+    gc0 = jax.grad(closs)(f_odd)
+    gm0 = jax.grad(lambda fs: jnp.sum(kron_matmul(fs, x, 2000, 8, 32) ** 2))(f_odd)
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with meshctx.use_mesh(mesh):
+        assert shard.mesh_route() is mesh
+        # strategy selection: t1-divisible prefers the free column split when
+        # shard_rank is off; rank-divisible engages under shard_rank=True
+        assert shard._matmul_strategy(mesh, rank, 40, B, q, t_div,
+                                      "float32", False) == "t1"
+        assert shard._matmul_strategy(mesh, rank, 50, B, q, t_odd,
+                                      "float32", True) == "rank"
+        assert shard._matmul_strategy(mesh, rank, 50, B, q, t_odd,
+                                      "float32", False) == "batch"
+
+        # gather: token-sharded, factors replicated — bit-identical
+        g1 = kron_gather(f_odd, ids, 64, True, 32)
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g0))
+        g1q = kron_gather_quant(payloads, scales, ids, 64, True, 32)
+        np.testing.assert_array_equal(np.asarray(g1q), np.asarray(g0q))
+
+        # matmul "t1" (column-parallel): bit-identical
+        m1 = kron_matmul(f_div, x, 2000, 8, 32, False)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m0_div))
+        # matmul "batch" (row-sharded): bit-identical, plain and quant
+        m2 = kron_matmul(f_odd, x, 2000, 8, 32, False)
+        np.testing.assert_array_equal(np.asarray(m2), np.asarray(m0_odd))
+        m2q = kron_matmul_quant(payloads, scales, x, 2000, 8, 32, False)
+        np.testing.assert_array_equal(np.asarray(m2q), np.asarray(m0q))
+        # matmul "rank" (psum at the rank fold): allclose — the psum
+        # reorders the fp32 rank reduction
+        m3 = kron_matmul(f_odd, x, 2000, 8, 32, True)
+        np.testing.assert_allclose(np.asarray(m3), np.asarray(m0_odd),
+                                   rtol=1e-5, atol=1e-5)
+        m3q = kron_matmul_quant(payloads, scales, x, 2000, 8, 32, True)
+        np.testing.assert_allclose(np.asarray(m3q), np.asarray(m0q),
+                                   rtol=1e-5, atol=1e-5)
+
+        # CE: sequence-parallel over tokens — bit-identical
+        c1 = fused_kron_ce(f_odd, x, labels, 2000, 8, 32)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+
+        # chain references (transitively: sharded == kernel == chain)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g_ref),
+                                   rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+        # AD through the shard_map wrappers (check_vma=False transposition).
+        # Factor grads accumulate over tokens, and token sharding reorders
+        # that sum (per-shard partials psum'd at the transpose) — so grads
+        # are allclose, not bitwise, even where the forward is bitwise.
+        gg1 = jax.grad(gloss)(f_odd)
+        for a, b in zip(gg1, gg0):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-4)
+        gc1 = jax.grad(closs)(f_odd)
+        for a, b in zip(gc1, gc0):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+        gm1 = jax.grad(mloss)(f_odd)
+        for a, b in zip(gm1, gm0):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-3)
+
+        # reentrancy: inside a shard_map body the ops must NOT wrap again
+        from jax.sharding import PartitionSpec as P
+
+        def inner(fs):
+            assert shard.in_sharded_call()
+            return kron_gather(fs, ids, 64, True, 32)
+
+        g2 = meshctx.shard_map(inner, mesh=mesh,
+                               in_specs=([P()] * 2,), out_specs=P(),
+                               check_vma=False)(f_odd)
+        np.testing.assert_array_equal(np.asarray(g2), np.asarray(g0))
+    assert shard.mesh_route() is None
+    print("SHARDED-KRON-OK")
+"""
+
+
+@pytest.mark.parametrize("bwd", ["kernel", "ref"])
+def test_sharded_kron_conformance(bwd):
+    """8-device CPU mesh: the shard_map routes of all three kron ops conform
+    to the single-device kernel (bitwise except rank-psum) and the chain
+    references, plain + int8, fwd + grad, in both backward legs."""
+    out = run_sub(_SHARDED_KRON_BODY, n_dev=8, env={"REPRO_KRON_BWD": bwd})
+    assert "SHARDED-KRON-OK" in out
+
+
+@pytest.mark.parametrize("bwd", ["kernel", "ref"])
+def test_sharded_ket_linear_2x2_mesh(bwd):
+    """Real 2x2 ("data","model") mesh: a ket linear applied through
+    apply_matrix_factors with the kernel route forced on matches the
+    single-device result for plain and int8 factors, with params laid out
+    by the sharding-spec rules (rank-sharded factors under ket_shard_rank)."""
+    out = run_sub("""
+        from jax.sharding import Mesh, NamedSharding
+        from jax.sharding import PartitionSpec as P
+        from repro.core import ketops, quant as Q
+        from repro.configs import get_smoke
+        from repro.parallel.sharding import batch_axes_for, param_specs
+
+        rng = np.random.RandomState(3)
+        rank, q, t = 4, (8, 8), (24, 20)
+        factors = [jnp.asarray((rng.randn(rank, qi, ti) * 0.2).astype(np.float32))
+                   for qi, ti in zip(q, t)]
+        x = jnp.asarray(rng.randn(13, 64).astype(np.float32))
+        qf = [Q.quantize(f, "int8") for f in factors]
+
+        ref = ketops.apply_matrix_factors(factors, x, 480, tile=8,
+                                          use_kernel=True, block_b=8)
+        refq = ketops.apply_matrix_factors(qf, x, 480, tile=8,
+                                           use_kernel=True, block_b=8)
+
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                    ("data", "model"))
+        with meshctx.use_mesh(mesh):
+            # sharding-spec rules under the live mesh: ket factor stacks
+            # rank-shard over "model" iff ket_shard_rank resolves on
+            cfg = get_smoke("qwen3-1.7b", linear_kind="ket", linear_rank=4,
+                            ket_shard_rank=True)
+            shapes = jax.eval_shape(
+                lambda: {"attn": {"wq": {"factors": factors}}})
+            specs = param_specs(cfg, mesh, shapes)
+            # trailing Nones are trimmed by the spec sanitizer
+            assert specs["attn"]["wq"]["factors"][0] == P("model")
+            cfg_off = get_smoke("qwen3-1.7b", linear_kind="ket",
+                                linear_rank=4, ket_shard_rank=False)
+            assert param_specs(cfg_off, mesh, shapes
+                               )["attn"]["wq"]["factors"][0] == P()
+            assert batch_axes_for(mesh, 12) == ("data",)
+
+            # device_put the factors per the rank-sharded spec, then apply:
+            # the op's own shard_map route must agree with the layout
+            fs = [jax.device_put(f, NamedSharding(mesh, P("model", None, None)))
+                  for f in factors]
+            out = ketops.apply_matrix_factors(fs, x, 480, tile=8,
+                                              use_kernel=True, block_b=8,
+                                              shard_rank=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+            out2 = ketops.apply_matrix_factors(factors, x, 480, tile=8,
+                                               use_kernel=True, block_b=8,
+                                               shard_rank=False)
+            np.testing.assert_array_equal(np.asarray(out2), np.asarray(ref))
+            outq = ketops.apply_matrix_factors(qf, x, 480, tile=8,
+                                               use_kernel=True, block_b=8,
+                                               shard_rank=True)
+            np.testing.assert_allclose(np.asarray(outq), np.asarray(refq),
+                                       rtol=1e-5, atol=1e-5)
+        print("KET-2x2-OK")
+    """, n_dev=8, env={"REPRO_KRON_BWD": bwd})
+    assert "KET-2x2-OK" in out

@@ -11,6 +11,7 @@ A deterministic parametrized sweep always runs; when hypothesis is
 installed (CI) a randomized spec generator fuzzes the same properties.
 """
 
+import dataclasses
 import math
 
 import jax
@@ -209,3 +210,34 @@ def test_ket_linear_trains_and_decodes():
         assert logits.shape == (2, cfg.vocab_size)
         assert bool(jnp.all(jnp.isfinite(logits)))
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# dtype conformance: every apply_vector route returns spec.dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("storage", ["factors", "leaves"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_apply_vector_routes_agree_on_spec_dtype(dtype, storage, use_kernel):
+    """The kernel path, the chain fallback, and the leaves path must all
+    return spec.dtype (the kernel path always cast; the fallbacks used to
+    return raw fp32 under bf16 specs) — and agree numerically."""
+    if storage == "leaves" and use_kernel:
+        pytest.skip("kernel route is factors-only")
+    q, t = SHAPES[2]
+    spec = ketops.KronSpec(
+        in_dim=math.prod(q) - 1, out_dim=math.prod(t) - 3, order=2, rank=4,
+        q_dims=q, t_dims=t, storage=storage, use_layernorm=True, dtype=dtype,
+        use_kernel=use_kernel, block_b=8)
+    params = ketops.init(jax.random.PRNGKey(7), spec)
+    ids = jax.random.randint(jax.random.PRNGKey(8), (11,), 0, spec.out_dim)
+    out = ketops.apply_vector(spec, params, ids)
+    assert out.dtype == jnp.dtype(dtype)
+    assert out.shape == (11, spec.in_dim)
+    # the fp32 chain is the oracle; bf16 only rounds on the final cast
+    ref_spec = dataclasses.replace(spec, dtype=jnp.float32, use_kernel=False)
+    ref = ketops.apply_vector(ref_spec, params, ids)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=tol, atol=tol)

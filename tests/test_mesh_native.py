@@ -1,0 +1,179 @@
+"""Unit tests for the mesh-native kernel route and its supporting fixes —
+the pieces that don't need a multi-device world (those live in
+tests/test_distributed.py):
+
+  * kernels.kernel_route tri-state resolution (off / kernel / sharded)
+  * sharding.batch_axes_for prefix contract over pod x data divisibility
+  * autotune table hygiene: $REPRO_AUTOTUNE_TABLE cache keyed on the
+    resolved path, update_table(save_path=...) scoped to the target file
+  * the "comms" alpha-beta family: fit, keys, resolution, and the
+    choose_shard_rank compute-vs-collective decision
+"""
+
+import json
+import types
+
+import jax
+import pytest
+
+from repro.kernels import autotune, kernel_route, kernels_enabled, shard
+from repro.parallel.sharding import batch_axes_for
+
+
+def _stub_mesh(**axes):
+    """batch_axes_for / comms keys only touch .axis_names and .shape."""
+    return types.SimpleNamespace(axis_names=tuple(axes), shape=dict(axes))
+
+
+# ---------------------------------------------------------------------------
+# kernel_route
+# ---------------------------------------------------------------------------
+
+def test_kernel_route_no_mesh():
+    # single-device world: auto resolves per backend, explicit flags win
+    auto = "kernel" if jax.default_backend() == "tpu" else "off"
+    assert kernel_route(None) == auto
+    assert kernel_route(True) == "kernel"
+    assert kernel_route(False) == "off"
+    assert kernels_enabled(True) and not kernels_enabled(False)
+
+
+def test_kernel_route_sharded_under_mesh(monkeypatch):
+    # a live multi-device mesh flips "kernel" to "sharded" — unless already
+    # tracing inside a shard_map body (reentrancy guard)
+    mesh = _stub_mesh(data=2, model=4)
+    mesh.size = 8
+    monkeypatch.setattr("repro.parallel.meshctx._CURRENT", mesh)
+    assert kernel_route(True) == "sharded"
+    assert kernel_route(False) == "off"
+    assert kernels_enabled(True)
+    with shard._sharded_region():
+        assert kernel_route(True) == "kernel"
+        assert shard.mesh_route() is None
+
+
+# ---------------------------------------------------------------------------
+# batch_axes_for: strict ("pod", "data") prefix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("axes,batch,want", [
+    # pod+data both divide -> full prefix
+    (dict(pod=2, data=4), 8, ("pod", "data")),
+    # pod divides, pod*data doesn't -> stop after pod
+    (dict(pod=2, data=4), 6, ("pod",)),
+    # pod itself doesn't divide -> NOTHING (never skip to "data" alone)
+    (dict(pod=3, data=2), 4, ()),
+    # absent pod axis is skipped, data still shards
+    (dict(data=4), 8, ("data",)),
+    (dict(data=4, model=2), 6, ()),
+    # model axis never appears in the batch layout
+    (dict(pod=2, data=2, model=2), 8, ("pod", "data")),
+    (dict(model=8), 8, ()),
+])
+def test_batch_axes_for_prefix_contract(axes, batch, want):
+    assert batch_axes_for(_stub_mesh(**axes), batch) == want
+
+
+# ---------------------------------------------------------------------------
+# autotune table hygiene
+# ---------------------------------------------------------------------------
+
+def test_table_cache_rekeys_on_env_change(tmp_path, monkeypatch):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    a.write_text(json.dumps({"ka": {"block_b": 1, "t1_block": 0}}))
+    b.write_text(json.dumps({"kb": {"block_b": 2, "t1_block": 0}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(a))
+    assert "ka" in autotune.load_table() and "kb" not in autotune.load_table()
+    # flipping the env var mid-process must re-resolve, not serve table "a"
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(b))
+    assert "kb" in autotune.load_table() and "ka" not in autotune.load_table()
+
+
+def test_update_table_save_scoped_to_target_file(tmp_path, monkeypatch):
+    override = tmp_path / "override.json"
+    target = tmp_path / "target.json"
+    override.write_text(json.dumps({"envkey": {"block_b": 64, "t1_block": 4}}))
+    target.write_text(json.dumps({"kept": {"block_b": 8, "t1_block": 2}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(override))
+    autotune.load_table(refresh=True)
+    # persisting a winner while an override table is live must not dump the
+    # override's entries into the target file
+    autotune.update_table("newkey", autotune.BlockConfig(16, 8), us=12.3,
+                          save_path=str(target))
+    disk = json.loads(target.read_text())
+    assert set(disk) == {"kept", "newkey"}
+    assert disk["newkey"] == {"block_b": 16, "t1_block": 8, "us": 12.3}
+    # the in-memory (override) table saw the new entry too
+    assert "newkey" in autotune.load_table()
+
+
+# ---------------------------------------------------------------------------
+# comms family
+# ---------------------------------------------------------------------------
+
+def test_fit_alpha_beta_recovers_line():
+    sizes = [1 << 12, 1 << 16, 1 << 20, 1 << 22]
+    alpha, beta = 50.0, 200.0
+    times = [alpha + beta * s / 1e6 for s in sizes]
+    a, b = autotune._fit_alpha_beta(sizes, times)
+    assert a == pytest.approx(alpha, rel=1e-6)
+    assert b == pytest.approx(beta, rel=1e-6)
+
+
+def test_comms_table_key_shapes():
+    assert autotune.mesh_shape_key({"data": 2, "model": 4}) == "data2.model4"
+    assert autotune.mesh_shape_key((("pod", 2), ("data", 8))) == "pod2.data8"
+    assert (autotune.comms_table_key("cpu", {"data": 2, "model": 4}, "model",
+                                     "psum")
+            == "comms|cpu|data2.model4|model|psum")
+
+
+def test_comms_profile_table_hit_and_default(tmp_path, monkeypatch):
+    mesh = _stub_mesh(data=2, model=4)
+    key = autotune.comms_table_key("cpu", mesh.shape, "model", "psum")
+    tbl = tmp_path / "t.json"
+    tbl.write_text(json.dumps({key: {"alpha_us": 7.0, "beta_us_per_mb": 11.0}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(tbl))
+    autotune.load_table(refresh=True)
+    assert autotune.get_comms_profile("model", "psum", mesh=mesh,
+                                      backend="cpu") == (7.0, 11.0)
+    # alpha + beta * MB
+    assert autotune.predict_collective_us(2_000_000, "model", "psum",
+                                          mesh=mesh, backend="cpu") \
+        == pytest.approx(7.0 + 22.0)
+    # unmeasured mesh shape: per-backend default
+    other = _stub_mesh(data=8)
+    assert autotune.get_comms_profile("model", "psum", mesh=other,
+                                      backend="cpu") \
+        == autotune._DEFAULT_COMMS["cpu"]
+
+
+def test_choose_shard_rank_decision(tmp_path, monkeypatch):
+    mesh = _stub_mesh(data=2, model=4)
+    rank, q, t = 4, (8, 8), (50, 40)  # t1=50: no free t1 sharding at tp=4
+    mm_key = autotune.table_key("kron_matmul", "cpu", rank, q, t)
+    comms_key = autotune.comms_table_key("cpu", mesh.shape, "model", "psum")
+    tbl = tmp_path / "t.json"
+
+    def set_table(kernel_us, alpha, beta):
+        tbl.write_text(json.dumps({
+            mm_key: {"block_b": 32, "t1_block": 8, "us": kernel_us},
+            comms_key: {"alpha_us": alpha, "beta_us_per_mb": beta},
+        }))
+        autotune.load_table(refresh=True)
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(tbl))
+    kw = dict(rank=rank, q_dims=q, t_dims=t, batch=64, tp=4, mesh=mesh,
+              backend="cpu")
+    # expensive kernel, near-free psum -> shard the rank
+    set_table(kernel_us=10_000.0, alpha=1.0, beta=1.0)
+    assert autotune.choose_shard_rank(**kw) is True
+    # cheap kernel, expensive psum -> keep factors whole
+    set_table(kernel_us=5.0, alpha=100_000.0, beta=1000.0)
+    assert autotune.choose_shard_rank(**kw) is False
+    # structural refusals regardless of the profile
+    set_table(kernel_us=10_000.0, alpha=1.0, beta=1.0)
+    assert autotune.choose_shard_rank(**{**kw, "tp": 1}) is False
+    assert autotune.choose_shard_rank(**{**kw, "rank": 3}) is False  # 3 % 4
+    # t1 divisible -> the free column sharding wins
+    assert autotune.choose_shard_rank(**{**kw, "t_dims": (40, 50)}) is False

@@ -215,13 +215,17 @@ def test_autotune_quant_lookup_falls_back_to_fp32_winner(monkeypatch):
     fp32 winner for the same shape (not the heuristic)."""
     from repro.kernels import autotune
     key = autotune.table_key("kron_gather", "cpu", 4, (4, 4), (6, 5))
-    monkeypatch.setattr(autotune, "_table_cache", {key: {"block_b": 96}})
+    # the cache is keyed on the resolved table path (entries live one level
+    # down) so an env-var change mid-process can't serve a stale table
+    path = autotune._table_path()
+    monkeypatch.setattr(autotune, "_table_cache",
+                        {path: {key: {"block_b": 96}}})
     got = autotune.get_block_config("kron_gather", 4, (4, 4), (6, 5),
                                     backend="cpu", dtype="int8")
     assert got.block_b == 96
     # a dtype-keyed entry overrides the fp32 winner once measured
-    monkeypatch.setattr(autotune, "_table_cache",
-                        {key: {"block_b": 96}, key + "|int8": {"block_b": 160}})
+    monkeypatch.setattr(autotune, "_table_cache", {path: {
+        key: {"block_b": 96}, key + "|int8": {"block_b": 160}}})
     got = autotune.get_block_config("kron_gather", 4, (4, 4), (6, 5),
                                     backend="cpu", dtype="int8")
     assert got.block_b == 160
@@ -410,3 +414,24 @@ def test_stepwise_decode_matches_full_forward_quantized(linear_kind, quant):
     eng.submit(req)
     eng.run_until_drained()
     assert req.output == [int(jnp.argmax(full_logits[0, -1]))]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_quantize_roundtrip_preserves_pytree_structure(mode):
+    """quantize_params/dequantize_params must rebuild every container with
+    its original type (tuples stayed tuples): a roundtrip that turns tuples
+    into lists breaks tree_map pairing against sharding specs or a
+    fresh-init tree."""
+    from repro.models import model as MD
+
+    cfg = _cfg(linear_kind="ket", linear_rank=4)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    # mixed containers: the ket factor lists plus a hand-rolled tuple node
+    params = dict(params, extra=(jnp.ones((2, 3)), {"w": jnp.zeros((4,))}))
+    ref_struct = jax.tree_util.tree_structure(params)
+
+    qparams = Q.quantize_params(params, mode)
+    rparams = Q.dequantize_params(qparams)
+    assert jax.tree_util.tree_structure(rparams) == ref_struct
+    # pairing against the original tree is the real-world failure mode
+    jax.tree_util.tree_map(lambda a, b: None, params, rparams)
