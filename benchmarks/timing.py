@@ -9,7 +9,9 @@ One function per measured claim:
     ``BENCH_kernels.json`` so the perf trajectory is tracked across PRs
     (regenerate with ``PYTHONPATH=src python benchmarks/run.py kernels``;
     add ``REPRO_RETUNE=1`` to re-measure the autotune table first);
-  * per-family smoke train-step and decode-step latency.
+  * per-family smoke train-step and decode-step latency;
+  * checkpoint-save blocking time, sync vs background writer (gated:
+    async must block the step loop strictly less — docs/training.md).
 """
 
 from __future__ import annotations
@@ -426,6 +428,37 @@ def bench_smoke_steps(report):
         report(f"train_step.{arch},{us:.1f},smoke-config")
 
 
+def bench_ckpt_async(report):
+    """Background checkpoint saves (docs/training.md): the step loop pays
+    only the host snapshot, never the file write. Gate: an async ``save()``
+    must block the caller strictly less than a synchronous write of the
+    same tree."""
+    import tempfile
+
+    from repro.train.checkpoint import CheckpointManager
+
+    tree = {f"w{i}": jnp.full((1024, 1024), float(i), jnp.float32)
+            for i in range(8)}  # 32 MB of state
+    blocked = {}
+    for mode, async_saves in (("sync", False), ("async", True)):
+        best = math.inf
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, every=1, keep=2, async_saves=async_saves)
+            for s in range(1, 4):
+                t0 = time.perf_counter()
+                mgr.save(s, tree)
+                best = min(best, time.perf_counter() - t0)
+                mgr.wait()  # the writer drains OUTSIDE the timed window
+        blocked[mode] = best
+        report(f"ckpt_save_blocked.{mode},{best*1e6:.1f},32MB-state")
+    assert blocked["async"] < blocked["sync"], (
+        f"background saves must block the step loop less than synchronous "
+        f"writes (async {blocked['async']*1e3:.1f} ms >= "
+        f"sync {blocked['sync']*1e3:.1f} ms)")
+    report(f"ckpt_save_blocked.speedup,{blocked['async']*1e6:.1f},"
+           f"sync/async={blocked['sync']/blocked['async']:.1f}x")
+
+
 def run(report):
     bench_lookup(report)
     bench_pallas_kernels(report)
@@ -434,3 +467,4 @@ def run(report):
     # BENCH_kernels.json rewrite) is the dedicated `run.py kernels` section
     bench_kernel_fwd_bwd(report, quick=True)
     bench_smoke_steps(report)
+    bench_ckpt_async(report)

@@ -14,16 +14,24 @@ Used by both the training loop (train/loop.py) and the serving engine
   In the serving engine a straggling tick is an SLO signal (and, under fault
   injection, the detection channel for injected slow ticks). Either way the
   watchdog records step-time p50/p95 so regressions show up in metrics.
+* Loss anomalies: :class:`LossAnomalyDetector` turns the applied-step
+  loss/grad-norm history into guard thresholds (rolling-median spike
+  detection) for the training loop's skip-step -> rollback -> fail ladder
+  (train/loop.py) — the training mirror of the serving engine's
+  retry -> degrade -> fail ladder. The detector's state is part of the
+  checkpointed loop state so a resumed run reproduces the exact same
+  accept/reject decisions (the bit-exact-resume invariant).
 
-``train/fault.py`` re-exports both classes for backwards compatibility.
+``train/fault.py`` re-exports the classes for backwards compatibility.
 """
 
 from __future__ import annotations
 
+import math
 import signal
 import time
 
-__all__ = ["PreemptionHandler", "StragglerWatchdog"]
+__all__ = ["PreemptionHandler", "StragglerWatchdog", "LossAnomalyDetector"]
 
 
 class PreemptionHandler:
@@ -80,3 +88,82 @@ class StragglerWatchdog:
             "step_p95_s": h[int(len(h) * 0.95)],
             "stragglers": len(self.straggler_steps),
         }
+
+    # resumable: the histories ride in the checkpoint's loop extra so p50/p95
+    # and straggler counts survive an interrupt+resume
+    def state(self) -> dict:
+        return {"durations": list(self.durations),
+                "straggler_steps": list(self.straggler_steps)}
+
+    def load_state(self, state: dict) -> None:
+        self.durations = [float(x) for x in state.get("durations", [])]
+        self.straggler_steps = [int(x) for x in state.get("straggler_steps", [])]
+
+
+class LossAnomalyDetector:
+    """Guard thresholds for the training loop's anomaly ladder.
+
+    Tracks the loss/grad-norm history of *applied* steps (rejected steps
+    never pollute the baseline) and exposes ``thresholds()``: non-finite
+    values are always anomalous; finite values are anomalous past
+    ``factor`` x the rolling median over the last ``window`` applied steps.
+    During warmup (< ``warmup`` observations) the thresholds are +inf —
+    early-training loss swings are expected.
+
+    The actual comparison happens INSIDE the jitted train step (the state
+    is donated, so accept/reject must be decided before the host ever sees
+    the update); this class only derives the scalar bounds and classifies
+    rejections for the anomaly record. Deterministic given the history,
+    which is exactly what the checkpoint carries (``state()``), so resumed
+    runs reproduce decisions bit-exactly.
+    """
+
+    def __init__(self, factor: float = 10.0, window: int = 64, warmup: int = 8):
+        self.factor = factor
+        self.window = window
+        self.warmup = warmup
+        self.losses: list[float] = []
+        self.gnorms: list[float] = []
+
+    @staticmethod
+    def _median(hist: list[float]) -> float:
+        h = sorted(hist)
+        return h[len(h) // 2]
+
+    def thresholds(self) -> tuple[float, float]:
+        """(max_loss, max_grad_norm) for the next step; +inf during warmup."""
+        if len(self.losses) < self.warmup:
+            return (math.inf, math.inf)
+        return (self.factor * max(self._median(self.losses), 1e-8),
+                self.factor * max(self._median(self.gnorms), 1e-8))
+
+    def observe(self, loss: float, gnorm: float) -> None:
+        """Record an APPLIED step's metrics."""
+        self.losses.append(float(loss))
+        self.gnorms.append(float(gnorm))
+        if len(self.losses) > self.window:
+            del self.losses[:-self.window]
+            del self.gnorms[:-self.window]
+
+    def classify(self, loss: float, gnorm: float,
+                 thresholds: tuple[float, float]) -> str:
+        """Reason string for a step the in-jit guard rejected."""
+        max_loss, max_gnorm = thresholds
+        if not math.isfinite(loss):
+            return "nonfinite_loss"
+        if not math.isfinite(gnorm):
+            return "nonfinite_grad_norm"
+        if math.isnan(max_loss) or math.isnan(max_gnorm):
+            return "injected_anomaly"
+        if loss > max_loss:
+            return f"loss_spike: {loss:.4g} > {max_loss:.4g}"
+        if gnorm > max_gnorm:
+            return f"grad_norm_spike: {gnorm:.4g} > {max_gnorm:.4g}"
+        return "rejected"
+
+    def state(self) -> dict:
+        return {"losses": list(self.losses), "gnorms": list(self.gnorms)}
+
+    def load_state(self, state: dict) -> None:
+        self.losses = [float(x) for x in state.get("losses", [])]
+        self.gnorms = [float(x) for x in state.get("gnorms", [])]

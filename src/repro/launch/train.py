@@ -38,6 +38,21 @@ def main(argv=None):
     p.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 4x2")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--ckpt-keep", type=int, default=3)
+    p.add_argument("--sync-ckpt", action="store_true",
+                   help="write checkpoints on the step loop thread "
+                        "(default: background writer)")
+    p.add_argument("--spike-factor", type=float, default=10.0,
+                   help="reject steps whose loss/grad-norm exceeds this "
+                        "multiple of the rolling median")
+    p.add_argument("--skip-strikes", type=int, default=2,
+                   help="consecutive rejected attempts at one step before "
+                        "rolling back to the last verified checkpoint")
+    p.add_argument("--rollback-strikes", type=int, default=2,
+                   help="rollbacks before the run fails with a recorded reason")
+    p.add_argument("--chaos-seed", type=int, default=None,
+                   help="run under a seeded training fault storm "
+                        "(train/faultinject.py; manual robustness testing)")
     p.add_argument("--microbatches", type=int, default=1)
     p.add_argument("--compress-grads", action="store_true")
     p.add_argument("--embedding", default=None, choices=[None, "regular", "word2ket", "word2ketxs"])
@@ -73,7 +88,19 @@ def main(argv=None):
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=args.batch, seed=args.seed)
     lcfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=args.ckpt_every, seed=args.seed)
+                      ckpt_every=args.ckpt_every, ckpt_keep=args.ckpt_keep,
+                      async_ckpt=not args.sync_ckpt,
+                      spike_factor=args.spike_factor,
+                      skip_strikes=args.skip_strikes,
+                      rollback_strikes=args.rollback_strikes,
+                      seed=args.seed)
+
+    injector = None
+    if args.chaos_seed is not None:
+        from repro.train.faultinject import TrainFaultInjector
+        injector = TrainFaultInjector.seeded(
+            args.chaos_seed, horizon=args.steps, p_nan=0.05, p_poison=0.02,
+            p_step_error=0.05, p_slow=0.05, p_ckpt_kill=0.05, p_corrupt=0.02)
 
     with meshctx.use_mesh(mesh):
         # shardings for jit: derived from shapes only
@@ -88,9 +115,25 @@ def main(argv=None):
         bspec = batch_specs(cfg, mesh, shape, bshape)
         jit_kwargs = dict(
             in_shardings=(to_shardings(mesh, sspec), to_shardings(mesh, bspec)))
-        out = train_loop(cfg, tcfg, dcfg, lcfg, jit_kwargs=jit_kwargs)
+        out = train_loop(cfg, tcfg, dcfg, lcfg, jit_kwargs=jit_kwargs,
+                         injector=injector)
+    resumed = (f" (resumed from {out['resumed_from']})"
+               if out.get("resumed_from") is not None else "")
     print(f"[train] final step {out['final_step']} loss {out['final_loss']:.4f} "
-          f"(first {out['first_loss']:.4f})")
+          f"(first {out['first_loss']:.4f}){resumed}")
+    if out.get("skipped_steps") or out.get("rollbacks") or out.get("ckpt_quarantined"):
+        print(f"[train] fault summary: skipped {out.get('skipped_steps', 0)} "
+              f"rollbacks {out.get('rollbacks', 0)} "
+              f"retries {out.get('retries', 0)} "
+              f"quarantined {len(out.get('ckpt_quarantined', []))}")
+    # exit codes: 0 complete, 1 failed (reason recorded), 2 preempted after a
+    # forced checkpoint (the scheduler restarts the same command to resume)
+    if out.get("failed"):
+        print(f"[train] FAILED: {out['fail_reason']}")
+        return 1
+    if out.get("preempted"):
+        print("[train] preempted; checkpoint written — rerun to resume")
+        return 2
     return 0
 
 

@@ -196,6 +196,8 @@ def state_specs(cfg: ModelConfig, mesh: Mesh, state_shape, *, zero1: bool = True
         "params": pspecs,
         "opt": {"master": zspecs, "m": zspecs, "v": zspecs, "step": P()},
     }
+    if "rng" in state_shape:
+        out["rng"] = P()  # per-step key: tiny, replicated everywhere
     if "residuals" in state_shape:
         out["residuals"] = zspecs
     return out

@@ -1,38 +1,90 @@
-"""Checkpointing: atomic, keep-K, device-layout-agnostic -> elastic restart.
+"""Checkpointing: verified, crash-safe, keep-K, device-layout-agnostic.
 
 Format: one ``.npz`` (host-gathered numpy leaves, flattened key paths) + a
-msgpack manifest (step, keys, config fingerprint). Writes go to a temp dir
-renamed atomically into place; a checkpoint is only valid once its manifest
+msgpack manifest (step, keys, per-array blake2b digests, extra payload)
+wrapped in a checksummed envelope. Writes go to a temp dir renamed
+atomically into place; a checkpoint is only valid once its manifest
 exists, so a preemption mid-write can never leave a half-readable state.
-Arrays are saved *unsharded* — restore works on any mesh shape / device count
-(elasticity is tested 1-device -> 2x1-mesh in tests/test_checkpoint.py).
+Arrays are saved *unsharded* — restore works on any mesh shape / device
+count (elasticity is tested 1-device -> 2x1-mesh in tests/test_checkpoint.py).
+
+Verification (the training half of the PR-6 serving fault model):
+
+* every array is digested (blake2b over dtype/shape/bytes) at save time and
+  the digests live in the manifest; the manifest itself is wrapped in an
+  envelope carrying a blake2b over its packed body. ``restore_checkpoint``
+  re-digests every array it loads — a single flipped bit on disk raises
+  :class:`CheckpointError` instead of restoring garbage.
+* :meth:`CheckpointManager.restore_latest` walks *backward* past
+  corrupted/incomplete checkpoints, quarantining each (renamed to
+  ``quarantine_ckpt_*`` with a ``REASON.txt``) instead of raising, so a
+  resumed run always lands on the newest checkpoint that actually verifies.
+* saves can run on a background thread (``async_saves=True``): the step
+  loop pays only the host-transfer (``_flatten``), never the file I/O.
+  ``wait()`` is the completion barrier (called before GC-sensitive
+  operations, before ``restore_latest``, and on loop exit).
+* ``_gc`` additionally sweeps orphaned ``.tmp_ckpt_*`` dirs left by a
+  process killed mid-write (simulated by :class:`SimulatedKill` via the
+  ``fault_hook``, which bypasses the normal cleanup path exactly like a
+  SIGKILL would).
 
 Exotic-dtype leaves (fp8 quantized payloads, bf16) round-trip losslessly:
 ``np.savez`` can't represent ml_dtypes extension types, so such leaves are
 bit-cast to a same-width uint view on save and the true dtype name is
 recorded in the manifest (``"dtypes"``) for the view-back on restore.
+Digests are computed over the saved (uint-view) bytes, so verification and
+the bit-cast compose.
 """
 
 from __future__ import annotations
 
+import hashlib
 import os
 import re
 import shutil
 import tempfile
-from typing import Any, Optional
+import threading
+import time
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "checkpoint_steps", "verify_checkpoint", "CheckpointManager",
+           "CheckpointError", "SimulatedKill", "MANIFEST_FORMAT"]
 
 _SEP = "/"
+MANIFEST_FORMAT = 2
 
 # numpy-native kinds np.savez serializes with dtype intact; anything else
 # (ml_dtypes: fp8 payloads, bf16) is bit-cast to uintN and tagged
 _NATIVE_KINDS = set("biufc")
+
+# tmp dirs with a live in-process writer: the orphan sweep must not eat the
+# checkpoint another thread is writing right now
+_ACTIVE_TMP: set[str] = set()
+_ACTIVE_TMP_LOCK = threading.Lock()
+
+
+class CheckpointError(Exception):
+    """A checkpoint failed verification (or is structurally unreadable)."""
+
+
+class SimulatedKill(BaseException):
+    """Raised by a fault hook to emulate SIGKILL mid-write: the writer dies
+    on the spot and — unlike a normal exception — leaves its partial on-disk
+    state behind, exactly like a killed process would."""
+
+
+def _digest(arr: np.ndarray) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(arr.dtype).encode())
+    h.update(repr(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
 
 
 def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
@@ -55,53 +107,186 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None) -> str:
-    os.makedirs(directory, exist_ok=True)
-    flat, dtypes = _flatten(tree)
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+def _pack_manifest(manifest: dict) -> bytes:
+    body = msgpack.packb(manifest)
+    return msgpack.packb({"fmt": MANIFEST_FORMAT, "body": body,
+                          "blake2b": hashlib.blake2b(body, digest_size=16).hexdigest()})
+
+
+def load_manifest(path: str, *, verify: bool = True) -> dict:
+    """Read + (checksum-)verify a checkpoint dir's manifest."""
+    mpath = os.path.join(path, "manifest.msgpack")
+    if not os.path.exists(mpath):
+        raise CheckpointError(f"missing manifest: {mpath}")
     try:
+        with open(mpath, "rb") as f:
+            outer = msgpack.unpackb(f.read())
+    except Exception as e:  # truncated / garbage bytes
+        raise CheckpointError(f"manifest unreadable: {e!r}") from e
+    if not (isinstance(outer, dict) and "body" in outer):
+        # legacy (pre-verification) manifest: the dict itself is the payload
+        return outer if isinstance(outer, dict) else _bad(outer)
+    if verify:
+        want = outer.get("blake2b")
+        got = hashlib.blake2b(outer["body"], digest_size=16).hexdigest()
+        if got != want:
+            raise CheckpointError(f"manifest checksum mismatch: {got} != {want}")
+    try:
+        return msgpack.unpackb(outer["body"])
+    except Exception as e:
+        raise CheckpointError(f"manifest body unreadable: {e!r}") from e
+
+
+def _bad(outer) -> dict:
+    raise CheckpointError(f"manifest has unexpected type {type(outer).__name__}")
+
+
+def _load_arrays(path: str) -> dict[str, np.ndarray]:
+    apath = os.path.join(path, "arrays.npz")
+    if not os.path.exists(apath):
+        raise CheckpointError(f"missing arrays.npz: {apath}")
+    try:
+        with np.load(apath) as data:
+            return {k: data[k] for k in data.files}
+    except CheckpointError:
+        raise
+    except Exception as e:  # truncated zip / corrupted member
+        raise CheckpointError(f"arrays.npz unreadable: {e!r}") from e
+
+
+def _write_checkpoint(directory: str, step: int, flat: dict, dtypes: dict,
+                      extra: Optional[dict],
+                      fault_hook: Optional[Callable[[str], None]] = None) -> str:
+    """Write pre-flattened arrays: tempdir -> atomic rename. ``fault_hook``
+    fires before each phase ("arrays", "manifest", "rename"); a hook that
+    raises :class:`SimulatedKill` leaves the partial state on disk."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    with _ACTIVE_TMP_LOCK:
+        _ACTIVE_TMP.add(tmp)
+    try:
+        if fault_hook:
+            fault_hook("arrays")
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
         manifest = {"step": int(step), "keys": sorted(flat), "extra": extra or {},
-                    "dtypes": dtypes}
+                    "dtypes": dtypes,
+                    "digests": {k: _digest(v) for k, v in flat.items()}}
+        if fault_hook:
+            fault_hook("manifest")
         with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-            f.write(msgpack.packb(manifest))
+            f.write(_pack_manifest(manifest))
+        if fault_hook:
+            fault_hook("rename")
         final = os.path.join(directory, f"ckpt_{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
         return final
+    except SimulatedKill:
+        raise  # the "process" is dead: leave the partial tmp dir behind
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    finally:
+        with _ACTIVE_TMP_LOCK:
+            _ACTIVE_TMP.discard(tmp)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None,
+                    *, fault_hook: Optional[Callable[[str], None]] = None) -> str:
+    flat, dtypes = _flatten(tree)
+    return _write_checkpoint(directory, step, flat, dtypes, extra, fault_hook)
+
+
+def checkpoint_steps(directory: str) -> list[int]:
+    """Steps with a structurally complete checkpoint dir (manifest AND
+    arrays.npz present), ascending. Cheap: no checksum pass."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         m = re.fullmatch(r"ckpt_(\d+)", name)
-        if m and os.path.exists(os.path.join(directory, name, "manifest.msgpack")):
+        if (m and os.path.exists(os.path.join(directory, name, "manifest.msgpack"))
+                and os.path.exists(os.path.join(directory, name, "arrays.npz"))):
             steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore_checkpoint(directory: str, step: int, like_tree) -> tuple[Any, dict]:
-    """Restore into the structure (and shardings, if any) of ``like_tree``."""
+def latest_step(directory: str, *, verify: bool = False) -> Optional[int]:
+    """Newest step whose checkpoint dir is complete (manifest + arrays.npz;
+    a manifest-only dir — e.g. arrays lost to disk trouble — never counts).
+    With ``verify=True`` the checkpoint must also pass the full checksum
+    walk (:func:`verify_checkpoint`)."""
+    for s in reversed(checkpoint_steps(directory)):
+        if not verify:
+            return s
+        try:
+            verify_checkpoint(os.path.join(directory, f"ckpt_{s:08d}"))
+            return s
+        except CheckpointError:
+            continue
+    return None
+
+
+def verify_checkpoint(path: str) -> dict:
+    """Full integrity check of one checkpoint dir; returns the manifest.
+
+    Raises :class:`CheckpointError` on: missing/truncated manifest, manifest
+    checksum mismatch, missing/unreadable arrays.npz, key-set drift between
+    manifest and arrays, or any per-array digest mismatch (a single flipped
+    payload bit is caught here)."""
+    manifest = load_manifest(path)
+    arrays = _load_arrays(path)
+    keys = set(manifest.get("keys", []))
+    if keys != set(arrays):
+        raise CheckpointError(
+            f"key set mismatch: manifest has {len(keys)} keys, "
+            f"arrays.npz has {len(arrays)}")
+    digests = manifest.get("digests")
+    if digests is None:
+        raise CheckpointError("manifest carries no digests (unverifiable)")
+    for k, arr in arrays.items():
+        if k not in digests:
+            raise CheckpointError(f"no digest recorded for {k}")
+        if _digest(arr) != digests[k]:
+            raise CheckpointError(f"digest mismatch for {k}")
+    return manifest
+
+
+def restore_checkpoint(directory: str, step: int, like_tree, *,
+                       verify: bool = True, partial: bool = False) -> tuple[Any, dict]:
+    """Restore into the structure (and shardings, if any) of ``like_tree``.
+
+    ``verify=True`` (default) re-digests every restored array against the
+    manifest — corrupted checkpoints raise :class:`CheckpointError`, they
+    are never silently restored. Strict key semantics by default: a key in
+    ``like_tree`` missing from the checkpoint AND a checkpoint key absent
+    from ``like_tree`` both raise; ``partial=True`` instead keeps the
+    ``like_tree`` leaf for missing keys and ignores extras.
+    """
     path = os.path.join(directory, f"ckpt_{step:08d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        arrays = {k: data[k] for k in data.files}
+    manifest = load_manifest(path, verify=verify)
+    arrays = _load_arrays(path)
+    digests = manifest.get("digests", {})
     exotic = manifest.get("dtypes", {})
 
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    like_keys = set()
     out = []
     for p, leaf in leaves_with_path:
         key = _SEP.join(_path_str(x) for x in p)
+        like_keys.add(key)
         if key not in arrays:
-            raise KeyError(f"checkpoint missing {key}")
+            if partial:
+                out.append(leaf)
+                continue
+            raise CheckpointError(f"checkpoint missing key {key}")
         arr = arrays[key]
+        if verify:
+            if key not in digests:
+                raise CheckpointError(f"no digest recorded for {key}")
+            if _digest(arr) != digests[key]:
+                raise CheckpointError(f"digest mismatch for {key}")
         if key in exotic:  # bit-cast back (fp8/bf16 saved as uint views)
             arr = arr.view(jnp.dtype(exotic[key]))
         val = jnp.asarray(arr, dtype=leaf.dtype)
@@ -109,25 +294,98 @@ def restore_checkpoint(directory: str, step: int, like_tree) -> tuple[Any, dict]
                 leaf.sharding, "mesh"):
             val = jax.device_put(val, leaf.sharding)
         out.append(val)
+    if not partial:
+        extra_keys = set(arrays) - like_keys
+        if extra_keys:
+            raise CheckpointError(
+                f"checkpoint has keys absent from the restore target: "
+                f"{sorted(extra_keys)[:4]}{'...' if len(extra_keys) > 4 else ''}")
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 
 class CheckpointManager:
-    """keep-K rotation + save-every-N policy + preemption-triggered saves."""
+    """keep-K rotation + save-every-N policy + verified backward-walking
+    restore + optional background (thread) saves.
 
-    def __init__(self, directory: str, every: int = 100, keep: int = 3):
+    ``fault_hook(phase)`` threads through to the writer (chaos harness:
+    :class:`SimulatedKill` mid-write). A simulated kill is *recorded*
+    (``kills``) rather than raised — the training loop survives a dead
+    writer and the next save's ``_gc`` sweeps the orphaned tmp dir.
+    """
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3, *,
+                 async_saves: bool = False,
+                 fault_hook: Optional[Callable[[str], None]] = None):
         self.directory = directory
         self.every = every
         self.keep = keep
+        self.async_saves = async_saves
+        self.fault_hook = fault_hook
+        self._pending: Optional[threading.Thread] = None
+        # observability (surfaced in the loop summary)
+        self.saves = 0
+        self.blocked_s = 0.0          # step-loop time spent inside save()/wait()
+        self.kills: list[tuple[int, str]] = []
+        self.save_errors: list[tuple[int, str]] = []
+        self.swept_tmp = 0
+        self.quarantined: list[tuple[int, str]] = []
 
     def should_save(self, step: int, *, force: bool = False) -> bool:
         return force or (step > 0 and step % self.every == 0)
 
-    def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
-        path = save_checkpoint(self.directory, step, tree, extra)
+    # ------------------------------------------------------------------
+    # save path
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[dict] = None) -> Optional[str]:
+        """Checkpoint ``tree`` at ``step``. Synchronous mode returns the
+        final path; async mode snapshots to host (the only blocking part),
+        hands the file I/O to a background thread, and returns None."""
+        t0 = time.monotonic()
+        flat, dtypes = _flatten(tree)  # host copy: safe against donation
+        if not self.async_saves:
+            try:
+                path = self._write(step, flat, dtypes, extra)
+            finally:
+                self.blocked_s += time.monotonic() - t0
+            return path
+        self.wait()  # serialize writers: at most one in-flight save
+        t = threading.Thread(target=self._write_bg, args=(step, flat, dtypes, extra),
+                             daemon=True, name=f"ckpt-save-{step}")
+        self._pending = t
+        t.start()
+        self.blocked_s += time.monotonic() - t0
+        return None
+
+    def _write(self, step, flat, dtypes, extra) -> Optional[str]:
+        try:
+            path = _write_checkpoint(self.directory, step, flat, dtypes, extra,
+                                     self.fault_hook)
+        except SimulatedKill as e:
+            self.kills.append((step, str(e) or "killed mid-write"))
+            return None
+        self.saves += 1
         self._gc()
         return path
 
+    def _write_bg(self, step, flat, dtypes, extra) -> None:
+        try:
+            self._write(step, flat, dtypes, extra)
+        except Exception as e:  # noqa: BLE001 — a failed save must not kill training
+            self.save_errors.append((step, repr(e)))
+
+    def wait(self) -> None:
+        """Completion barrier for the background writer (call before any
+        GC-sensitive read of the directory, and on loop exit)."""
+        t = self._pending
+        if t is not None and t.is_alive():
+            t0 = time.monotonic()
+            t.join()
+            self.blocked_s += time.monotonic() - t0
+        self._pending = None
+
+    # ------------------------------------------------------------------
+    # GC: keep-K rotation + orphaned-tmp sweep
+    # ------------------------------------------------------------------
     def _gc(self):
         steps = sorted(
             int(m.group(1))
@@ -136,10 +394,51 @@ class CheckpointManager:
         )
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.directory, f"ckpt_{s:08d}"), ignore_errors=True)
+        # sweep tmp dirs a killed writer left behind (never a live one)
+        with _ACTIVE_TMP_LOCK:
+            active = set(_ACTIVE_TMP)
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if name.startswith(".tmp_ckpt_") and full not in active:
+                shutil.rmtree(full, ignore_errors=True)
+                self.swept_tmp += 1
 
-    def restore_latest(self, like_tree):
-        step = latest_step(self.directory)
-        if step is None:
-            return None, None
-        tree, manifest = restore_checkpoint(self.directory, step, like_tree)
-        return tree, manifest
+    # ------------------------------------------------------------------
+    # restore path
+    # ------------------------------------------------------------------
+    def _quarantine(self, step: int, reason: str) -> None:
+        src = os.path.join(self.directory, f"ckpt_{step:08d}")
+        dst = os.path.join(self.directory, f"quarantine_ckpt_{step:08d}")
+        if os.path.exists(dst):
+            shutil.rmtree(dst, ignore_errors=True)
+        try:
+            os.rename(src, dst)
+            with open(os.path.join(dst, "REASON.txt"), "w") as f:
+                f.write(reason + "\n")
+        except OSError:
+            shutil.rmtree(src, ignore_errors=True)
+        self.quarantined.append((step, reason))
+
+    def restore_latest(self, like_tree, *, partial: bool = False):
+        """Restore the newest checkpoint that VERIFIES, walking backward
+        past corrupted/incomplete ones (each quarantined with its recorded
+        reason) instead of raising. Returns ``(None, None)`` when nothing
+        restorable remains."""
+        self.wait()
+        for step in reversed(checkpoint_steps(self.directory)):
+            try:
+                return restore_checkpoint(self.directory, step, like_tree,
+                                          verify=True, partial=partial)
+            except CheckpointError as e:
+                self._quarantine(step, str(e))
+        return None, None
+
+    def stats(self) -> dict:
+        return {
+            "saves": self.saves,
+            "blocked_s": self.blocked_s,
+            "kills": len(self.kills),
+            "save_errors": len(self.save_errors),
+            "swept_tmp": self.swept_tmp,
+            "quarantined": list(self.quarantined),
+        }

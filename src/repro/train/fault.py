@@ -3,6 +3,6 @@ serving engine can share them (serve/engine.py). Import from there."""
 
 from __future__ import annotations
 
-from repro.fault import PreemptionHandler, StragglerWatchdog
+from repro.fault import LossAnomalyDetector, PreemptionHandler, StragglerWatchdog
 
-__all__ = ["PreemptionHandler", "StragglerWatchdog"]
+__all__ = ["PreemptionHandler", "StragglerWatchdog", "LossAnomalyDetector"]

@@ -1,0 +1,253 @@
+"""Deterministic fault injection for the training loop.
+
+Sibling of :mod:`repro.serve.faultinject`: the training chaos suite
+(tests/test_train_fault.py) needs *reproducible* disasters — anomalous
+losses, poisoned parameters, step exceptions, slow steps, eviction signals,
+writers killed mid-checkpoint, and on-disk checkpoint corruption — all
+landing at known step indices. A :class:`TrainFaultInjector` carries a
+schedule of :class:`FaultEvent`\\ s (hand-written or seeded via
+:meth:`TrainFaultInjector.seeded`) and the loop consults it at four points:
+
+* ``on_step(ctx, step)`` — start of every step: sleep through a slow step,
+  request preemption (simulated or real SIGTERM), corrupt the newest
+  on-disk checkpoint, arm pending events. ``ctx`` is the loop's
+  :class:`~repro.train.loop._LoopCtx` (preemption handler + checkpoint
+  manager + ckpt dir).
+* ``maybe_poison(state)`` — injects NaN into the first float param leaf
+  (armed by ``poison_state``): every subsequent loss is genuinely
+  non-finite, so only a rollback to a verified checkpoint can save the run
+  (the ladder's second rung).
+* ``take_forced_anomaly()`` — armed by ``nan_loss``: the loop passes NaN
+  guard thresholds for ONE attempt, so the in-jit gate rejects that step
+  exactly as if its loss had come out non-finite; the state is untouched
+  and the deterministic retry applies the true update (the ladder's first
+  rung, and the transient-fault half of the bit-exactness invariant).
+* ``before_step()`` — raises :class:`InjectedStepError` while a
+  ``step_error`` event has remaining consecutive failures (retry budget /
+  rollback escalation).
+* ``ckpt_hook(phase)`` — passed to the :class:`CheckpointManager` as its
+  ``fault_hook``; an armed ``ckpt_kill`` raises
+  :class:`~repro.train.checkpoint.SimulatedKill` at the scheduled write
+  phase, leaving exactly the partial on-disk state a SIGKILL would.
+
+Everything is host-side and derived only from the schedule (no wall-clock
+randomness), so a given ``(seed, horizon, rates)`` triple replays the exact
+same fault storm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from collections import defaultdict
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import SimulatedKill, checkpoint_steps
+
+__all__ = ["FaultEvent", "TrainFaultInjector", "InjectedStepError",
+           "EVENT_KINDS", "CORRUPT_MODES", "KILL_PHASES"]
+
+EVENT_KINDS = ("nan_loss", "poison_state", "step_error", "slow_step",
+               "sigterm", "ckpt_kill", "corrupt_disk")
+
+# corrupt_disk arg -> what happens to the newest on-disk checkpoint
+CORRUPT_MODES = ("flip_payload", "truncate_arrays", "truncate_manifest",
+                 "delete_arrays")
+
+# ckpt_kill arg -> write phase the simulated SIGKILL lands in
+KILL_PHASES = ("arrays", "manifest", "rename")
+
+
+class InjectedStepError(RuntimeError):
+    """Raised by ``before_step`` in place of a real step failure."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    kind / arg semantics:
+      * ``nan_loss``     — force the anomaly gate to reject the next step
+                           attempt (transient: retry recovers);
+      * ``poison_state`` — NaN-poison the first float param leaf before the
+                           next step (persistent: only rollback recovers);
+      * ``step_error``   — the next ``max(1, arg)`` step calls raise
+                           :class:`InjectedStepError` (consecutive, so
+                           ``arg`` larger than the retry budget escalates
+                           to the rollback rung);
+      * ``slow_step``    — sleep ``arg`` milliseconds (straggler channel);
+      * ``sigterm``      — ``arg == 0``: programmatic preemption request
+                           (the shared handler's ``request()``);
+                           ``arg != 0``: a REAL ``os.kill(pid, SIGTERM)``
+                           through the installed signal handler;
+      * ``ckpt_kill``    — the next checkpoint write dies with
+                           :class:`SimulatedKill` at phase
+                           ``KILL_PHASES[arg % 3]``;
+      * ``corrupt_disk`` — immediately corrupt the newest on-disk
+                           checkpoint per ``CORRUPT_MODES[arg % 4]``.
+    """
+
+    step: int
+    kind: str
+    arg: int = 0
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class TrainFaultInjector:
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self._by_step: dict[int, list[FaultEvent]] = defaultdict(list)
+        for ev in events:
+            self._by_step[ev.step].append(ev)
+        self.events = tuple(events)
+        # armed state
+        self._step_failures_left = 0
+        self._forced_anomalies = 0
+        self._poison_pending = False
+        self._kill_phase: Optional[str] = None
+        # observability: what actually landed
+        self.injected = {k: 0 for k in EVENT_KINDS}
+        self.corrupted: list[tuple[int, str]] = []  # (ckpt step, mode)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def seeded(cls, seed: int, *, horizon: int = 64, p_nan: float = 0.0,
+               p_poison: float = 0.0, p_step_error: float = 0.0,
+               p_slow: float = 0.0, p_ckpt_kill: float = 0.0,
+               p_corrupt: float = 0.0, slow_ms: int = 2,
+               max_consecutive_failures: int = 1,
+               sigterm_at: Optional[int] = None) -> "TrainFaultInjector":
+        """Build a schedule from a seed: same (seed, horizon, rates) ==
+        same fault storm, independent of wall clock or loop state."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        for t in range(horizon):
+            if rng.random() < p_nan:
+                events.append(FaultEvent(t, "nan_loss"))
+            if rng.random() < p_poison:
+                events.append(FaultEvent(t, "poison_state"))
+            if rng.random() < p_step_error:
+                events.append(FaultEvent(
+                    t, "step_error",
+                    int(rng.integers(1, max_consecutive_failures + 1))))
+            if rng.random() < p_slow:
+                events.append(FaultEvent(t, "slow_step", slow_ms))
+            if rng.random() < p_ckpt_kill:
+                events.append(FaultEvent(
+                    t, "ckpt_kill", int(rng.integers(0, len(KILL_PHASES)))))
+            if rng.random() < p_corrupt:
+                events.append(FaultEvent(
+                    t, "corrupt_disk", int(rng.integers(0, len(CORRUPT_MODES)))))
+        if sigterm_at is not None:
+            events.append(FaultEvent(sigterm_at, "sigterm"))
+        return cls(events)
+
+    # ------------------------------------------------------------------
+    # loop hooks
+    # ------------------------------------------------------------------
+    def on_step(self, ctx, step: int) -> None:
+        # fire-once: unlike serving ticks, a training step index REPEATS on
+        # retry and replays after a rollback — re-arming the same event every
+        # visit would turn any transient fault into a permanent one
+        for ev in self._by_step.pop(step, ()):
+            if ev.kind == "slow_step":
+                time.sleep(ev.arg / 1e3)
+                self.injected["slow_step"] += 1
+            elif ev.kind == "sigterm":
+                if ev.arg:
+                    os.kill(os.getpid(), signal.SIGTERM)
+                else:
+                    ctx.request_preempt()
+                self.injected["sigterm"] += 1
+            elif ev.kind == "nan_loss":
+                self._forced_anomalies += 1
+            elif ev.kind == "poison_state":
+                self._poison_pending = True
+            elif ev.kind == "step_error":
+                self._step_failures_left += max(1, ev.arg)
+            elif ev.kind == "ckpt_kill":
+                self._kill_phase = KILL_PHASES[ev.arg % len(KILL_PHASES)]
+            elif ev.kind == "corrupt_disk":
+                self._corrupt(ctx, CORRUPT_MODES[ev.arg % len(CORRUPT_MODES)])
+
+    def take_forced_anomaly(self) -> bool:
+        """Consume one armed ``nan_loss`` (the loop NaNs the guard for this
+        attempt when True)."""
+        if self._forced_anomalies > 0:
+            self._forced_anomalies -= 1
+            self.injected["nan_loss"] += 1
+            return True
+        return False
+
+    def maybe_poison(self, state):
+        """Consume an armed ``poison_state``: NaN the first float param
+        leaf. Every later step's loss is genuinely non-finite until the
+        loop rolls back past this point."""
+        if not self._poison_pending:
+            return state
+        self._poison_pending = False
+        self.injected["poison_state"] += 1
+        params = state["params"]
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        for i, leaf in enumerate(leaves):
+            if jnp.issubdtype(leaf.dtype, jnp.inexact):
+                leaves[i] = jnp.full_like(leaf, jnp.nan)
+                break
+        return dict(state, params=jax.tree_util.tree_unflatten(treedef, leaves))
+
+    def before_step(self) -> None:
+        if self._step_failures_left > 0:
+            self._step_failures_left -= 1
+            self.injected["step_error"] += 1
+            raise InjectedStepError("injected step failure")
+
+    def ckpt_hook(self, phase: str) -> None:
+        """``fault_hook`` for the CheckpointManager: one armed kill fires at
+        its scheduled phase and dies (the manager records it; the tmp dir
+        stays on disk for the GC sweep to find)."""
+        if self._kill_phase == phase:
+            self._kill_phase = None
+            self.injected["ckpt_kill"] += 1
+            raise SimulatedKill(f"killed during {phase}")
+
+    # ------------------------------------------------------------------
+    def _corrupt(self, ctx, mode: str) -> None:
+        """Damage the newest complete on-disk checkpoint (verify-on-restore
+        must catch every one of these, never restore it silently)."""
+        directory = ctx.ckpt_dir
+        if not directory:
+            return
+        if ctx.mgr is not None:
+            ctx.mgr.wait()  # never race the background writer
+        steps = checkpoint_steps(directory)
+        if not steps:
+            return
+        step = steps[-1]
+        path = os.path.join(directory, f"ckpt_{step:08d}")
+        arrays = os.path.join(path, "arrays.npz")
+        manifest = os.path.join(path, "manifest.msgpack")
+        if mode == "flip_payload":
+            size = os.path.getsize(arrays)
+            with open(arrays, "r+b") as f:
+                f.seek(size // 2)
+                b = f.read(1)
+                f.seek(size // 2)
+                f.write(bytes([b[0] ^ 0x01]))
+        elif mode == "truncate_arrays":
+            with open(arrays, "r+b") as f:
+                f.truncate(max(1, os.path.getsize(arrays) // 2))
+        elif mode == "truncate_manifest":
+            with open(manifest, "r+b") as f:
+                f.truncate(max(1, os.path.getsize(manifest) // 2))
+        elif mode == "delete_arrays":
+            os.remove(arrays)  # manifest-only dir: must not count as latest
+        self.injected["corrupt_disk"] += 1
+        self.corrupted.append((step, mode))

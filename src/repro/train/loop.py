@@ -1,7 +1,30 @@
-"""Training loop: jit'd step + checkpoint/restore + preemption + watchdog.
+"""Training loop: jit'd step + verified checkpoints + anomaly ladder.
 
 Device-count-agnostic: the same loop drives the 1-CPU examples and the
 meshed launcher (repro/launch/train.py passes in_shardings via jit).
+
+Fault model (the training mirror of the PR-6 serving engine; see
+docs/training.md):
+
+* **Bit-exact resume.** Checkpoints carry the FULL loop state — params,
+  optimizer, the per-step rng stream, the applied-step loss/grad-norm
+  history (anomaly baseline), and the watchdog record — and the data
+  pipeline is counter-based, so ``interrupt-at-k + resume`` produces
+  bit-identical params and metrics to an uninterrupted run (asserted in
+  tests/test_train_fault.py).
+* **Loss-anomaly ladder:** skip-step -> rollback -> fail. The train step's
+  in-jit gate rejects an update whose loss/grad-norm is non-finite or
+  spikes past the rolling-median thresholds (the input state is donated,
+  so the verdict must be decided inside the step). A rejected step is
+  *retried at the same index* — transient faults recover bit-exactly
+  because the data is replayable; after ``skip_strikes`` consecutive
+  rejections the loop rolls back to the newest checkpoint that VERIFIES
+  (corrupted ones are quarantined on the walk); after ``rollback_strikes``
+  rollbacks it fails with a recorded reason. Step exceptions ride the same
+  ladder behind a bounded retry.
+* **Background saves:** the step loop pays only the host snapshot; file
+  I/O runs on a writer thread with a completion barrier before any
+  restore and on exit.
 """
 
 from __future__ import annotations
@@ -11,12 +34,13 @@ import time
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig, batch_at
+from repro.fault import LossAnomalyDetector, PreemptionHandler, StragglerWatchdog
 from repro.train.checkpoint import CheckpointManager
-from repro.fault import PreemptionHandler, StragglerWatchdog
 from repro.train.step import TrainConfig, init_state, make_train_step
 
 __all__ = ["LoopConfig", "train_loop"]
@@ -30,6 +54,40 @@ class LoopConfig:
     ckpt_keep: int = 3
     log_every: int = 10
     seed: int = 0
+    # checkpoint I/O: background (thread) saves by default — the step loop
+    # never blocks on the filesystem, only on the host snapshot
+    async_ckpt: bool = True
+    # anomaly ladder knobs
+    spike_factor: float = 10.0   # reject loss/gnorm > factor x rolling median
+    spike_window: int = 64
+    spike_warmup: int = 8        # applied steps before spike gating arms
+    skip_strikes: int = 2        # consecutive rejections at one step -> rollback
+    rollback_strikes: int = 2    # rollbacks before the run fails
+    step_retries: int = 2        # step exceptions retried before escalating
+    retry_backoff_s: float = 0.01
+
+
+@dataclasses.dataclass
+class _LoopCtx:
+    """What the fault injector may touch (mirrors serve passing the engine)."""
+    request_preempt: Callable[[], None]
+    mgr: Optional[CheckpointManager]
+    ckpt_dir: Optional[str]
+
+
+def _loop_extra(loss: float, losses, det, dog) -> dict:
+    return {"loss": loss,
+            "loop": {"losses": list(losses), "det": det.state(),
+                     "dog": dog.state()}}
+
+
+def _load_loop_extra(manifest: dict, losses: list, det, dog) -> None:
+    loop = (manifest.get("extra") or {}).get("loop") or {}
+    losses[:] = [float(x) for x in loop.get("losses", [])]
+    if "det" in loop:
+        det.load_state(loop["det"])
+    if "dog" in loop:
+        dog.load_state(loop["dog"])
 
 
 def train_loop(
@@ -40,51 +98,167 @@ def train_loop(
     *,
     jit_kwargs: Optional[dict] = None,
     log_fn: Callable[[str], None] = print,
+    injector=None,
 ) -> dict:
-    """Runs (or resumes) training; returns final metrics summary."""
-    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,), **(jit_kwargs or {}))
+    """Runs (or resumes) training; returns final metrics summary.
+
+    Never raises on faults: anomalies, step errors, corrupted checkpoints
+    and injected disasters either resolve through the ladder or surface as
+    ``summary["failed"]`` with ``summary["fail_reason"]`` recorded.
+    """
+    jk = dict(jit_kwargs or {})
+    if "in_shardings" in jk:
+        # the guard scalars ride as a third, replicated jit argument
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as PS
+
+        from repro.parallel import meshctx
+        mesh = meshctx.get_mesh()
+        gs = NamedSharding(mesh, PS()) if mesh is not None else None
+        jk["in_shardings"] = (*jk["in_shardings"], (gs, gs))
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,), **jk)
     state = init_state(jax.random.PRNGKey(lcfg.seed), cfg, tcfg)
 
+    det = LossAnomalyDetector(factor=lcfg.spike_factor, window=lcfg.spike_window,
+                              warmup=lcfg.spike_warmup)
+    dog = StragglerWatchdog()
+    losses: list[float] = []
     start = 0
+    resumed_from = None
     mgr = None
     if lcfg.ckpt_dir:
-        mgr = CheckpointManager(lcfg.ckpt_dir, every=lcfg.ckpt_every, keep=lcfg.ckpt_keep)
+        mgr = CheckpointManager(
+            lcfg.ckpt_dir, every=lcfg.ckpt_every, keep=lcfg.ckpt_keep,
+            async_saves=lcfg.async_ckpt,
+            fault_hook=injector.ckpt_hook if injector is not None else None)
         restored, manifest = mgr.restore_latest(state)
+        for qstep, reason in mgr.quarantined:
+            log_fn(f"[loop] quarantined corrupt checkpoint {qstep}: {reason}")
         if restored is not None:
             state = restored
             start = manifest["step"]
-            log_fn(f"[loop] resumed from step {start}")
+            resumed_from = start
+            _load_loop_extra(manifest, losses, det, dog)
+            log_fn(f"[loop] resumed from step {start} (verified)")
 
     pre = PreemptionHandler()
-    dog = StragglerWatchdog()
-    losses = []
-    t_end = None
-    for step in range(start, lcfg.total_steps):
-        t0 = time.monotonic()
+    ctx = _LoopCtx(request_preempt=pre.request, mgr=mgr, ckpt_dir=lcfg.ckpt_dir)
+
+    step = start
+    fail_reason: Optional[str] = None
+    skipped = 0
+    rollbacks = 0
+    retries = 0
+    anomalies: list[tuple[int, str]] = []
+    attempts = 0  # consecutive exceptions at the current step
+    strikes = 0   # consecutive gate rejections at the current step
+
+    def rollback(reason: str) -> None:
+        """Second ladder rung: restore the newest VERIFIED checkpoint and
+        replay from there; escalate to fail when strikes exhaust or nothing
+        restorable remains."""
+        nonlocal state, step, rollbacks, fail_reason
+        anomalies.append((step, reason))
+        rollbacks += 1
+        if rollbacks > lcfg.rollback_strikes:
+            fail_reason = f"{reason} (rollback strikes exhausted)"
+            return
+        if mgr is None:
+            fail_reason = f"{reason} (no checkpoint dir; rollback unavailable)"
+            return
+        restored, manifest = mgr.restore_latest(state)
+        for qstep, qreason in mgr.quarantined[-8:]:
+            log_fn(f"[loop] quarantined corrupt checkpoint {qstep}: {qreason}")
+        if restored is None:
+            fail_reason = f"{reason} (no restorable checkpoint)"
+            return
+        state = restored
+        step = manifest["step"]
+        _load_loop_extra(manifest, losses, det, dog)
+        log_fn(f"[loop] rolled back to verified step {step} after: {reason}")
+
+    while step < lcfg.total_steps and fail_reason is None:
+        t0 = time.monotonic()  # before the injector: a slow host IS step time
+        if injector is not None:
+            injector.on_step(ctx, step)
+            state = injector.maybe_poison(state)
         batch = {k: jax.numpy.asarray(v) for k, v in batch_at(dcfg, step).items()}
-        state, metrics = step_fn(state, batch)
+        thresholds = det.thresholds()
+        if injector is not None and injector.take_forced_anomaly():
+            # NaN bounds: the in-jit gate rejects this one attempt as if the
+            # loss itself had come out non-finite
+            thresholds = (float("nan"), float("nan"))
+        guard = (jnp.float32(thresholds[0]), jnp.float32(thresholds[1]))
+        try:
+            if injector is not None:
+                injector.before_step()
+            state, metrics = step_fn(state, batch, guard)
+        except Exception as e:  # noqa: BLE001 — every step failure rides the ladder
+            attempts += 1
+            retries += 1
+            if attempts <= lcfg.step_retries:
+                time.sleep(lcfg.retry_backoff_s * (2 ** (attempts - 1)))
+                continue
+            attempts = 0
+            strikes = 0
+            rollback(f"step_error: {e!r}")
+            continue
+        attempts = 0
         loss = float(metrics["loss"])
-        losses.append(loss)
+        gnorm = float(metrics["grad_norm"])
+        applied = bool(metrics["applied"])
         dt = time.monotonic() - t0
+
+        if not applied:
+            skipped += 1
+            strikes += 1
+            reason = det.classify(loss, gnorm, thresholds)
+            anomalies.append((step, reason))
+            log_fn(f"[loop] step {step} REJECTED ({reason}) "
+                   f"strike {strikes}/{lcfg.skip_strikes}")
+            if strikes > lcfg.skip_strikes:
+                strikes = 0
+                rollback(f"anomaly persisted {lcfg.skip_strikes + 1} attempts "
+                         f"at step {step}: {reason}")
+            continue
+        strikes = 0
+        det.observe(loss, gnorm)
+        losses.append(loss)
         slow = dog.observe(step, dt)
         if step % lcfg.log_every == 0 or slow:
             tag = " [STRAGGLER]" if slow else ""
             log_fn(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms){tag}")
-        if mgr and (mgr.should_save(step + 1, force=pre.preempted)):
-            mgr.save(step + 1, state, extra={"loss": loss})
+        done = step + 1
+        if mgr and mgr.should_save(done, force=pre.preempted):
+            mgr.save(done, state, extra=_loop_extra(loss, losses, det, dog))
+        step = done
         if pre.preempted:
-            log_fn(f"[loop] preemption requested; checkpointed at step {step + 1}")
+            log_fn(f"[loop] preemption requested; checkpointed at step {step}")
             break
-        t_end = step + 1
     pre.restore()
 
     out = {
-        "final_step": t_end or start,
+        "final_step": step,
         "first_loss": losses[0] if losses else float("nan"),
         "final_loss": float(np.mean(losses[-5:])) if losses else float("nan"),
+        "resumed_from": resumed_from,
+        "preempted": bool(pre.preempted),
+        "failed": fail_reason is not None,
+        "fail_reason": fail_reason,
+        "skipped_steps": skipped,
+        "rollbacks": rollbacks,
+        "retries": retries,
+        "anomalies": anomalies,
+        "losses": list(losses),
         **dog.stats(),
     }
-    if mgr and losses:
-        mgr.save(out["final_step"], state, extra={"loss": out["final_loss"]})
+    if mgr:
+        if losses and fail_reason is None:
+            mgr.save(step, state,
+                     extra=_loop_extra(out["final_loss"], losses, det, dog))
+        mgr.wait()  # completion barrier: no write outlives the loop
+        out.update({f"ckpt_{k}": v for k, v in mgr.stats().items()})
+    if fail_reason is not None:
+        log_fn(f"[loop] FAILED at step {step}: {fail_reason}")
     out["state"] = state
     return out

@@ -123,7 +123,12 @@ class TrainConfig:
 
 def init_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> dict:
     params = MD.init_params(key, cfg)
-    state = {"params": params, "opt": adamw_init(params)}
+    # per-step RNG stream, carried IN the state so it is checkpointed with
+    # everything else: a resumed run continues the exact key sequence an
+    # uninterrupted run would have used (the bit-exact-resume invariant
+    # covers any stochastic regularizer threaded through the step)
+    state = {"params": params, "opt": adamw_init(params),
+             "rng": jax.random.fold_in(key, 0x5EED)}
     if tcfg.compression.enabled:
         state["residuals"] = init_residuals(params)
     return state
@@ -179,9 +184,22 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         loss = loss_sum / n
         return loss, {"loss": loss}, grads
 
-    def train_step(state, batch):
+    def train_step(state, batch, guard=None):
+        """One optimizer step; ``guard=(max_loss, max_grad_norm)`` arms the
+        anomaly gate: a non-finite or over-threshold loss/grad-norm REJECTS
+        the whole update in-jit (params, optimizer moments, residuals and
+        rng all keep their old values via a select). The gate must live
+        inside the step because the input state is donated — by the time the
+        host sees the metrics, the pre-step buffers are gone, so skip-step
+        means "emit the old values", not "don't call". ``metrics["applied"]``
+        reports the verdict; the loop retries/rolls back on rejection.
+        With ``guard=None`` (the default, and every pre-existing caller) the
+        update is unconditional and the trace is identical to the unguarded
+        step."""
         loss, metrics, grads = compute_grads(state["params"], batch)
         new_state = dict(state)
+        if "rng" in state:
+            new_state["rng"] = jax.random.split(state["rng"])[0]
         if tcfg.compression.enabled:
             # error-feedback int8 wire format before the (GSPMD) all-reduce
             grads, new_state["residuals"] = compress_decompress(grads, state["residuals"])
@@ -190,6 +208,14 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         new_state["params"] = params
         new_state["opt"] = opt
         metrics = dict(metrics, **opt_metrics)
+        if guard is not None:
+            max_loss, max_gnorm = guard
+            gnorm = opt_metrics["grad_norm"]
+            ok = (jnp.isfinite(loss) & jnp.isfinite(gnorm)
+                  & (loss <= max_loss) & (gnorm <= max_gnorm))
+            new_state = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(ok, n, o), new_state, state)
+            metrics["applied"] = ok
         return new_state, metrics
 
     return train_step

@@ -1,6 +1,8 @@
-"""Checkpointing: atomicity, keep-K, resume, and elastic (re-mesh) restart."""
+"""Checkpointing: atomicity, keep-K, resume, elastic (re-mesh) restart, and
+the verification layer (digests, quarantine, kill-mid-write, async saves)."""
 
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -10,8 +12,10 @@ import pytest
 from repro.configs import get_smoke
 from repro.data.synthetic import DataConfig
 from repro.optim.adamw import AdamWConfig
-from repro.train.checkpoint import (CheckpointManager, latest_step,
-                                    restore_checkpoint, save_checkpoint)
+from repro.train.checkpoint import (CheckpointError, CheckpointManager,
+                                    SimulatedKill, checkpoint_steps,
+                                    latest_step, restore_checkpoint,
+                                    save_checkpoint, verify_checkpoint)
 from repro.train.loop import LoopConfig, train_loop
 from repro.train.step import TrainConfig, init_state
 
@@ -94,3 +98,192 @@ def test_atomic_no_partial_checkpoints(tmp_path, monkeypatch):
     assert latest_step(str(tmp_path)) is None
     # no stray tmp dirs either
     assert [d for d in os.listdir(tmp_path) if not d.startswith(".")] == []
+
+
+# ----------------------------------------------------------------------
+# verification: a corrupted checkpoint is never silently restored
+# ----------------------------------------------------------------------
+def _flip_byte(path, offset=None):
+    size = os.path.getsize(path)
+    offset = size // 2 if offset is None else offset
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0x01]))
+
+
+def test_flipped_value_fails_digest(tmp_path):
+    """Valid zip, wrong bytes: only the per-array digest can catch this."""
+    save_checkpoint(str(tmp_path), 3, {"w": jnp.arange(4.0), "b": jnp.ones((2,))})
+    path = os.path.join(tmp_path, "ckpt_00000003")
+    apath = os.path.join(path, "arrays.npz")
+    with np.load(apath) as data:
+        arrs = {k: data[k].copy() for k in data.files}
+    arrs["w"][0] += 1.0
+    np.savez(apath, **arrs)  # re-written cleanly: zip CRC passes
+    with pytest.raises(CheckpointError, match="digest mismatch"):
+        verify_checkpoint(path)
+    like = {"w": jnp.zeros(4), "b": jnp.zeros(2)}
+    with pytest.raises(CheckpointError, match="digest mismatch"):
+        restore_checkpoint(str(tmp_path), 3, like)
+    # verify=False is the explicit forensics escape hatch
+    restored, _ = restore_checkpoint(str(tmp_path), 3, like, verify=False)
+    assert float(restored["w"][0]) == 1.0
+
+
+def test_raw_bit_flip_in_arrays_is_caught(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.arange(64.0)})
+    path = os.path.join(tmp_path, "ckpt_00000001")
+    _flip_byte(os.path.join(path, "arrays.npz"))
+    with pytest.raises(CheckpointError):  # zip CRC or digest, either layer
+        verify_checkpoint(path)
+    with pytest.raises(CheckpointError):
+        restore_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(64)})
+
+
+def test_truncated_arrays_is_caught(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.arange(64.0)})
+    path = os.path.join(tmp_path, "ckpt_00000001")
+    apath = os.path.join(path, "arrays.npz")
+    with open(apath, "r+b") as f:
+        f.truncate(os.path.getsize(apath) // 2)
+    with pytest.raises(CheckpointError):
+        verify_checkpoint(path)
+
+
+def test_truncated_manifest_is_caught(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.arange(8.0)})
+    path = os.path.join(tmp_path, "ckpt_00000001")
+    mpath = os.path.join(path, "manifest.msgpack")
+    with open(mpath, "r+b") as f:
+        f.truncate(os.path.getsize(mpath) // 2)
+    with pytest.raises(CheckpointError):
+        verify_checkpoint(path)
+    with pytest.raises(CheckpointError):
+        restore_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(8)})
+
+
+def test_missing_key_strict_vs_partial(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(2)})
+    like = {"a": jnp.zeros(2), "b": jnp.full((3,), 7.0)}
+    with pytest.raises(CheckpointError, match="missing key"):
+        restore_checkpoint(str(tmp_path), 1, like)
+    restored, _ = restore_checkpoint(str(tmp_path), 1, like, partial=True)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(2))
+    np.testing.assert_array_equal(np.asarray(restored["b"]), np.full((3,), 7.0))
+
+
+def test_extra_key_strict_vs_partial(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(2), "old": jnp.zeros(1)})
+    like = {"a": jnp.zeros(2)}
+    with pytest.raises(CheckpointError, match="absent from the restore target"):
+        restore_checkpoint(str(tmp_path), 1, like)
+    restored, _ = restore_checkpoint(str(tmp_path), 1, like, partial=True)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(2))
+
+
+def test_exotic_dtypes_roundtrip_under_verification(tmp_path):
+    """bf16/fp8 leaves save as uint views; digests cover the saved bytes."""
+    tree = {"bf16": jnp.arange(8, dtype=jnp.bfloat16) / 3,
+            "fp8": jnp.asarray(np.linspace(-2.0, 2.0, 16), dtype=jnp.float8_e4m3fn),
+            "f32": jnp.linspace(0.0, 1.0, 5)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    verify_checkpoint(os.path.join(tmp_path, "ckpt_00000001"))
+    like = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), tree)
+    restored, _ = restore_checkpoint(str(tmp_path), 1, like)
+    for k in tree:
+        assert restored[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(restored[k]).view(np.uint8),
+            np.asarray(tree[k]).view(np.uint8))  # bit-exact, not just close
+
+
+def test_latest_step_requires_arrays_not_just_manifest(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(2)})
+    save_checkpoint(str(tmp_path), 2, {"x": jnp.ones(2)})
+    os.remove(os.path.join(tmp_path, "ckpt_00000002", "arrays.npz"))
+    assert checkpoint_steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1  # manifest-only dir never counts
+
+
+def test_restore_latest_walks_back_and_quarantines(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, {"x": jnp.full((3,), float(s))})
+    mpath = os.path.join(tmp_path, "ckpt_00000003", "manifest.msgpack")
+    with open(mpath, "r+b") as f:
+        f.truncate(4)
+    _flip_byte(os.path.join(tmp_path, "ckpt_00000002", "arrays.npz"))
+    restored, manifest = mgr.restore_latest({"x": jnp.zeros(3)})
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.full((3,), 1.0))
+    assert [s for s, _ in mgr.quarantined] == [3, 2]
+    for s in (3, 2):
+        q = os.path.join(tmp_path, f"quarantine_ckpt_{s:08d}")
+        assert os.path.exists(os.path.join(q, "REASON.txt"))
+        with open(os.path.join(q, "REASON.txt")) as f:
+            assert f.read().strip()
+    # nothing restorable at all -> (None, None), no exception
+    _flip_byte(os.path.join(tmp_path, "ckpt_00000001", "arrays.npz"))
+    r, m = mgr.restore_latest({"x": jnp.zeros(3)})
+    assert r is None and m is None
+
+
+def test_kill_mid_write_leaves_orphan_then_swept(tmp_path):
+    """A writer killed mid-write (SIGKILL semantics) leaves a .tmp_ckpt_*
+    orphan and no valid checkpoint; the next save's GC sweeps it."""
+    armed = {"phase": "manifest"}
+
+    def hook(phase):
+        if armed["phase"] == phase:
+            armed["phase"] = None
+            raise SimulatedKill(f"killed during {phase}")
+
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=3, fault_hook=hook)
+    assert mgr.save(1, {"x": jnp.ones(2)}) is None  # writer "died"
+    assert mgr.stats()["kills"] == 1
+    assert [d for d in os.listdir(tmp_path) if d.startswith(".tmp_ckpt_")]
+    assert latest_step(str(tmp_path)) is None  # partial write is invisible
+    mgr.save(2, {"x": jnp.ones(2)})
+    assert mgr.stats()["swept_tmp"] == 1
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp_ckpt_")]
+    assert latest_step(str(tmp_path), verify=True) == 2
+
+
+def test_async_save_does_not_block_and_wait_is_a_barrier(tmp_path):
+    gate = threading.Event()
+    started = threading.Event()
+
+    def hook(phase):
+        if phase == "arrays":
+            started.set()
+            assert gate.wait(timeout=30)
+
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=3, async_saves=True,
+                            fault_hook=hook)
+    assert mgr.save(1, {"x": jnp.ones((4,))}) is None
+    assert started.wait(timeout=30)       # the writer is running...
+    assert latest_step(str(tmp_path)) is None  # ...but save() already returned
+    gate.set()
+    mgr.wait()                            # completion barrier
+    assert latest_step(str(tmp_path), verify=True) == 1
+    assert mgr.stats()["saves"] == 1
+    assert mgr.stats()["save_errors"] == 0
+
+
+def test_resume_metrics_continuity(tmp_path):
+    """A resumed run reports the TRUE first loss and restored history, and
+    resuming at total_steps is a clean no-op run."""
+    cfg = get_smoke("qwen3-1.7b", dtype=jnp.float32)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=5e-3))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    lcfg = LoopConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=3,
+                      log_every=100)
+    out1 = train_loop(cfg, tcfg, dcfg, lcfg, log_fn=lambda m: None)
+    assert out1["resumed_from"] is None
+    out2 = train_loop(cfg, tcfg, dcfg, lcfg, log_fn=lambda m: None)
+    assert out2["resumed_from"] == 6
+    assert out2["final_step"] == 6        # not 0: no t_end-or-start fallback
+    assert out2["losses"] == out1["losses"]
+    assert out2["first_loss"] == out1["first_loss"]

@@ -1,0 +1,295 @@
+"""Training chaos suite: the fault model of train/loop.py under seeded storms.
+
+The invariant (mirror of the serving engine's accounting law): for every
+seeded fault schedule — forced anomalies, poisoned params, step exceptions,
+SIGTERM, writers killed mid-checkpoint, on-disk corruption — training either
+**completes with params and loss history bit-identical to the fault-free
+run**, or **fails with a recorded reason**. Corrupted checkpoints are never
+silently restored (verify-on-restore quarantines them on the backward walk).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data.synthetic import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.checkpoint import checkpoint_steps, latest_step
+from repro.train.faultinject import FaultEvent, TrainFaultInjector
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainConfig
+
+CFG = get_smoke("qwen3-1.7b", dtype=jnp.float32)
+TCFG = TrainConfig(optimizer=AdamWConfig(lr=5e-3))
+DCFG = DataConfig(vocab_size=CFG.vocab_size, seq_len=16, global_batch=4)
+TOTAL = 8
+
+_quiet = lambda msg: None
+
+
+def _lcfg(ckpt_dir=None, total=TOTAL, **kw):
+    defaults = dict(total_steps=total, ckpt_dir=ckpt_dir, ckpt_every=2,
+                    ckpt_keep=10, log_every=100, spike_warmup=4)
+    defaults.update(kw)
+    return LoopConfig(**defaults)
+
+
+def _run(lcfg, injector=None):
+    return train_loop(CFG, TCFG, DCFG, lcfg, log_fn=_quiet, injector=injector)
+
+
+def _assert_params_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        a["params"], b["params"])
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Fault-free reference run: the bit-exactness oracle."""
+    out = _run(_lcfg())
+    assert not out["failed"] and not out["preempted"]
+    return out
+
+
+def test_fault_free_summary_is_clean(baseline):
+    assert baseline["final_step"] == TOTAL
+    assert baseline["skipped_steps"] == 0
+    assert baseline["rollbacks"] == 0
+    assert baseline["resumed_from"] is None
+    assert len(baseline["losses"]) == TOTAL
+    assert baseline["first_loss"] == baseline["losses"][0]
+
+
+# ----------------------------------------------------------------------
+# ladder rung 1: skip-step (transient anomaly; deterministic retry recovers)
+# ----------------------------------------------------------------------
+def test_transient_anomaly_skips_then_recovers_bit_exact(baseline, tmp_path):
+    inj = TrainFaultInjector([FaultEvent(3, "nan_loss")])
+    out = _run(_lcfg(str(tmp_path)), injector=inj)
+    assert not out["failed"]
+    assert out["skipped_steps"] == 1
+    assert out["rollbacks"] == 0
+    assert out["anomalies"] == [(3, "injected_anomaly")]
+    assert inj.injected["nan_loss"] == 1
+    _assert_params_equal(out["state"], baseline["state"])
+    assert out["losses"] == baseline["losses"]
+
+
+# ----------------------------------------------------------------------
+# ladder rung 2: rollback to the last verified checkpoint
+# ----------------------------------------------------------------------
+def test_poisoned_params_roll_back_and_recover_bit_exact(baseline, tmp_path):
+    # NaN-poisoned params make every loss genuinely non-finite: skip can't
+    # save the run (the state itself is garbage), only rollback can
+    inj = TrainFaultInjector([FaultEvent(5, "poison_state")])
+    out = _run(_lcfg(str(tmp_path), skip_strikes=1), injector=inj)
+    assert not out["failed"]
+    assert out["rollbacks"] == 1
+    assert out["skipped_steps"] == 2  # strikes before the rollback
+    assert any("nonfinite_loss" in r for _, r in out["anomalies"])
+    _assert_params_equal(out["state"], baseline["state"])
+    assert out["losses"] == baseline["losses"]
+
+
+def test_poison_without_checkpoint_fails_with_reason(tmp_path):
+    inj = TrainFaultInjector([FaultEvent(2, "poison_state")])
+    out = _run(_lcfg(None, skip_strikes=1), injector=inj)
+    assert out["failed"]
+    assert "rollback unavailable" in out["fail_reason"]
+    assert out["anomalies"]
+
+
+def test_rollback_strikes_exhaust_into_failure(tmp_path):
+    # re-poison after every recovery: the ladder must terminate in a
+    # recorded failure, not spin forever
+    inj = TrainFaultInjector([FaultEvent(s, "poison_state") for s in (3, 4, 5, 6)])
+    out = _run(_lcfg(str(tmp_path), skip_strikes=0, rollback_strikes=2),
+               injector=inj)
+    assert out["failed"]
+    assert "rollback strikes exhausted" in out["fail_reason"]
+    assert out["rollbacks"] == 3
+
+
+# ----------------------------------------------------------------------
+# step exceptions: bounded retry, then the same ladder
+# ----------------------------------------------------------------------
+def test_step_error_transient_retries_bit_exact(baseline, tmp_path):
+    inj = TrainFaultInjector([FaultEvent(2, "step_error", 1)])
+    out = _run(_lcfg(str(tmp_path)), injector=inj)
+    assert not out["failed"]
+    assert out["retries"] == 1
+    assert out["rollbacks"] == 0
+    _assert_params_equal(out["state"], baseline["state"])
+    assert out["losses"] == baseline["losses"]
+
+
+def test_step_error_beyond_retries_rolls_back_bit_exact(baseline, tmp_path):
+    # 5 consecutive failures vs a retry budget of 2: escalates to rollback,
+    # the replay consumes the remaining failures through its own retries
+    inj = TrainFaultInjector([FaultEvent(4, "step_error", 5)])
+    out = _run(_lcfg(str(tmp_path), step_retries=2, retry_backoff_s=0.0),
+               injector=inj)
+    assert not out["failed"]
+    assert out["rollbacks"] == 1
+    assert out["retries"] == 5
+    _assert_params_equal(out["state"], baseline["state"])
+    assert out["losses"] == baseline["losses"]
+
+
+def test_step_error_storm_without_checkpoint_fails_with_reason():
+    inj = TrainFaultInjector([FaultEvent(1, "step_error", 50)])
+    out = _run(_lcfg(None, step_retries=1, retry_backoff_s=0.0), injector=inj)
+    assert out["failed"]
+    assert out["fail_reason"].startswith("step_error")
+
+
+# ----------------------------------------------------------------------
+# preemption: the headline bit-exact-resume invariant
+# ----------------------------------------------------------------------
+def test_sigterm_checkpoints_and_resume_is_bit_exact(baseline, tmp_path):
+    inj = TrainFaultInjector([FaultEvent(4, "sigterm")])
+    out1 = _run(_lcfg(str(tmp_path)), injector=inj)
+    assert out1["preempted"] and not out1["failed"]
+    assert out1["final_step"] == 5  # forced checkpoint at the step boundary
+    out2 = _run(_lcfg(str(tmp_path)))
+    assert out2["resumed_from"] == 5
+    assert out2["final_step"] == TOTAL
+    _assert_params_equal(out2["state"], baseline["state"])
+    assert out2["losses"] == baseline["losses"]
+    assert out2["first_loss"] == baseline["losses"][0]  # history restored
+
+
+def test_real_sigterm_signal_through_shared_handler(baseline, tmp_path):
+    # arg=1 -> a real os.kill(pid, SIGTERM) lands in the PreemptionHandler
+    inj = TrainFaultInjector([FaultEvent(3, "sigterm", 1)])
+    out1 = _run(_lcfg(str(tmp_path)), injector=inj)
+    assert out1["preempted"]
+    out2 = _run(_lcfg(str(tmp_path)))
+    assert out2["resumed_from"] == out1["final_step"]
+    _assert_params_equal(out2["state"], baseline["state"])
+    assert out2["losses"] == baseline["losses"]
+
+
+def test_two_phase_run_is_bit_exact(baseline, tmp_path):
+    out1 = _run(_lcfg(str(tmp_path), total=4))
+    assert out1["final_step"] == 4
+    out2 = _run(_lcfg(str(tmp_path), total=TOTAL))
+    assert out2["resumed_from"] == 4
+    _assert_params_equal(out2["state"], baseline["state"])
+    assert out2["losses"] == baseline["losses"]
+
+
+# ----------------------------------------------------------------------
+# checkpoint-write faults
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("phase_arg", [0, 1, 2], ids=["arrays", "manifest", "rename"])
+def test_kill_mid_checkpoint_write_survives_and_sweeps(baseline, tmp_path, phase_arg):
+    # the first save (after step 1) dies mid-write; training continues,
+    # later saves sweep the orphaned tmp dir, and the run stays bit-exact
+    inj = TrainFaultInjector([FaultEvent(1, "ckpt_kill", phase_arg)])
+    out = _run(_lcfg(str(tmp_path)), injector=inj)
+    assert not out["failed"]
+    assert inj.injected["ckpt_kill"] == 1
+    assert out["ckpt_kills"] == 1
+    assert out["ckpt_swept_tmp"] >= 1
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp_ckpt_")]
+    _assert_params_equal(out["state"], baseline["state"])
+    assert out["losses"] == baseline["losses"]
+    # the surviving checkpoints are restorable
+    assert latest_step(str(tmp_path), verify=True) == TOTAL
+
+
+def test_disk_corruption_resume_walks_back_quarantines_and_replays(baseline, tmp_path):
+    out1 = _run(_lcfg(str(tmp_path)))
+    assert checkpoint_steps(str(tmp_path))[-1] == TOTAL
+    # corrupt the two newest checkpoints differently: flipped payload in one,
+    # truncated manifest in the other
+    newest, second = sorted(checkpoint_steps(str(tmp_path)))[-1:-3:-1]
+    apath = os.path.join(tmp_path, f"ckpt_{newest:08d}", "arrays.npz")
+    size = os.path.getsize(apath)
+    with open(apath, "r+b") as f:
+        f.seek(size // 2)
+        b = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([b[0] ^ 0x01]))
+    mpath = os.path.join(tmp_path, f"ckpt_{second:08d}", "manifest.msgpack")
+    with open(mpath, "r+b") as f:
+        f.truncate(os.path.getsize(mpath) // 2)
+
+    out2 = _run(_lcfg(str(tmp_path)))
+    assert out2["resumed_from"] == second - 2
+    assert [s for s, _ in out2["ckpt_quarantined"]] == [newest, second]
+    qdirs = [d for d in os.listdir(tmp_path) if d.startswith("quarantine_ckpt_")]
+    assert len(qdirs) == 2
+    assert all(os.path.exists(os.path.join(tmp_path, d, "REASON.txt")) for d in qdirs)
+    _assert_params_equal(out2["state"], baseline["state"])
+    assert out2["losses"] == baseline["losses"]
+
+
+def test_injected_disk_corruption_mid_run_recovers(baseline, tmp_path):
+    # corrupt the newest on-disk checkpoint at step 5, then poison params:
+    # the rollback walk must skip the corrupted checkpoint (quarantining it)
+    # and restore the older verified one
+    inj = TrainFaultInjector([FaultEvent(5, "corrupt_disk", 0),
+                              FaultEvent(5, "poison_state")])
+    out = _run(_lcfg(str(tmp_path), skip_strikes=0), injector=inj)
+    assert not out["failed"]
+    assert out["rollbacks"] == 1
+    assert inj.corrupted and inj.corrupted[0][1] == "flip_payload"
+    assert [s for s, _ in out["ckpt_quarantined"]] == [inj.corrupted[0][0]]
+    _assert_params_equal(out["state"], baseline["state"])
+    assert out["losses"] == baseline["losses"]
+
+
+def test_slow_step_lands_in_watchdog(tmp_path):
+    inj = TrainFaultInjector([FaultEvent(6, "slow_step", 300)])
+    out = _run(_lcfg(str(tmp_path)), injector=inj)
+    assert inj.injected["slow_step"] == 1
+    assert out["stragglers"] >= 1
+
+
+# ----------------------------------------------------------------------
+# seeded storms: everything at once
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_storm_ends_bit_exact_or_recorded(baseline, tmp_path, seed):
+    inj = TrainFaultInjector.seeded(
+        seed, horizon=TOTAL, p_nan=0.25, p_poison=0.15, p_step_error=0.2,
+        p_slow=0.1, p_ckpt_kill=0.25, p_corrupt=0.15,
+        max_consecutive_failures=2)
+    out = _run(_lcfg(str(tmp_path), skip_strikes=1, rollback_strikes=3,
+                     retry_backoff_s=0.0), injector=inj)
+    if out["failed"]:
+        assert isinstance(out["fail_reason"], str) and out["fail_reason"]
+    else:
+        assert out["final_step"] == TOTAL
+        _assert_params_equal(out["state"], baseline["state"])
+        assert out["losses"] == baseline["losses"]
+    # corrupted checkpoints are never the restore source: every restore the
+    # walk rejected is in the quarantine record with its reason
+    for _, reason in out.get("ckpt_quarantined", []):
+        assert reason
+
+
+def test_storm_with_sigterm_then_resume(baseline, tmp_path):
+    inj = TrainFaultInjector.seeded(
+        11, horizon=TOTAL, p_nan=0.2, p_step_error=0.2, p_ckpt_kill=0.2,
+        sigterm_at=5)
+    out1 = _run(_lcfg(str(tmp_path), skip_strikes=1, rollback_strikes=3,
+                      retry_backoff_s=0.0), injector=inj)
+    if out1["failed"]:
+        assert out1["fail_reason"]
+        return
+    if out1["preempted"]:
+        out2 = _run(_lcfg(str(tmp_path)))
+        assert out2["resumed_from"] == out1["final_step"]
+    else:
+        out2 = out1
+    assert out2["final_step"] == TOTAL
+    _assert_params_equal(out2["state"], baseline["state"])
+    assert out2["losses"] == baseline["losses"]
